@@ -1,0 +1,222 @@
+"""Shared setup for the paper-figure benchmarks.
+
+Small-but-real instances of the paper's two workloads (PMF / LR) plus
+simulator glue. Losses are genuine training traces; platform wall-clock and
+cost come from the calibrated timing model (core/billing.py, paper Table 2).
+Sizes are chosen so the full suite runs in minutes on 1 CPU while preserving
+every qualitative effect the paper measures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core import consistency as cons
+from repro.core.autotuner import AutoTunerConfig, ScaleInAutoTuner
+from repro.core.isp import ISPConfig
+from repro.core.simulator import (
+    Platform,
+    ServerlessSimulator,
+    SimulatorConfig,
+    SimResult,
+)
+from repro.data import synthetic
+from repro.models import lr, pmf
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "bench")
+
+
+def write_result(name: str, payload: dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+# ---- PMF workload (MovieLens-like) ---------------------------------------------
+
+PMF_ML = synthetic.MovieLensLikeConfig(
+    n_users=2000, n_movies=4000, n_ratings=200_000, rank=20, seed=0
+)
+_pmf_data = None
+
+
+def pmf_workload():
+    global _pmf_data
+    if _pmf_data is None:
+        users, movies, ratings = synthetic.make_movielens(PMF_ML)
+        cfg = pmf.PMFConfig(n_users=PMF_ML.n_users, n_movies=PMF_ML.n_movies,
+                            rank=PMF_ML.rank)
+        params0 = pmf.init(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        eidx = rng.choice(len(ratings), 8192, replace=False)
+        eval_batch = synthetic.ratings_batch(users, movies, ratings, eidx)
+        _pmf_data = (users, movies, ratings, cfg, params0, eval_batch)
+    return _pmf_data
+
+
+def pmf_batch_fn(b_per_worker: int):
+    users, movies, ratings, *_ = pmf_workload()
+
+    def batch_fn(step: int, n_workers: int):
+        r = np.random.default_rng(step)
+        idx = r.integers(0, len(ratings), size=(n_workers, b_per_worker))
+        return pmf.RatingsBatch(
+            user=jnp.asarray(users[idx]),
+            movie=jnp.asarray(movies[idx]),
+            rating=jnp.asarray(ratings[idx]),
+        )
+
+    return batch_fn
+
+
+def pmf_eval_fn():
+    *_, eval_batch = pmf_workload()
+    return lambda p: float(pmf.rmse(p, eval_batch))
+
+
+def pmf_sim(
+    P: int,
+    platform: Platform = Platform.MLLESS,
+    model: cons.Model = cons.Model.BSP,
+    v: float = 0.7,
+    slack: int = 3,
+    n_redis: int = 1,
+    lr_: float = 0.08,
+    seed: int = 0,
+) -> ServerlessSimulator:
+    *_, cfg, params0, _ = pmf_workload()[3], pmf_workload()[3:5][0], None
+    users, movies, ratings, cfg, params0, eval_batch = pmf_workload()
+    return ServerlessSimulator(
+        SimulatorConfig(
+            n_workers=P,
+            platform=platform,
+            consistency=cons.ConsistencyConfig(
+                model=model, isp=ISPConfig(v=v), slack=slack
+            ),
+            sparse_model=True,
+            n_redis=n_redis,
+            seed=seed,
+        ),
+        grad_fn=partial(pmf.grad_fn, cfg),
+        optimizer=optim.make("nesterov", lr_),
+        params=params0,
+        flops_per_sample=6 * PMF_ML.rank * 3,
+        update_nnz_fn=lambda bsz: 2 * PMF_ML.rank * min(bsz, PMF_ML.n_users),
+    )
+
+
+# ---- LR workloads (Criteo-like dense + sparse) -----------------------------------
+
+LR_CFG = synthetic.CriteoLikeConfig(n_samples=120_000, hash_dim=20_000,
+                                    seed=0)
+_lr_dense = None
+_lr_sparse = None
+
+
+def lr_dense_workload():
+    global _lr_dense
+    if _lr_dense is None:
+        x, y = synthetic.make_criteo_dense(LR_CFG)
+        cfg = lr.LRConfig(n_features=LR_CFG.n_numerical, sparse=False)
+        params0 = lr.init(cfg, jax.random.PRNGKey(0))
+        _lr_dense = (x, y, cfg, params0)
+    return _lr_dense
+
+
+def lr_sparse_workload():
+    global _lr_sparse
+    if _lr_sparse is None:
+        idx, val, y = synthetic.make_criteo_sparse(LR_CFG)
+        cfg = lr.LRConfig(n_features=LR_CFG.hash_dim, sparse=True)
+        params0 = lr.init(cfg, jax.random.PRNGKey(0))
+        _lr_sparse = (idx, val, y, cfg, params0)
+    return _lr_sparse
+
+
+def lr_batch_fn(sparse: bool, b_per_worker: int):
+    if sparse:
+        idx, val, y, *_ = lr_sparse_workload()
+
+        def batch_fn(step: int, n_workers: int):
+            r = np.random.default_rng(1000 + step)
+            sel = r.integers(0, len(y), size=(n_workers, b_per_worker))
+            return lr.SparseBatch(
+                idx=jnp.asarray(idx[sel]), val=jnp.asarray(val[sel]),
+                y=jnp.asarray(y[sel]),
+            )
+    else:
+        x, y, *_ = lr_dense_workload()
+
+        def batch_fn(step: int, n_workers: int):
+            r = np.random.default_rng(1000 + step)
+            sel = r.integers(0, len(y), size=(n_workers, b_per_worker))
+            return lr.DenseBatch(x=jnp.asarray(x[sel]), y=jnp.asarray(y[sel]))
+
+    return batch_fn
+
+
+def lr_sim(
+    sparse: bool,
+    P: int,
+    platform: Platform = Platform.MLLESS,
+    model: cons.Model = cons.Model.BSP,
+    v: float = 0.7,
+    n_redis: int = 1,
+    lr_rate: float = 0.3,
+    seed: int = 0,
+) -> ServerlessSimulator:
+    if sparse:
+        idx, val, y, cfg, params0 = lr_sparse_workload()
+        nnz_fn = lambda bsz: bsz * LR_CFG.n_numerical + bsz * LR_CFG.n_categorical
+    else:
+        x, y, cfg, params0 = lr_dense_workload()
+        nnz_fn = None
+    return ServerlessSimulator(
+        SimulatorConfig(
+            n_workers=P,
+            platform=platform,
+            consistency=cons.ConsistencyConfig(
+                model=model, isp=ISPConfig(v=v)
+            ),
+            sparse_model=sparse,
+            n_redis=n_redis,
+            seed=seed,
+        ),
+        grad_fn=partial(lr.grad_fn, cfg),
+        optimizer=optim.make("adam", lr_rate),
+        params=params0,
+        flops_per_sample=6.0 * (cfg.n_features if not sparse else 39),
+        update_nnz_fn=nnz_fn,
+    )
+
+
+def tuner(P: int, interval: float = 2.0) -> ScaleInAutoTuner:
+    return ScaleInAutoTuner(
+        AutoTunerConfig(sched_interval_s=interval, delta_s=interval / 2,
+                        min_points_for_fit=6),
+        P,
+    )
+
+
+def summarize(name: str, res: SimResult) -> dict:
+    t = res.converged_at_s or res.total_wall_s
+    return {
+        "name": name,
+        "time_to_loss_s": t,
+        "converged": res.converged_at_s is not None,
+        "cost_usd": res.total_cost,
+        "final_loss": res.final_loss,
+        "perf_per_dollar": res.perf_per_dollar(),
+        "final_workers": res.summary["final_workers"],
+        "steps": len(res.records),
+    }

@@ -1,0 +1,52 @@
+"""Fig. 10: scalability — worker count x Redis shard count (PMF).
+
+(a) normalized execution time for P in {24..96}-scaled-down worker pools
+with 1 vs 2 Redis instances: sharding the exchange channel restores
+scaling once a single instance saturates.
+(b) steps-to-threshold vs P (statistical efficiency under fixed global
+batch).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    pmf_batch_fn,
+    pmf_eval_fn,
+    pmf_sim,
+    summarize,
+    write_result,
+)
+from repro.core import consistency as cons
+
+B_GLOBAL = 16_384
+TARGET = 1.1
+MAX_STEPS = 120
+
+
+def run() -> dict:
+    rows = []
+    for P in (4, 8, 16, 24):
+        b = max(B_GLOBAL // P, 64)
+        for n_redis in (1, 2):
+            sim = pmf_sim(P, model=cons.Model.ISP, n_redis=n_redis)
+            res = sim.run(pmf_batch_fn(b), b, max_steps=MAX_STEPS,
+                          loss_threshold=TARGET, eval_fn=pmf_eval_fn())
+            r = summarize(f"P{P}_redis{n_redis}", res)
+            r["P"] = P
+            r["n_redis"] = n_redis
+            rows.append(r)
+    base = next(r for r in rows if r["P"] == 4 and r["n_redis"] == 1)
+    for r in rows:
+        r["normalized_time"] = (
+            r["time_to_loss_s"] / base["time_to_loss_s"]
+        )
+    write_result("fig10_scalability", {"rows": rows})
+    return {"rows": rows}
+
+
+def report(out: dict) -> list[str]:
+    return [
+        f"fig10,{r['name']},{r['time_to_loss_s']*1e6:.0f},"
+        f"norm={r['normalized_time']:.3f},steps={r['steps']}"
+        for r in out["rows"]
+    ]

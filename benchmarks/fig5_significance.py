@@ -1,0 +1,67 @@
+"""Fig. 5: normalized execution time until convergence vs significance
+threshold v, for PMF (MovieLens-like) and LR (Criteo-like dense + sparse).
+
+Expectation (paper §6.2.1): time-to-loss drops as v grows (fewer bytes per
+step), with diminishing/reversing returns once filtering hurts convergence;
+the dense-LR job benefits more than sparse-LR (whose updates are already
+sparse — the 'intrinsic filter').
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    lr_batch_fn,
+    lr_sim,
+    pmf_batch_fn,
+    pmf_eval_fn,
+    pmf_sim,
+    summarize,
+    write_result,
+)
+from repro.core import consistency as cons
+
+P = 8
+B = 2048
+THRESHOLDS = (0.0, 0.1, 0.3, 0.7, 1.5)
+
+
+def _pmf_time(v: float) -> dict:
+    model = cons.Model.BSP if v == 0.0 else cons.Model.ISP
+    sim = pmf_sim(P, model=model, v=v)
+    res = sim.run(pmf_batch_fn(B), B, max_steps=150, loss_threshold=1.05,
+                  eval_fn=pmf_eval_fn())
+    return summarize(f"pmf_v{v}", res)
+
+
+def _lr_time(sparse: bool, v: float) -> dict:
+    model = cons.Model.BSP if v == 0.0 else cons.Model.ISP
+    sim = lr_sim(sparse, P, model=model, v=v)
+    res = sim.run(lr_batch_fn(sparse, B), B, max_steps=150,
+                  loss_threshold=0.55)
+    tag = "sparse" if sparse else "dense"
+    return summarize(f"lr_{tag}_v{v}", res)
+
+
+def run() -> dict:
+    rows = []
+    for v in THRESHOLDS:
+        rows.append(_pmf_time(v))
+    for sparse in (False, True):
+        for v in THRESHOLDS:
+            rows.append(_lr_time(sparse, v))
+    base = {r["name"]: r["time_to_loss_s"] for r in rows}
+    for r in rows:
+        job = r["name"].rsplit("_v", 1)[0]
+        r["normalized_time"] = r["time_to_loss_s"] / base[f"{job}_v0.0"]
+    write_result("fig5_significance", {"rows": rows})
+    return {"rows": rows}
+
+
+def report(out: dict) -> list[str]:
+    lines = []
+    for r in out["rows"]:
+        lines.append(
+            f"fig5,{r['name']},{r['time_to_loss_s']*1e6:.0f},"
+            f"norm={r['normalized_time']:.3f}"
+        )
+    return lines

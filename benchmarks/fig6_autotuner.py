@@ -1,0 +1,68 @@
+"""Fig. 6: scale-in auto-tuner effect on Perf/$ and execution time.
+
+Runs each job with and without the auto-tuner (ISP on) and reports the
+Perf/$ ratio — the paper measures 1.1x-1.6x improvements depending on the
+workload.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    lr_batch_fn,
+    lr_sim,
+    pmf_batch_fn,
+    pmf_eval_fn,
+    pmf_sim,
+    summarize,
+    tuner,
+    write_result,
+)
+from repro.core import consistency as cons
+
+P = 8
+B = 2048
+
+
+def _run(kind: str, with_tuner: bool) -> dict:
+    if kind == "pmf":
+        sim = pmf_sim(P, model=cons.Model.ISP)
+        res = sim.run(
+            pmf_batch_fn(B), B, max_steps=150, loss_threshold=1.05,
+            eval_fn=pmf_eval_fn(),
+            tuner=tuner(P) if with_tuner else None,
+        )
+    else:
+        sparse = kind == "lr_sparse"
+        sim = lr_sim(sparse, P, model=cons.Model.ISP)
+        res = sim.run(
+            lr_batch_fn(sparse, B), B, max_steps=150, loss_threshold=0.55,
+            tuner=tuner(P) if with_tuner else None,
+        )
+    tag = "tuned" if with_tuner else "fixed"
+    return summarize(f"{kind}_{tag}", res)
+
+
+def run() -> dict:
+    rows = []
+    ratios = {}
+    for kind in ("pmf", "lr_dense", "lr_sparse"):
+        fixed = _run(kind, False)
+        tuned = _run(kind, True)
+        ratio = tuned["perf_per_dollar"] / max(fixed["perf_per_dollar"],
+                                               1e-12)
+        ratios[kind] = ratio
+        rows += [fixed, tuned]
+    write_result("fig6_autotuner", {"rows": rows, "perf_ratios": ratios})
+    return {"rows": rows, "perf_ratios": ratios}
+
+
+def report(out: dict) -> list[str]:
+    lines = []
+    for r in out["rows"]:
+        lines.append(
+            f"fig6,{r['name']},{r['time_to_loss_s']*1e6:.0f},"
+            f"perf/$={r['perf_per_dollar']:.3f},workers={r['final_workers']}"
+        )
+    for k, v in out["perf_ratios"].items():
+        lines.append(f"fig6,{k}_perf_ratio,{v*1e6:.0f},tuned/fixed={v:.2f}x")
+    return lines

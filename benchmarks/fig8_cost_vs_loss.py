@@ -1,0 +1,88 @@
+"""Fig. 8: best loss achievable under a fixed budget, per system.
+
+For each budget we run each system until its cumulative cost exceeds the
+budget and record the best loss reached (and the max affordable execution
+time — the numbers above the bars in the paper's figure).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    pmf_batch_fn,
+    pmf_eval_fn,
+    pmf_sim,
+    tuner,
+    write_result,
+)
+from repro.core import billing as billing_lib
+from repro.core import consistency as cons
+from repro.core.simulator import Platform
+
+P = 8
+B = 2048
+BUDGETS = (0.0005, 0.001, 0.002, 0.004)
+MAX_STEPS = 150
+
+
+def _cost_at(records, platform, n_workers_series, wall_series) -> np.ndarray:
+    """Cumulative cost after each step under the platform's billing."""
+    worker_s = np.cumsum(
+        [r.wall_s * r.active_workers for r in records]
+    )
+    wall = np.cumsum([r.wall_s for r in records])
+    if platform is Platform.SERVERFUL:
+        return np.asarray([billing_lib.iaas_cost(P, w) for w in wall])
+    return np.asarray([
+        billing_lib.faas_cost([ws], w, 1).total
+        for ws, w in zip(worker_s, wall)
+    ])
+
+
+def run() -> dict:
+    systems = {
+        "pytorch_like": dict(platform=Platform.SERVERFUL,
+                             model=cons.Model.BSP, tuned=False),
+        "pywren_like": dict(platform=Platform.PYWREN, model=cons.Model.BSP,
+                            tuned=False),
+        "mlless_bsp": dict(platform=Platform.MLLESS, model=cons.Model.BSP,
+                           tuned=False),
+        "mlless_all": dict(platform=Platform.MLLESS, model=cons.Model.ISP,
+                           tuned=True),
+    }
+    rows = []
+    for name, s in systems.items():
+        sim = pmf_sim(P, platform=s["platform"], model=s["model"])
+        res = sim.run(
+            pmf_batch_fn(B), B, max_steps=MAX_STEPS,
+            eval_fn=pmf_eval_fn(), tuner=tuner(P) if s["tuned"] else None,
+        )
+        cost = _cost_at(res.records, s["platform"], None, None)
+        losses = np.asarray([r.loss for r in res.records])
+        wall = np.cumsum([r.wall_s for r in res.records])
+        for budget in BUDGETS:
+            within = cost <= budget
+            if not np.any(within):
+                rows.append({"name": name, "budget": budget,
+                             "best_loss": None, "max_time_s": 0.0})
+                continue
+            rows.append({
+                "name": name,
+                "budget": budget,
+                "best_loss": float(losses[within].min()),
+                "max_time_s": float(wall[within].max()),
+            })
+    write_result("fig8_cost_vs_loss", {"rows": rows})
+    return {"rows": rows}
+
+
+def report(out: dict) -> list[str]:
+    lines = []
+    for r in out["rows"]:
+        loss = "n/a" if r["best_loss"] is None else f"{r['best_loss']:.4f}"
+        lines.append(
+            f"fig8,{r['name']}@{r['budget']}$,{r['max_time_s']*1e6:.0f},"
+            f"best_loss={loss}"
+        )
+    return lines

@@ -1,0 +1,49 @@
+"""Fig. 9: SSP vs ISP vs BSP at increasing worker counts, fixed global
+batch (PMF). The paper's finding: ISP beats SSP at every P — staleness
+without byte savings cannot beat filtered exchange when communication
+dominates.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    pmf_batch_fn,
+    pmf_eval_fn,
+    pmf_sim,
+    summarize,
+    write_result,
+)
+from repro.core import consistency as cons
+
+B_GLOBAL = 16_384
+TARGET = 1.05
+MAX_STEPS = 150
+
+
+def run() -> dict:
+    rows = []
+    for P in (4, 8, 16):
+        b = B_GLOBAL // P
+        for model in (cons.Model.BSP, cons.Model.SSP, cons.Model.ISP):
+            sim = pmf_sim(P, model=model, slack=3)
+            res = sim.run(pmf_batch_fn(b), b, max_steps=MAX_STEPS,
+                          loss_threshold=TARGET, eval_fn=pmf_eval_fn())
+            r = summarize(f"P{P}_{model.value}", res)
+            r["P"] = P
+            r["model"] = model.value
+            rows.append(r)
+    # speedups vs BSP at the same P
+    base = {r["P"]: r["time_to_loss_s"] for r in rows
+            if r["model"] == "bsp"}
+    for r in rows:
+        r["speedup_vs_bsp"] = base[r["P"]] / max(r["time_to_loss_s"], 1e-9)
+    write_result("fig9_ssp_vs_isp", {"rows": rows})
+    return {"rows": rows}
+
+
+def report(out: dict) -> list[str]:
+    return [
+        f"fig9,{r['name']},{r['time_to_loss_s']*1e6:.0f},"
+        f"speedup_vs_bsp={r['speedup_vs_bsp']:.2f}x"
+        for r in out["rows"]
+    ]

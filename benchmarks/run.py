@@ -1,0 +1,50 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines per the house convention
+(us_per_call = the benchmark's primary time metric in microseconds of
+modelled platform time; derived = the figure's headline ratio/metric).
+
+    PYTHONPATH=src python -m benchmarks.run            # all figures
+    PYTHONPATH=src python -m benchmarks.run fig5 fig9  # a subset
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        fig5_significance,
+        fig6_autotuner,
+        fig7_loss_vs_time,
+        fig8_cost_vs_loss,
+        fig9_ssp_vs_isp,
+        fig10_scalability,
+        table3_weak_scaling,
+    )
+
+    suites = {
+        "fig5": fig5_significance,
+        "fig6": fig6_autotuner,
+        "fig7": fig7_loss_vs_time,
+        "fig8": fig8_cost_vs_loss,
+        "fig9": fig9_ssp_vs_isp,
+        "fig10": fig10_scalability,
+        "table3": table3_weak_scaling,
+    }
+    want = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    for key in want:
+        mod = suites[key]
+        t0 = time.time()
+        out = mod.run()
+        for line in mod.report(out):
+            print(line, flush=True)
+        print(f"{key}_harness,{(time.time()-t0)*1e6:.0f},host_seconds="
+              f"{time.time()-t0:.1f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Table 3: execution time at constant GLOBAL batch as workers vary
+(LR sparse, Criteo-like). The paper shows ~equal time-to-loss for
+(12, B=6250), (24, B=3125), (48, B=1562) — statistical efficiency is
+preserved when B_g is held constant.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import lr_batch_fn, lr_sim, summarize, write_result
+from repro.core import consistency as cons
+
+B_GLOBAL = 16_384
+TARGET = 0.55
+MAX_STEPS = 200
+
+
+def run() -> dict:
+    rows = []
+    for P in (4, 8, 16):
+        b = B_GLOBAL // P
+        sim = lr_sim(True, P, model=cons.Model.BSP)
+        res = sim.run(lr_batch_fn(True, b), b, max_steps=MAX_STEPS,
+                      loss_threshold=TARGET)
+        r = summarize(f"P{P}_B{b}", res)
+        r["P"] = P
+        r["B"] = b
+        rows.append(r)
+    times = [r["time_to_loss_s"] for r in rows]
+    spread = (max(times) - min(times)) / max(min(times), 1e-9)
+    write_result("table3_weak_scaling", {"rows": rows, "spread": spread})
+    return {"rows": rows, "spread": spread}
+
+
+def report(out: dict) -> list[str]:
+    lines = [
+        f"table3,{r['name']},{r['time_to_loss_s']*1e6:.0f},"
+        f"steps={r['steps']}"
+        for r in out["rows"]
+    ]
+    lines.append(f"table3,time_spread,{out['spread']*1e6:.0f},"
+                 f"rel_spread={out['spread']:.2f}")
+    return lines

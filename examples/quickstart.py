@@ -1,0 +1,75 @@
+"""Quickstart: train a small LM with BSP vs ISP, watch the filter save bytes.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Trains the same 4-layer transformer twice — once bulk-synchronous (every
+update exchanged), once under the paper's ISP significance filter — and
+prints loss + the fraction of parameters whose updates actually had to be
+communicated per step (the paper's Fig. 5 effect in miniature).
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core.isp import ISPConfig, communicated_fraction, significance_split
+from repro.data.tokens import TokenPipeline
+from repro.launch.train import LM_8M
+from repro.models.transformer import LM
+from repro.optim import apply_updates, clip_by_global_norm
+
+STEPS = 30
+BATCH, SEQ = 8, 128
+
+
+def run(mode: str) -> None:
+    cfg = LM_8M
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    optimizer = optim.make("adam", 3e-4)
+    opt_state = optimizer.init(params)
+    residual = jax.tree.map(jnp.zeros_like, params)
+    isp = ISPConfig(v=0.7) if mode == "isp" else None
+    pipe = TokenPipeline(cfg.vocab_size, SEQ, BATCH, seed=0)
+
+    @jax.jit
+    def step(params, opt_state, residual, batch):
+        (loss, _), grads = jax.value_and_grad(lm.train_loss, has_aux=True)(
+            params, batch
+        )
+        grads = clip_by_global_norm(grads, 1.0)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        if isp is None:
+            return apply_updates(params, updates), opt_state, residual, loss, 1.0
+        v_t = isp.threshold(opt_state.step)
+        out = jax.tree.map(
+            lambda u, x, r: significance_split(r + u, x, v_t),
+            updates, params, residual,
+        )
+        td = jax.tree.structure(params)
+        ls = td.flatten_up_to(out)
+        sig = td.unflatten([l[0] for l in ls])
+        res = td.unflatten([l[1] for l in ls])
+        frac = communicated_fraction(td.unflatten([l[2] for l in ls]))
+        return apply_updates(params, sig), opt_state, res, loss, frac
+
+    print(f"--- {mode.upper()} ---")
+    for i in range(1, STEPS + 1):
+        batch = pipe.next_batch(i)
+        params, opt_state, residual, loss, frac = step(
+            params, opt_state, residual, batch
+        )
+        if i % 5 == 0:
+            print(f"step {i:3d}  loss {float(loss):.4f}  "
+                  f"sent fraction {float(frac):.3f}")
+
+
+if __name__ == "__main__":
+    run("bsp")
+    run("isp")
+    print("\nISP trains to comparable loss while communicating a small "
+          "fraction of the updates — the paper's core claim.")

@@ -1,0 +1,19 @@
+"""Checkpointing: deterministic step-indexed save/restore with manifests.
+
+Fault-tolerance contract (DESIGN.md §5): training can be killed at any step
+boundary and resumed bit-exactly from the latest complete checkpoint; elastic
+re-meshing (the scale-in auto-tuner's mechanism) is "restore under a
+different mesh" — arrays are saved mesh-agnostic (fully addressable numpy)
+and re-placed with the new mesh's NamedSharding at load.
+
+Layout:  <dir>/step_<n>/manifest.json + arrays.npz
+Writes are atomic: tmp dir + rename, so a crash mid-write never corrupts the
+latest checkpoint.
+"""
+
+from repro.checkpoint.store import (  # noqa: F401
+    latest_step,
+    restore,
+    save,
+    restore_with_sharding,
+)

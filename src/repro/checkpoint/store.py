@@ -1,0 +1,115 @@
+"""Atomic pytree checkpoint store (npz + json manifest)."""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_part(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_part(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+def save(directory: str, step: int, tree: PyTree, extra: Optional[dict] = None) -> str:
+    """Atomically write ``tree`` as checkpoint ``step``. Returns the path."""
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    # npz cannot hold bfloat16: store the raw bits as uint16; the true
+    # dtype is in the manifest and restored on load
+    stored = {
+        k: (v.view(np.uint16) if v.dtype.name == "bfloat16" else v)
+        for k, v in flat.items()
+    }
+    np.savez(os.path.join(tmp, "arrays.npz"), **stored)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shapes validated)."""
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+    dtypes = manifest.get("dtypes", {})
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for p, leaf in flat_like:
+        key = _SEP.join(_path_part(x) for x in p)
+        if key not in arrays:
+            raise KeyError(f"checkpoint {path} missing {key}")
+        arr = arrays[key]
+        if dtypes.get(key) == "bfloat16":  # stored as uint16 bits
+            import ml_dtypes  # via jax
+
+            arr = arr.view(ml_dtypes.bfloat16)
+        want = tuple(getattr(leaf, "shape", np.shape(leaf)))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{key}: checkpoint {arr.shape} != expected {want}")
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(jax.tree.structure(like), out)
+
+
+def restore_with_sharding(
+    directory: str, step: int, like: PyTree, shardings: PyTree
+) -> PyTree:
+    """Elastic restore: place restored arrays under (possibly new) shardings.
+
+    This is the scale-in / scale-out mechanism: save under mesh A, build mesh
+    B, restore with B's NamedShardings — jax.device_put reshards.
+    """
+    host = restore(directory, step, like)
+    return jax.tree.map(jax.device_put, host, shardings)
+
+
+def manifest_extra(directory: str, step: int) -> dict:
+    path = os.path.join(directory, f"step_{step:010d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f).get("extra", {})

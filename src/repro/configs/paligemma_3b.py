@@ -1,0 +1,41 @@
+"""paligemma-3b [vlm]: 18L gemma backbone, d_model=2048, 8H (MQA kv=1),
+d_ff=16384, vocab=257216. SigLIP vision tower is a STUB (input_specs provides
+256 precomputed patch embeddings); prefix-LM masking over the vision prefix.
+[arXiv:2407.07726; hf]"""
+
+from repro.models.config import (
+    ArchConfig, BlockSpec, EncoderConfig, FF, Mixer, uniform_groups,
+)
+
+_SB = BlockSpec(Mixer.GLOBAL_ATTN, FF.GEGLU)
+
+CONFIG = ArchConfig(
+    name="paligemma-3b",
+    family="vlm",
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    d_ff=16_384,
+    vocab_size=257_216,
+    head_dim=256,
+    groups=uniform_groups(_SB, 18),
+    encoder=EncoderConfig(n_layers=0, ctx_len=256),  # stub: embeds arrive
+    prefix_lm=True,
+    sub_quadratic=False,  # full attention -> long_500k skipped
+)
+
+SMOKE = ArchConfig(
+    name="paligemma-smoke",
+    family="vlm",
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=1,
+    d_ff=128,
+    vocab_size=256,
+    head_dim=16,
+    groups=uniform_groups(_SB, 2),
+    encoder=EncoderConfig(n_layers=0, ctx_len=8),
+    prefix_lm=True,
+    max_seq_len=128,
+    sub_quadratic=False,
+)

@@ -1,0 +1,44 @@
+"""recurrentgemma-9b [hybrid]: 38L, d_model=4096, 16H (MQA kv=1), d_ff=12288,
+vocab=256000. Griffin pattern: (RG-LRU, RG-LRU, local-attn) repeated —
+1 attention : 2 recurrent; window 2048; GeGLU. 38 = 12*3 + 2 remainder
+recurrent layers (pattern_groups handles the tail).
+[arXiv:2402.19427; unverified]"""
+
+from repro.models.config import ArchConfig, BlockSpec, FF, Mixer, pattern_groups
+
+_REC = BlockSpec(Mixer.RGLRU, FF.GEGLU, rope_base=None)
+_ATT = BlockSpec(Mixer.LOCAL_ATTN, FF.GEGLU, window=2048)
+_PATTERN = (_REC, _REC, _ATT)
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    d_ff=12_288,
+    vocab_size=256_000,
+    head_dim=256,
+    groups=pattern_groups(_PATTERN, 38),
+    max_seq_len=1_048_576,  # recurrent state is O(1) in sequence length
+    sub_quadratic=True,
+)
+
+_SM = (
+    BlockSpec(Mixer.RGLRU, FF.GEGLU, rope_base=None),
+    BlockSpec(Mixer.LOCAL_ATTN, FF.GEGLU, window=16),
+)
+
+SMOKE = ArchConfig(
+    name="recurrentgemma-smoke",
+    family="hybrid",
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=1,
+    d_ff=128,
+    vocab_size=256,
+    head_dim=16,
+    groups=pattern_groups(_SM, 4),
+    max_seq_len=128,
+    sub_quadratic=True,
+)

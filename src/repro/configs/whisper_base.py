@@ -1,0 +1,48 @@
+"""whisper-base [audio]: 6L enc + 6L dec, d_model=512, 8H, d_ff=2048,
+vocab=51865. Encoder-decoder; conv audio frontend is a STUB (input_specs
+provides precomputed 1500-frame embeddings). LayerNorm + GELU, no RoPE
+(whisper uses sinusoidal enc + learned dec positions; we use sinusoidal both
+sides — positional-table choice does not affect shapes/flops).
+[arXiv:2212.04356; unverified]
+"""
+
+from repro.models.config import (
+    ArchConfig, BlockSpec, EncoderConfig, FF, Mixer,
+)
+
+# decoder layer = self-attn, cross-attn, then GELU FF
+_DEC_SB = (
+    BlockSpec(Mixer.GLOBAL_ATTN, FF.NONE, rope_base=None),
+    BlockSpec(Mixer.CROSS_ATTN, FF.GELU, rope_base=None),
+)
+
+CONFIG = ArchConfig(
+    name="whisper-base",
+    family="audio",
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51_865,
+    groups=((_DEC_SB, 6),),
+    norm="layernorm",
+    encoder=EncoderConfig(n_layers=6, ctx_len=1500),
+    tie_embeddings=True,
+    max_seq_len=32_768,  # assigned shapes exceed whisper's native 448
+    sub_quadratic=False,  # full attention -> long_500k skipped
+)
+
+SMOKE = ArchConfig(
+    name="whisper-base-smoke",
+    family="audio",
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=256,
+    groups=((_DEC_SB, 2),),
+    norm="layernorm",
+    encoder=EncoderConfig(n_layers=2, ctx_len=16),
+    max_seq_len=128,
+    sub_quadratic=False,
+)

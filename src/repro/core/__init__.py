@@ -1,0 +1,19 @@
+"""MLLess core: ISP significance filter, consistency models, scale-in
+auto-tuner, billing/cost models, and the serverless execution simulator."""
+
+from repro.core.isp import (  # noqa: F401
+    ISPConfig,
+    ISPState,
+    init_state,
+    filter_update,
+    significance_split,
+    communicated_fraction,
+)
+from repro.core.consistency import ConsistencyConfig, Model  # noqa: F401
+from repro.core.autotuner import AutoTunerConfig, ScaleInAutoTuner  # noqa: F401
+from repro.core.billing import CommModel, faas_cost, iaas_cost, perf_per_dollar  # noqa: F401
+from repro.core.simulator import (  # noqa: F401
+    Platform,
+    ServerlessSimulator,
+    SimulatorConfig,
+)

@@ -1,0 +1,184 @@
+"""Consistency models: BSP, SSP, ISP (paper §3.1, §4.1, §6.4).
+
+These define *when a worker may proceed* and *which updates it sees*:
+
+* **BSP** — bulk-synchronous: everyone exchanges everything every step.
+* **SSP** — stale-synchronous with slack ``s``: a worker at iteration t is
+  guaranteed to have seen all updates from iterations <= t - s - 1; updates
+  from (t-s .. t-1) may or may not have arrived. Implemented as a delay queue.
+* **ISP** — insignificance-bounded synchronous (the paper's contribution):
+  synchronous barrier each step, but each worker only broadcasts its
+  significant accumulated updates (see ``core.isp``).
+
+The simulator composes these with the communication cost model to reproduce
+the paper's Fig. 7/9 comparisons. All three are expressed as pure functions on
+a ``(P, ...)``-leading worker axis so the simulator can ``jit`` the whole
+multi-worker step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import isp as isp_lib
+
+PyTree = Any
+
+
+class Model(enum.Enum):
+    BSP = "bsp"
+    SSP = "ssp"
+    ISP = "isp"
+
+
+@dataclasses.dataclass(frozen=True)
+class ConsistencyConfig:
+    model: Model = Model.BSP
+    # ISP
+    isp: isp_lib.ISPConfig = dataclasses.field(default_factory=isp_lib.ISPConfig)
+    # SSP slack (paper §6.4 uses s = 3)
+    slack: int = 3
+
+
+class SSPState(NamedTuple):
+    """Delay-queue state for SSP.
+
+    ``queue`` holds the last ``slack`` steps of per-worker updates that have
+    been *produced* but not yet *applied* by every worker; entry ``queue[d]``
+    is the update produced ``d+1`` steps ago. Under the paper's guarantee, an
+    update produced at step t must be visible by step t + s, so the queue
+    drains its oldest slot every step. ``ages`` tracks per-slot occupancy.
+    """
+
+    queue: PyTree  # each leaf: (slack, P, *param_shape)
+    step: jax.Array
+
+
+def ssp_init(params_stacked: PyTree, slack: int) -> SSPState:
+    """Zero delay queue; leaves of ``params_stacked`` have leading (P, ...)."""
+    queue = jax.tree.map(
+        lambda p: jnp.zeros((slack,) + p.shape, p.dtype), params_stacked
+    )
+    return SSPState(queue=queue, step=jnp.asarray(1, jnp.int32))
+
+
+def ssp_step(
+    state: SSPState, updates: PyTree
+) -> tuple[PyTree, SSPState]:
+    """One SSP exchange.
+
+    Each worker immediately applies its *own* update; remote updates are
+    delivered with the maximum permitted staleness (worst case the bound
+    allows — the adversarial schedule, which is what makes SSP's convergence
+    guarantee meaningful). Returns the pytree of updates *visible* to each
+    worker this step (leading axis P) and the new state.
+    """
+
+    def leaf(q, u):
+        # q: (slack, P, ...); u: (P, ...)
+        delivered = q[-1]  # oldest slot: everyone sees it now (sum over workers)
+        remote_now = jnp.sum(delivered, axis=0, keepdims=True)  # (1, ...)
+        # shift the queue and enqueue this step's updates
+        new_q = jnp.concatenate([u[None], q[:-1]], axis=0)
+        # Each worker sees its own update instantly; 'delivered' includes each
+        # worker's own old update which it already applied, so subtract it.
+        visible = u + jnp.broadcast_to(remote_now, u.shape) - delivered
+        return visible, new_q
+
+    out = jax.tree.map(leaf, state.queue, updates)
+    treedef = jax.tree.structure(updates)
+    leaves = treedef.flatten_up_to(out)
+    visible = treedef.unflatten([l[0] for l in leaves])
+    new_queue = treedef.unflatten([l[1] for l in leaves])
+    return visible, SSPState(queue=new_queue, step=state.step + 1)
+
+
+def ssp_drain(state: SSPState) -> PyTree:
+    """Sum of everything still in flight (applied at job end / barrier)."""
+
+    def leaf(q):
+        per_worker = jnp.sum(q, axis=0)  # (P, ...)
+        total = jnp.sum(per_worker, axis=0, keepdims=True)
+        return jnp.broadcast_to(total, per_worker.shape) - per_worker
+
+    return jax.tree.map(leaf, state.queue)
+
+
+def bsp_exchange(updates: PyTree) -> PyTree:
+    """BSP: every worker sees the sum of all updates, immediately.
+
+    ``updates`` leaves have leading worker axis (P, ...); the result is the
+    same-shaped pytree where every worker's slice is the global sum.
+    """
+
+    def leaf(u):
+        total = jnp.sum(u, axis=0, keepdims=True)
+        return jnp.broadcast_to(total, u.shape)
+
+    return jax.tree.map(leaf, updates)
+
+
+class ISPWorkerState(NamedTuple):
+    """Per-worker ISP state with leading (P, ...) axes on residual leaves."""
+
+    residual: PyTree
+    step: jax.Array
+
+
+def isp_init(params_stacked: PyTree) -> ISPWorkerState:
+    residual = jax.tree.map(jnp.zeros_like, params_stacked)
+    return ISPWorkerState(residual=residual, step=jnp.asarray(1, jnp.int32))
+
+
+def isp_exchange(
+    config: isp_lib.ISPConfig,
+    state: ISPWorkerState,
+    updates: PyTree,
+    replicas: PyTree,
+) -> tuple[PyTree, ISPWorkerState, PyTree]:
+    """One ISP exchange under paper-faithful replica semantics.
+
+    Per worker p: ``acc_p = r_p + u_p`` is split by the significance test
+    against that worker's own replica values. Worker p applies its *full*
+    ``acc_p`` locally? — no: per the paper each worker applies its own update
+    u_p fully and broadcasts only the significant accumulated part. The view
+    worker p holds is (Eq. 4): its own local updates plus all *significant*
+    updates from others. Equivalently each worker applies::
+
+        visible_p = u_p + sum_{p' != p} sig_{p'}
+
+    while sig_p's emission clears worker p's residual (others have now seen
+    it) and the insignificant remainder stays in r_p.
+
+    Returns ``(visible, new_state, masks)`` with leading (P, ...) axes.
+    """
+    v_t = config.threshold(state.step)
+
+    def leaf(u, x, r):
+        acc = r + u  # (P, ...)
+        sig, res, mask = isp_lib.significance_split(
+            acc, x, v_t, config.absolute_floor
+        )
+        # Sum of significant updates over all workers, delivered to everyone.
+        sig_total = jnp.sum(sig, axis=0, keepdims=True)
+        # Worker p sees: own update u_p  +  others' significant parts.
+        visible = u + jnp.broadcast_to(sig_total, u.shape) - sig
+        # Residual: emitting sig_p also removes it from p's own pending
+        # divergence (p has applied acc_p's significant part via broadcast
+        # bookkeeping: p applied u_p already; the sig part it emitted covers
+        # r_p's significant portion which p had *already applied locally* in
+        # earlier steps -> do NOT re-apply to p itself; hence '- sig' above).
+        return visible, res, mask
+
+    out = jax.tree.map(leaf, updates, replicas, state.residual)
+    treedef = jax.tree.structure(updates)
+    leaves = treedef.flatten_up_to(out)
+    visible = treedef.unflatten([l[0] for l in leaves])
+    res = treedef.unflatten([l[1] for l in leaves])
+    masks = treedef.unflatten([l[2] for l in leaves])
+    return visible, ISPWorkerState(res, state.step + 1), masks

@@ -1,0 +1,188 @@
+"""Insignificance-bounded Synchronous Parallel (ISP) — the MLLess significance filter.
+
+This is the paper's first contribution (§4.1): a synchronous consistency model
+in which each worker accumulates its per-parameter updates and broadcasts the
+accumulated update only once it becomes *significant* relative to the current
+parameter value:
+
+    | sum_{t'=t_p..t} u_{i,t'} / x_{i,t} | > v_t ,     v_t = v / sqrt(t).
+
+Insignificant updates stay in a local *residual*. Theorem 1 of the paper shows
+O(sqrt(T)) regret for convex SGD under this filter, so convergence is
+preserved while communication shrinks by the filtered fraction.
+
+Two execution semantics share this module (see DESIGN.md §2):
+
+* **Replica semantics** (paper-faithful): every worker keeps a divergent local
+  model copy; only broadcasts are filtered. Used by ``core.simulator``.
+* **Error-feedback semantics** (SPMD adaptation): parameters are shared across
+  data-parallel shards; each shard keeps a residual and contributes only the
+  significant part of ``residual + update`` to the collective. Used by the pod
+  training loop (``dist.compression``).
+
+Everything here is pytree-generic and jit-safe (pure ``jax.numpy``); the
+Pallas-fused hot path lives in ``repro.kernels.significance`` and is verified
+against this module's semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+_EPS = 1e-12  # guards |x| = 0 denominators (paper implicitly assumes x != 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ISPConfig:
+    """Static configuration of the significance filter.
+
+    Attributes:
+      v: initial significance threshold (paper uses v = 0.7 in §6.3). v = 0
+        reduces ISP to BSP exactly (Corollary 1).
+      decay: if True the threshold decays as ``v_t = v / sqrt(t)`` (Theorem 1
+        schedule); if False a constant threshold is used (the micro-benchmark
+        sweeps of Fig. 5 vary a fixed v).
+      absolute_floor: optional absolute-magnitude floor: entries whose
+        parameter value is ~0 are compared against this floor instead of a
+        relative one, preventing the filter from locking parameters at zero.
+    """
+
+    v: float = 0.7
+    decay: bool = True
+    absolute_floor: float = 1e-8
+
+    def threshold(self, step: jax.Array | int) -> jax.Array:
+        """v_t at 1-indexed step ``step``."""
+        t = jnp.maximum(jnp.asarray(step, jnp.float32), 1.0)
+        if self.decay:
+            return jnp.asarray(self.v, jnp.float32) / jnp.sqrt(t)
+        return jnp.asarray(self.v, jnp.float32)
+
+
+class ISPState(NamedTuple):
+    """Carried filter state: per-parameter residual plus the step counter."""
+
+    residual: PyTree  # same structure/dtypes as the parameters
+    step: jax.Array  # int32 scalar, 1-indexed (t in the paper)
+
+
+def init_state(params: PyTree) -> ISPState:
+    """Zero residual with the structure of ``params``."""
+    residual = jax.tree.map(jnp.zeros_like, params)
+    return ISPState(residual=residual, step=jnp.asarray(1, jnp.int32))
+
+
+def significance_split(
+    acc: jax.Array,
+    x: jax.Array,
+    v_t: jax.Array,
+    absolute_floor: float = 1e-8,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Split an accumulated update into (significant, residual, mask).
+
+    Implements the paper's per-parameter test ``|acc / x| > v_t`` with an
+    absolute floor for |x| ~ 0. Returns ``(sig, res, mask)`` with
+    ``sig + res == acc`` exactly and ``mask`` the boolean significance mask.
+    """
+    denom = jnp.maximum(jnp.abs(x), absolute_floor)
+    mask = jnp.abs(acc) > v_t * denom
+    sig = jnp.where(mask, acc, jnp.zeros_like(acc))
+    res = jnp.where(mask, jnp.zeros_like(acc), acc)
+    return sig, res, mask
+
+
+def filter_update(
+    config: ISPConfig,
+    state: ISPState,
+    update: PyTree,
+    params: PyTree,
+) -> tuple[PyTree, ISPState, PyTree]:
+    """One ISP filtering step over a full pytree of updates.
+
+    Args:
+      config: filter configuration.
+      state: carried ``ISPState``.
+      update: this step's local update ``u_t`` (e.g. ``-lr * grad``).
+      params: current (noisy) parameter values ``x_t`` used as the
+        significance denominator.
+
+    Returns:
+      ``(significant, new_state, masks)`` where ``significant`` is the pytree
+      to be communicated (zeros where filtered), ``new_state`` carries the
+      accumulated residual, and ``masks`` the per-leaf boolean masks (used for
+      communication accounting and tests).
+    """
+    v_t = config.threshold(state.step)
+
+    def leaf(u, x, r):
+        acc = r + u
+        return significance_split(acc, x, v_t, config.absolute_floor)
+
+    out = jax.tree.map(leaf, update, params, state.residual)
+    # unzip the 3-tuples leaf-wise
+    treedef = jax.tree.structure(params)
+    leaves = treedef.flatten_up_to(out)
+    sig = treedef.unflatten([l[0] for l in leaves])
+    res = treedef.unflatten([l[1] for l in leaves])
+    masks = treedef.unflatten([l[2] for l in leaves])
+    new_state = ISPState(residual=res, step=state.step + 1)
+    return sig, new_state, masks
+
+
+def communicated_fraction(masks: PyTree) -> jax.Array:
+    """Fraction of parameters whose update was communicated this step."""
+    sizes = jax.tree.map(lambda m: jnp.asarray(m.size, jnp.float32), masks)
+    hits = jax.tree.map(lambda m: jnp.sum(m.astype(jnp.float32)), masks)
+    total = jax.tree.reduce(jnp.add, sizes)
+    hit = jax.tree.reduce(jnp.add, hits)
+    return hit / jnp.maximum(total, 1.0)
+
+
+def communicated_bytes(masks: PyTree, bytes_per_entry: int = 8) -> jax.Array:
+    """Bytes a sparse (value+index) encoding of the significant entries costs.
+
+    The paper's workers push sparse-encoded updates through Redis; we charge
+    ``bytes_per_entry`` (default fp32 value + int32 index) per significant
+    entry. Used by the simulator's communication cost model.
+    """
+    hits = jax.tree.map(lambda m: jnp.sum(m.astype(jnp.float32)), masks)
+    hit = jax.tree.reduce(jnp.add, hits)
+    return hit * bytes_per_entry
+
+
+def dense_bytes(params: PyTree, bytes_per_entry: int = 4) -> float:
+    """Bytes of a dense encoding of a full update (the BSP cost)."""
+    sizes = jax.tree.map(lambda p: p.size, params)
+    return float(jax.tree.reduce(lambda a, b: a + b, sizes)) * bytes_per_entry
+
+
+def flush(state: ISPState) -> tuple[PyTree, ISPState]:
+    """Emit the whole residual (used on eviction / final sync) and clear it.
+
+    The paper's eviction policy (§4.2) has a leaving worker publish its full
+    local replica; in error-feedback semantics the equivalent is flushing the
+    residual into the shared parameters.
+    """
+    zeros = jax.tree.map(jnp.zeros_like, state.residual)
+    return state.residual, ISPState(residual=zeros, step=state.step)
+
+
+def residual_relative_norm(state: ISPState, params: PyTree) -> jax.Array:
+    """max_i |r_i| / max(|x_i|, floor) — the consistency-bound diagnostic.
+
+    Theorem 1's noisy-view deviation is bounded by the per-parameter
+    significance test; this returns the tightest bound currently witnessed,
+    which tests assert is <= v_t.
+    """
+
+    def leaf(r, x):
+        return jnp.max(jnp.abs(r) / jnp.maximum(jnp.abs(x), _EPS))
+
+    vals = jax.tree.map(leaf, state.residual, params)
+    return jax.tree.reduce(jnp.maximum, vals)

@@ -1,0 +1,380 @@
+"""Serverless training simulator — paper-faithful MLLess execution model.
+
+Runs P worker replicas *simultaneously* as a vmapped multi-worker step
+(leading worker axis on params / optimizer state / consistency state), with:
+
+* divergent local replicas + BSP/SSP/ISP exchange semantics (core.consistency)
+* a timing model: per-step worker time = minibatch fetch (COS) + compute
+  (flops / worker rate, with lognormal straggler jitter) + exchange
+  (Redis round-trips + wire bytes, from ``core.billing.CommModel``)
+* FaaS sub-second billing per live worker, plus the always-on VMs
+* scale-in auto-tuner integration: evicted workers are masked inert (static
+  shapes stay jit-friendly), their replica reintegrated by model averaging
+* serverful baseline mode (ring all-reduce, IaaS billing, dense exchange) and
+  non-specialized serverless mode (object-storage exchange) — the paper's
+  PyTorch and PyWren-IBM comparators.
+
+Wall-clock in the simulator is *modelled* time, not host time: the paper's
+claims are about the FaaS/IaaS cost-time trade-off, which depends only on the
+modelled rates (documented in DESIGN.md §8). Convergence, however, is REAL:
+losses come from actually training the model, so time-to-loss comparisons
+combine genuine optimization traces with the platform timing model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autotuner as autotuner_lib
+from repro.core import billing as billing_lib
+from repro.core import consistency as cons_lib
+from repro.core import isp as isp_lib
+from repro.optim import Optimizer, apply_updates
+
+PyTree = Any
+
+
+class Platform(enum.Enum):
+    MLLESS = "mlless"  # specialized serverless: Redis exchange, FaaS billing
+    SERVERFUL = "serverful"  # PyTorch-like: ring all-reduce, IaaS billing
+    PYWREN = "pywren"  # non-specialized serverless: COS-mediated exchange
+
+
+@dataclasses.dataclass(frozen=True)
+class SimulatorConfig:
+    n_workers: int
+    consistency: cons_lib.ConsistencyConfig = dataclasses.field(
+        default_factory=cons_lib.ConsistencyConfig
+    )
+    platform: Platform = Platform.MLLESS
+    comm: billing_lib.CommModel = dataclasses.field(
+        default_factory=billing_lib.CommModel
+    )
+    # compute model: 1 vCPU sustained flops for the Cython/MKL inner loops
+    worker_flops_rate: float = 4e9
+    straggler_sigma: float = 0.12  # lognormal sigma on per-worker compute time
+    n_redis: int = 1
+    seed: int = 0
+    # sparse models update only touched coordinates; serverful exchanges dense
+    sparse_model: bool = False
+    eval_every: int = 1
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    loss: float
+    wall_s: float  # modelled wall-clock of this step
+    comm_bytes: float
+    active_workers: int
+    comm_fraction: float  # ISP: fraction of params communicated
+
+
+@dataclasses.dataclass
+class SimResult:
+    records: list[StepRecord]
+    bill: billing_lib.FaaSBill | None
+    iaas_cost: float | None
+    total_wall_s: float
+    final_loss: float
+    converged_at_s: Optional[float]
+    converged_at_step: Optional[int]
+    worker_lifetimes_s: list[float]
+    summary: dict
+
+    @property
+    def total_cost(self) -> float:
+        if self.bill is not None:
+            return self.bill.total
+        return float(self.iaas_cost or 0.0)
+
+    def perf_per_dollar(self) -> float:
+        t = self.converged_at_s or self.total_wall_s
+        return billing_lib.perf_per_dollar(t, self.total_cost)
+
+
+class ServerlessSimulator:
+    """One training job on a modelled platform.
+
+    Args:
+      config: platform/timing configuration.
+      grad_fn: ``(params, batch) -> (loss, grads)`` for ONE worker.
+      optimizer: a ``repro.optim.Optimizer``.
+      params: initial model parameters (single replica; will be stacked).
+      flops_per_sample: compute cost model for one sample's grad+update.
+      update_nnz_fn: optional ``(grads) -> nnz`` for sparse update sizing;
+        defaults to full parameter count (dense).
+    """
+
+    def __init__(
+        self,
+        config: SimulatorConfig,
+        grad_fn: Callable[[PyTree, Any], tuple[jax.Array, PyTree]],
+        optimizer: Optimizer,
+        params: PyTree,
+        flops_per_sample: float,
+        update_nnz_fn: Optional[Callable[[PyTree], jax.Array]] = None,
+    ):
+        self.config = config
+        self.grad_fn = grad_fn
+        self.optimizer = optimizer
+        P = config.n_workers
+        self.n_params = int(
+            sum(x.size for x in jax.tree.leaves(params))
+        )
+        # stack replicas: every worker starts from the same point (paper's
+        # sanity check §6.1 — identical convergence at fixed seed)
+        self.replicas = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (P,) + x.shape), params
+        )
+        self.opt_state = jax.vmap(optimizer.init)(self.replicas)
+        self.flops_per_sample = float(flops_per_sample)
+        self.update_nnz_fn = update_nnz_fn
+        # consistency state
+        cc = config.consistency
+        self.isp_state = cons_lib.isp_init(self.replicas)
+        self.ssp_state = cons_lib.ssp_init(self.replicas, max(cc.slack, 1))
+        self.active = np.ones(P, dtype=bool)
+        self._rng = np.random.default_rng(config.seed)
+        self._lifetimes = np.zeros(P, dtype=np.float64)
+        self._wall = 0.0
+        self._jit_step = jax.jit(self._multi_worker_step)
+
+    # -- the jitted multi-worker step -----------------------------------------
+
+    def _multi_worker_step(self, replicas, opt_state, isp_state, ssp_state,
+                           batch_stacked, active_mask):
+        cfg = self.config
+        cc = cfg.consistency
+
+        def one_worker(params, ost, batch):
+            loss, grads = self.grad_fn(params, batch)
+            updates, ost2 = self.optimizer.update(grads, ost, params)
+            return loss, updates, ost2
+
+        losses, updates, opt_state2 = jax.vmap(one_worker)(
+            replicas, opt_state, batch_stacked
+        )
+        amask = active_mask.astype(losses.dtype)
+        # inert evicted workers: zero update contribution. Active workers'
+        # updates are scaled 1/P_active BEFORE exchange: the paper averages
+        # local gradients into the global update (§3.2), so summing the
+        # exchanged parts must reconstruct the average — without this the
+        # effective step size grows with P and constant-B_g scaling
+        # (Table 3) loses its statistical-efficiency invariance.
+        p_active = jnp.maximum(jnp.sum(amask), 1.0)
+        updates = jax.tree.map(
+            lambda u: u * amask.reshape((-1,) + (1,) * (u.ndim - 1))
+            / p_active,
+            updates,
+        )
+
+        comm_frac = jnp.asarray(1.0, jnp.float32)
+        if cc.model is cons_lib.Model.ISP:
+            visible, isp_state, masks = cons_lib.isp_exchange(
+                cc.isp, isp_state, updates, replicas
+            )
+            # fraction of ACTIVE workers' parameters communicated
+            total = sum(m.size for m in jax.tree.leaves(masks))
+            hits = sum(
+                jnp.sum(m.astype(jnp.float32)) for m in jax.tree.leaves(masks)
+            )
+            comm_frac = hits / total
+        elif cc.model is cons_lib.Model.SSP:
+            visible, ssp_state = cons_lib.ssp_step(ssp_state, updates)
+        else:  # BSP
+            visible = cons_lib.bsp_exchange(updates)
+
+        replicas2 = apply_updates(replicas, visible)
+        # evicted workers' replicas frozen
+        replicas2 = jax.tree.map(
+            lambda new, old: jnp.where(
+                active_mask.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
+            ),
+            replicas2,
+            replicas,
+        )
+        mean_loss = jnp.sum(losses * amask) / jnp.maximum(jnp.sum(amask), 1.0)
+        return replicas2, opt_state2, isp_state, ssp_state, mean_loss, comm_frac
+
+    # -- timing + billing ------------------------------------------------------
+
+    def _step_times(self, batch_size: int, comm_bytes_per_worker: float,
+                    p_active: int) -> tuple[float, np.ndarray]:
+        """Returns (wall_s, per-worker busy seconds) for one step."""
+        cfg = self.config
+        compute = self.flops_per_sample * batch_size / cfg.worker_flops_rate
+        jitter = self._rng.lognormal(0.0, cfg.straggler_sigma, size=p_active)
+        per_worker_compute = compute * jitter
+        fetch = cfg.comm.cos_fetch_s
+        if cfg.platform is Platform.SERVERFUL:
+            comm = cfg.comm.allreduce_time(comm_bytes_per_worker, p_active)
+        elif cfg.platform is Platform.PYWREN:
+            # COS-mediated exchange: object-store latency per push/pull
+            slow = billing_lib.CommModel(
+                redis_rtt_s=cfg.comm.cos_fetch_s,
+                redis_bw_Bps=cfg.comm.redis_bw_Bps / 2,
+                cos_fetch_s=cfg.comm.cos_fetch_s,
+            )
+            comm = slow.indirect_exchange_time(
+                comm_bytes_per_worker, p_active, 1
+            )
+        else:
+            comm = cfg.comm.indirect_exchange_time(
+                comm_bytes_per_worker, p_active, cfg.n_redis
+            )
+        busy = fetch + per_worker_compute + comm
+        cc = self.config.consistency
+        if cfg.platform is not Platform.MLLESS or cc.model in (
+            cons_lib.Model.BSP,
+            cons_lib.Model.ISP,
+        ):
+            wall = float(np.max(busy))  # synchronous barrier
+        else:
+            # SSP: slack hides stragglers up to s steps; steady-state wall
+            # advances at the mean pace rather than the max
+            wall = float(np.mean(busy))
+        return wall, busy
+
+    # -- update sizing ---------------------------------------------------------
+
+    def _bytes_out(self, comm_frac: float, batch_size: int) -> float:
+        """Per-worker bytes pushed this step under the platform's encoding."""
+        cfg = self.config
+        if cfg.platform is Platform.SERVERFUL:
+            # dense ring all-reduce of the full gradient
+            return self.n_params * 4.0
+        nnz = self.n_params
+        if cfg.sparse_model and self.update_nnz_fn is not None:
+            nnz = float(self.update_nnz_fn(batch_size))
+        # sparse encoding: 4B value + 4B index
+        if cfg.consistency.model is cons_lib.Model.ISP:
+            nnz = nnz * max(comm_frac, 0.0)
+        return nnz * 8.0
+
+    # -- driver -----------------------------------------------------------------
+
+    def run(
+        self,
+        batch_fn: Callable[[int, int], Any],
+        batch_size: int,
+        max_steps: int,
+        loss_threshold: Optional[float] = None,
+        eval_fn: Optional[Callable[[PyTree], float]] = None,
+        tuner: Optional[autotuner_lib.ScaleInAutoTuner] = None,
+    ) -> SimResult:
+        """Run until convergence or max_steps.
+
+        Args:
+          batch_fn: ``(step, n_workers) -> batch pytree stacked (P, B, ...)``.
+            Always called with the FULL P (evicted workers' slices are inert).
+          batch_size: per-worker minibatch size B (weak scaling: fixed).
+          loss_threshold: stop when eval loss <= threshold (paper's metric).
+          eval_fn: replica -> scalar eval loss; defaults to training loss.
+          tuner: optional scale-in auto-tuner (MLLess platform only).
+        """
+        cfg = self.config
+        P = cfg.n_workers
+        records: list[StepRecord] = []
+        converged_at = None
+        converged_step = None
+
+        for step in range(1, max_steps + 1):
+            batch = batch_fn(step, P)
+            (
+                self.replicas,
+                self.opt_state,
+                self.isp_state,
+                self.ssp_state,
+                loss,
+                comm_frac,
+            ) = self._jit_step(
+                self.replicas,
+                self.opt_state,
+                self.isp_state,
+                self.ssp_state,
+                batch,
+                jnp.asarray(self.active),
+            )
+            loss = float(loss)
+            comm_frac = float(comm_frac)
+            p_active = int(self.active.sum())
+            bytes_out = self._bytes_out(comm_frac, batch_size)
+            wall, busy = self._step_times(batch_size, bytes_out, p_active)
+            self._wall += wall
+            self._lifetimes[self.active] += busy
+
+            eval_loss = loss
+            if eval_fn is not None and step % cfg.eval_every == 0:
+                replica0 = jax.tree.map(lambda x: x[0], self.replicas)
+                eval_loss = float(eval_fn(replica0))
+
+            records.append(
+                StepRecord(step, eval_loss, wall, bytes_out * p_active,
+                           p_active, comm_frac)
+            )
+
+            if tuner is not None and cfg.platform is Platform.MLLESS:
+                tuner.observe(step, eval_loss, wall)
+                decision = tuner.decide()
+                if decision.remove_worker and p_active > 1:
+                    self._evict_one()
+
+            if loss_threshold is not None and eval_loss <= loss_threshold:
+                converged_at = self._wall
+                converged_step = step
+                break
+
+        # billing
+        if cfg.platform is Platform.SERVERFUL:
+            bill = None
+            iaas = billing_lib.iaas_cost(P, self._wall)
+        else:
+            bill = billing_lib.faas_cost(
+                list(self._lifetimes), self._wall, cfg.n_redis
+            )
+            iaas = None
+
+        return SimResult(
+            records=records,
+            bill=bill,
+            iaas_cost=iaas,
+            total_wall_s=self._wall,
+            final_loss=records[-1].loss if records else float("nan"),
+            converged_at_s=converged_at,
+            converged_at_step=converged_step,
+            worker_lifetimes_s=list(self._lifetimes),
+            summary={
+                "platform": cfg.platform.value,
+                "consistency": cfg.consistency.model.value,
+                "final_workers": int(self.active.sum()),
+            },
+        )
+
+    # -- eviction ----------------------------------------------------------------
+
+    def _evict_one(self) -> None:
+        """Evict the lowest-quality active replica (highest local loss proxy:
+        largest residual norm; falls back to highest index) and reintegrate
+        its replica by model averaging (paper §4.2 eviction policy)."""
+        active_ids = np.nonzero(self.active)[0]
+        if active_ids.size <= 1:
+            return
+        evicted = int(active_ids[-1])
+        if self.config.consistency.model is cons_lib.Model.ISP:
+            # flush: average the leaving replica into the remaining ones
+            new_active = self.active.copy()
+            new_active[evicted] = False
+            self.replicas = autotuner_lib.evict_and_reintegrate(
+                self.replicas, evicted, jnp.asarray(new_active)
+            )
+            self.active = new_active
+        else:
+            self.active[evicted] = False

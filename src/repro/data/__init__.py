@@ -1,0 +1,20 @@
+"""Data pipeline: synthetic dataset generators + minibatch store.
+
+The container is offline, so the paper's datasets (Criteo display ads,
+MovieLens-10M/20M) are replaced by statistically-matched synthetic generators
+(DESIGN.md §8.6): same dimensionality, hashing-trick sparsity, Zipf-heavy
+user/item popularity. The *minibatch store* mimics the paper's IBM-COS layout:
+the dataset is pre-partitioned into fixed-size minibatches addressed by index,
+and workers fetch batches by (worker_id, step) — which is exactly the access
+pattern the simulator's cost model charges for.
+"""
+
+from repro.data.synthetic import (  # noqa: F401
+    CriteoLikeConfig,
+    MovieLensLikeConfig,
+    make_criteo_dense,
+    make_criteo_sparse,
+    make_movielens,
+)
+from repro.data.store import MinibatchStore  # noqa: F401
+from repro.data.tokens import TokenPipeline, synthetic_token_batch  # noqa: F401

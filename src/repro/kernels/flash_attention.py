@@ -1,0 +1,172 @@
+"""Pallas TPU kernel: blocked online-softmax (flash) attention.
+
+Needed by every train/prefill cell and by the sliding-window layers of
+gemma3 / mixtral / recurrentgemma. The XLA fallback in models/attention.py
+(`_chunked_core`) cannot skip fully-masked causal tiles — this kernel does,
+via the innermost grid dimension + @pl.when, so causal attention performs
+~S^2/2 work and sliding-window attention O(S * window).
+
+Grid: (batch*heads, n_q_blocks, n_kv_blocks), innermost (kv) sequential on
+TPU. Scratch (m, l, acc) persists across the kv dimension in VMEM; the
+output tile is written once, on the last contributing kv block. Tiles are
+MXU-aligned: (block_q, head_dim) x (block_k, head_dim) with head_dim padded
+to a multiple of 128 by the wrapper (ops.flash_attention).
+
+Masking: positions are derived from block indices (q_offset supports
+prefill-against-cache); the mask is applied only on DIAGONAL blocks —
+interior blocks are mask-free (this is what makes flash fast on TPU, where
+branch-free full tiles hit the MXU at full rate).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,  # (1, bq, dh), (1, bk, dh), (1, bk, dh)
+    o_ref,  # (1, bq, dh)
+    m_ref, l_ref, acc_ref,  # VMEM scratch: (bq, 1), (bq, 1), (bq, dh)
+    *,
+    causal: bool,
+    window: Optional[int],
+    q_offset: int,
+    seq_k: int,
+    block_q: int,
+    block_k: int,
+    n_kv_blocks: int,
+    sm_scale: float,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    q_start = q_offset + qi * block_q
+    k_start = ki * block_k
+
+    # -- does this kv block contribute at all? (static per (qi, ki) shape,
+    #    dynamic value — pl.when guards the compute)
+    first_q = q_start
+    last_q = q_start + block_q - 1
+    relevant = jnp.asarray(True)
+    if causal:
+        relevant &= k_start <= last_q  # block not entirely in the future
+    if window is not None:
+        relevant &= k_start + block_k - 1 > first_q - window  # not all stale
+    relevant &= k_start < seq_k  # not entirely padding
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)  # (bk, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = q @ k.T * sm_scale  # (bq, bk)
+
+        # mask only where the block straddles a boundary
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        allow = k_pos < seq_k  # tail padding
+        if causal:
+            allow &= k_pos <= q_pos
+        if window is not None:
+            allow &= q_pos - k_pos < window
+        s = jnp.where(allow, s, NEG_INF)
+
+        m_prev = m_ref[...]  # (bq, 1)
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + p @ v
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "q_offset", "block_q", "block_k", "sm_scale",
+        "interpret",
+    ),
+)
+def flash_attention_bhsd(
+    q: jax.Array,  # (BH, Sq, Dh) — batch*heads flattened, Dh % 128 == 0
+    k: jax.Array,  # (BH, Skv, Dh)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    sm_scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Core pallas_call on pre-flattened, pre-padded operands.
+
+    Use ops.flash_attention for the (B, S, H, Dh) convenience wrapper that
+    pads Dh/Sq/Skv and restores shapes.
+    """
+    bh, sq, dh = q.shape
+    skv = k.shape[1]
+    assert sq % block_q == 0 and skv % block_k == 0, (sq, skv)
+    n_q, n_k = sq // block_q, skv // block_k
+    if sm_scale is None:
+        sm_scale = 1.0 / float(dh) ** 0.5
+
+    kern = functools.partial(
+        _flash_kernel,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        seq_k=skv,
+        block_q=block_q,
+        block_k=block_k,
+        n_kv_blocks=n_k,
+        sm_scale=sm_scale,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=_scratch(block_q, dh),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(block_q: int, dh: int):
+    """Online-softmax carry (m, l, acc) in VMEM, persistent across the
+    innermost (kv) grid dimension."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return [
+        pltpu.VMEM((block_q, 1), jnp.float32),
+        pltpu.VMEM((block_q, 1), jnp.float32),
+        pltpu.VMEM((block_q, dh), jnp.float32),
+    ]

@@ -1,0 +1,180 @@
+"""Pallas TPU kernels: fused Adam update, and fused Adam + ISP filter.
+
+The paper's workers run `optimizer step -> significance filter` every
+iteration on every parameter (MLLess §5 Cythonizes exactly this loop). A
+jnp composition makes ~10 HBM round-trips over the parameter set (mu, nu,
+update, residual-accumulate, |x| test, split); these kernels do it in one
+VMEM pass per tile:
+
+* ``adam_update``  — p,g,mu,nu  -> p',mu',nu'            (3 reads+3 writes)
+* ``adam_sig``     — p,g,mu,nu,r -> sig,mu',nu',r'       (the full ISP
+  worker arithmetic; ``sig`` is what the pod exchanges — beyond-paper
+  fusion, EXPERIMENTS.md §Perf)
+
+Scalars (lr, betas, eps, bias corrections, v_t) arrive via a single (1, 8)
+fp32 block so one compiled kernel serves every step of the decaying
+schedules.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _adam_kernel(s_ref, p_ref, g_ref, mu_ref, nu_ref,
+                 p_out, mu_out, nu_out):
+    lr, b1, b2, eps, bc1, bc2, wd = (
+        s_ref[0, 0], s_ref[0, 1], s_ref[0, 2], s_ref[0, 3],
+        s_ref[0, 4], s_ref[0, 5], s_ref[0, 6],
+    )
+    g = g_ref[...].astype(jnp.float32)
+    mu = b1 * mu_ref[...].astype(jnp.float32) + (1.0 - b1) * g
+    nu = b2 * nu_ref[...].astype(jnp.float32) + (1.0 - b2) * g * g
+    p = p_ref[...].astype(jnp.float32)
+    upd = -lr * (mu / bc1) / (jnp.sqrt(nu / bc2) + eps) - lr * wd * p
+    p_out[...] = (p + upd).astype(p_out.dtype)
+    mu_out[...] = mu.astype(mu_out.dtype)
+    nu_out[...] = nu.astype(nu_out.dtype)
+
+
+def _adam_sig_kernel(s_ref, p_ref, g_ref, mu_ref, nu_ref, r_ref,
+                     sig_out, mu_out, nu_out, res_out, *, floor):
+    lr, b1, b2, eps, bc1, bc2, v_t = (
+        s_ref[0, 0], s_ref[0, 1], s_ref[0, 2], s_ref[0, 3],
+        s_ref[0, 4], s_ref[0, 5], s_ref[0, 6],
+    )
+    g = g_ref[...].astype(jnp.float32)
+    mu = b1 * mu_ref[...].astype(jnp.float32) + (1.0 - b1) * g
+    nu = b2 * nu_ref[...].astype(jnp.float32) + (1.0 - b2) * g * g
+    p = p_ref[...].astype(jnp.float32)
+    u = -lr * (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+    acc = r_ref[...].astype(jnp.float32) + u
+    denom = jnp.maximum(jnp.abs(p), floor)
+    mask = jnp.abs(acc) > v_t * denom
+    sig_out[...] = jnp.where(mask, acc, 0.0).astype(sig_out.dtype)
+    res_out[...] = jnp.where(mask, 0.0, acc).astype(res_out.dtype)
+    mu_out[...] = mu.astype(mu_out.dtype)
+    nu_out[...] = nu.astype(nu_out.dtype)
+
+
+def _tile(x: jax.Array, block_rows: int) -> tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % (block_rows * LANES)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANES), n
+
+
+def _untile(t: jax.Array, n: int, shape) -> jax.Array:
+    return t.reshape(-1)[:n].reshape(shape)
+
+
+def _scalars(lr, b1, b2, eps, step, last) -> jax.Array:
+    t = jnp.maximum(jnp.asarray(step, jnp.float32), 1.0)
+    bc1 = 1.0 - jnp.power(jnp.asarray(b1, jnp.float32), t)
+    bc2 = 1.0 - jnp.power(jnp.asarray(b2, jnp.float32), t)
+    return jnp.stack(
+        [jnp.asarray(v, jnp.float32)
+         for v in (lr, b1, b2, eps, bc1, bc2, last, 0.0)]
+    ).reshape(1, 8)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("b1", "b2", "eps", "weight_decay", "block_rows",
+                     "interpret"),
+)
+def adam_update(
+    p: jax.Array,
+    g: jax.Array,
+    mu: jax.Array,
+    nu: jax.Array,
+    lr: jax.Array | float,
+    step: jax.Array | int,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused Adam step on one tensor. Returns (new_p, new_mu, new_nu)."""
+    shape = p.shape
+    p2, n = _tile(p, block_rows)
+    g2, _ = _tile(g, block_rows)
+    mu2, _ = _tile(mu, block_rows)
+    nu2, _ = _tile(nu, block_rows)
+    rows = p2.shape[0]
+    s = _scalars(lr, b1, b2, eps, step, weight_decay)
+    block = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        _adam_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((1, 8), lambda i: (0, 0)),
+                  block, block, block, block],
+        out_specs=[block, block, block],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), p.dtype),
+            jax.ShapeDtypeStruct((rows, LANES), mu.dtype),
+            jax.ShapeDtypeStruct((rows, LANES), nu.dtype),
+        ],
+        interpret=interpret,
+    )(s, p2, g2, mu2, nu2)
+    return tuple(_untile(o, n, shape) for o in outs)  # type: ignore
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("b1", "b2", "eps", "floor", "block_rows", "interpret"),
+)
+def adam_sig_update(
+    p: jax.Array,
+    g: jax.Array,
+    mu: jax.Array,
+    nu: jax.Array,
+    r: jax.Array,
+    lr: jax.Array | float,
+    step: jax.Array | int,
+    v_t: jax.Array | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    floor: float = 1e-8,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused Adam + ISP filter. Returns (sig, new_mu, new_nu, new_residual)."""
+    shape = p.shape
+    p2, n = _tile(p, block_rows)
+    g2, _ = _tile(g, block_rows)
+    mu2, _ = _tile(mu, block_rows)
+    nu2, _ = _tile(nu, block_rows)
+    r2, _ = _tile(r, block_rows)
+    rows = p2.shape[0]
+    s = _scalars(lr, b1, b2, eps, step, v_t)
+    block = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        functools.partial(_adam_sig_kernel, floor=floor),
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((1, 8), lambda i: (0, 0)),
+                  block, block, block, block, block],
+        out_specs=[block, block, block, block],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), p.dtype),
+            jax.ShapeDtypeStruct((rows, LANES), mu.dtype),
+            jax.ShapeDtypeStruct((rows, LANES), nu.dtype),
+            jax.ShapeDtypeStruct((rows, LANES), r.dtype),
+        ],
+        interpret=interpret,
+    )(s, p2, g2, mu2, nu2, r2)
+    return tuple(_untile(o, n, shape) for o in outs)  # type: ignore

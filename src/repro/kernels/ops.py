@@ -1,0 +1,135 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Platform dispatch: on TPU the real kernels run; elsewhere they execute in
+``interpret=True`` mode (the body runs in Python on CPU — this is how the
+sweep tests validate them) or, for the convenience entry points, fall back
+to the pure-jnp ``ref`` oracles when ``interpret`` would be too slow at the
+call site's scale.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.fused_adam import adam_sig_update, adam_update
+from repro.kernels.significance import significance_filter
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    return (not on_tpu()) if interpret is None else interpret
+
+
+# ---- significance ---------------------------------------------------------------
+
+
+def significance(
+    u: jax.Array,
+    x: jax.Array,
+    r: jax.Array,
+    v_t,
+    floor: float = 1e-8,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused ISP filter on one tensor: (sig, new_residual)."""
+    return significance_filter(
+        u, x, r, jnp.asarray(v_t, jnp.float32), floor=floor,
+        interpret=_auto_interpret(interpret),
+    )
+
+
+def significance_tree(updates, params, residual, v_t, floor: float = 1e-8):
+    """Pytree version (what the ISP train step calls on TPU)."""
+    if on_tpu():
+        out = jax.tree.map(
+            lambda u, x, r: significance(u, x, r, v_t, floor),
+            updates, params, residual,
+        )
+    else:  # pure-jnp oracle: interpret-mode is too slow for full models
+        out = jax.tree.map(
+            lambda u, x, r: ref.significance_ref(u, x, r, v_t, floor),
+            updates, params, residual,
+        )
+    treedef = jax.tree.structure(params)
+    leaves = treedef.flatten_up_to(out)
+    sig = treedef.unflatten([l[0] for l in leaves])
+    res = treedef.unflatten([l[1] for l in leaves])
+    return sig, res
+
+
+# ---- flash attention -------------------------------------------------------------
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, Dh)
+    k: jax.Array,  # (B, Skv, H, Dh)  (repeat GQA KV to H before calling)
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """(B, S, H, Dh) flash attention; pads Dh to 128 and Sq/Skv to blocks."""
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    dh_pad = (-dh) % 128
+    sq_pad = (-sq) % block_q
+    sk_pad = (-skv) % block_k
+
+    def pad(t, s_pad):
+        return jnp.pad(t, ((0, 0), (0, s_pad), (0, 0), (0, dh_pad)))
+
+    qp, kp, vp = pad(q, sq_pad), pad(k, sk_pad), pad(v, sk_pad)
+    # (B, S, H, D) -> (B*H, S, D)
+    def fold(t):
+        return t.transpose(0, 2, 1, 3).reshape(
+            b * h, t.shape[1], dh + dh_pad
+        )
+
+    out = flash_attention_bhsd(
+        fold(qp), fold(kp), fold(vp),
+        causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k,
+        sm_scale=1.0 / float(dh) ** 0.5,  # true (pre-padding) head dim
+        interpret=_auto_interpret(interpret),
+    )
+    out = out.reshape(b, h, sq + sq_pad, dh + dh_pad).transpose(0, 2, 1, 3)
+    return out[:, :sq, :, :dh]
+
+
+# ---- fused optimizers --------------------------------------------------------------
+
+
+def fused_adam(
+    p, g, mu, nu, lr, step,
+    b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    interpret: Optional[bool] = None,
+):
+    return adam_update(
+        p, g, mu, nu, lr, step, b1=b1, b2=b2, eps=eps,
+        weight_decay=weight_decay, interpret=_auto_interpret(interpret),
+    )
+
+
+def fused_adam_sig(
+    p, g, mu, nu, r, lr, step, v_t,
+    b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+    floor: float = 1e-8,
+    interpret: Optional[bool] = None,
+):
+    return adam_sig_update(
+        p, g, mu, nu, r, lr, step, v_t, b1=b1, b2=b2, eps=eps, floor=floor,
+        interpret=_auto_interpret(interpret),
+    )

@@ -1,0 +1,152 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is swept against
+(tests/test_kernels.py: shapes x dtypes, assert_allclose). They are also
+usable directly — the drivers fall back to these on platforms without
+Pallas TPU support.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---- significance filter (the paper's hot path) -------------------------------
+
+
+def significance_ref(
+    u: jax.Array,
+    x: jax.Array,
+    r: jax.Array,
+    v_t: jax.Array | float,
+    floor: float = 1e-8,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused ISP filter step: acc = r + u; split by |acc| > v_t * max(|x|, floor).
+
+    Returns (sig, new_residual) with sig + new_residual == acc exactly.
+    Matches core.isp.significance_split applied to acc = r + u.
+    """
+    acc = r.astype(jnp.float32) + u.astype(jnp.float32)
+    denom = jnp.maximum(jnp.abs(x.astype(jnp.float32)), floor)
+    mask = jnp.abs(acc) > jnp.asarray(v_t, jnp.float32) * denom
+    sig = jnp.where(mask, acc, 0.0)
+    res = jnp.where(mask, 0.0, acc)
+    return sig.astype(u.dtype), res.astype(r.dtype)
+
+
+# ---- flash attention -----------------------------------------------------------
+
+
+def mha_ref(
+    q: jax.Array,  # (B, Sq, H, Dh)
+    k: jax.Array,  # (B, Skv, H, Dh)
+    v: jax.Array,  # (B, Skv, H, Dh)
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Dense masked attention in fp32 — the flash kernel's oracle.
+
+    ``q_offset`` is the absolute position of q[0] (needed when Sq != Skv,
+    e.g. chunked prefill against a longer KV).
+    """
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    allow = jnp.ones((sq, skv), bool)
+    if causal:
+        allow &= k_pos <= q_pos
+    if window is not None:
+        allow &= q_pos - k_pos < window
+    logits = jnp.where(allow[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---- fused Adam ------------------------------------------------------------------
+
+
+def adam_ref(
+    p: jax.Array,
+    g: jax.Array,
+    mu: jax.Array,
+    nu: jax.Array,
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    step: int = 1,
+    weight_decay: float = 0.0,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One Adam update; returns (new_p, new_mu, new_nu).
+
+    Matches optim.optimizers.adam's per-leaf math (bias-corrected, optional
+    decoupled weight decay) so the kernel can replace the optimizer's inner
+    loop verbatim.
+    """
+    gf = g.astype(jnp.float32)
+    mu2 = b1 * mu.astype(jnp.float32) + (1 - b1) * gf
+    nu2 = b2 * nu.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+    t = jnp.asarray(step, jnp.float32)
+    bc1 = 1.0 - jnp.power(b1, t)
+    bc2 = 1.0 - jnp.power(b2, t)
+    upd = -lr * (mu2 / bc1) / (jnp.sqrt(nu2 / bc2) + eps)
+    if weight_decay:
+        upd = upd - lr * weight_decay * p.astype(jnp.float32)
+    return (
+        (p.astype(jnp.float32) + upd).astype(p.dtype),
+        mu2.astype(mu.dtype),
+        nu2.astype(nu.dtype),
+    )
+
+
+# ---- fused Adam + significance (ISP hot path, beyond-paper fusion) ---------------
+
+
+def adam_sig_ref(
+    p: jax.Array,
+    g: jax.Array,
+    mu: jax.Array,
+    nu: jax.Array,
+    r: jax.Array,
+    v_t: jax.Array | float,
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    step: int = 1,
+    floor: float = 1e-8,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Adam update -> residual accumulate -> significance split, one pass.
+
+    Returns (sig, new_mu, new_nu, new_residual). The caller exchanges
+    ``sig`` and applies it: this fuses the paper's entire per-step worker
+    arithmetic (optimizer + filter) into one read of 5 operands.
+    """
+    gf = g.astype(jnp.float32)
+    mu2 = b1 * mu.astype(jnp.float32) + (1 - b1) * gf
+    nu2 = b2 * nu.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+    t = jnp.asarray(step, jnp.float32)
+    bc1 = 1.0 - jnp.power(b1, t)
+    bc2 = 1.0 - jnp.power(b2, t)
+    u = -lr * (mu2 / bc1) / (jnp.sqrt(nu2 / bc2) + eps)
+    acc = r.astype(jnp.float32) + u
+    denom = jnp.maximum(jnp.abs(p.astype(jnp.float32)), floor)
+    mask = jnp.abs(acc) > jnp.asarray(v_t, jnp.float32) * denom
+    sig = jnp.where(mask, acc, 0.0)
+    res = jnp.where(mask, 0.0, acc)
+    return (
+        sig.astype(p.dtype),
+        mu2.astype(mu.dtype),
+        nu2.astype(nu.dtype),
+        res.astype(r.dtype),
+    )

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: fused ISP significance filter (the paper's hot path).
+
+MLLess hand-Cythonized exactly this per-parameter loop (§5 of the paper:
+"we reimplemented part of PyWren-IBM's runtime ... in Cython"). The TPU
+adaptation is a single VMEM pass:
+
+    acc  = r + u                      (residual accumulate)
+    mask = |acc| > v_t * max(|x|, f)  (significance test, Theorem 1 form)
+    sig  = acc * mask                 (communicated part)
+    r'   = acc * (1 - mask)           (error-feedback residual)
+
+A naive jnp composition reads/writes each of the three operands into HBM
+per intermediate (acc, |x|, mask, sig, r': >= 8 tensor passes); the fused
+kernel streams one (block_rows, 128*k) tile of u/x/r through VMEM and
+writes sig/r' — 3 reads + 2 writes total, the elementwise-roofline minimum.
+
+Layout: inputs are flattened and padded to (rows, LANES) tiles; the grid
+walks row blocks. v_t arrives as a (1, 1) scalar block so the same compiled
+kernel serves every step of the decaying v_t = v / sqrt(t) schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128  # TPU vector lane width
+SUBLANES = 8  # fp32 sublane height
+DEFAULT_BLOCK_ROWS = 256  # (256, 128) fp32 tile = 128 KiB/operand in VMEM
+
+
+def _sig_kernel(vt_ref, u_ref, x_ref, r_ref, sig_ref, res_ref, *, floor):
+    """One (block_rows, LANES) tile: accumulate, test, split."""
+    v_t = vt_ref[0, 0]
+    acc = r_ref[...].astype(jnp.float32) + u_ref[...].astype(jnp.float32)
+    denom = jnp.maximum(jnp.abs(x_ref[...].astype(jnp.float32)), floor)
+    mask = jnp.abs(acc) > v_t * denom
+    sig_ref[...] = jnp.where(mask, acc, 0.0).astype(sig_ref.dtype)
+    res_ref[...] = jnp.where(mask, 0.0, acc).astype(res_ref.dtype)
+
+
+def _pad_to_tiles(flat: jax.Array, block_rows: int) -> tuple[jax.Array, int]:
+    n = flat.shape[0]
+    tile = block_rows * LANES
+    pad = (-n) % tile
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANES), n
+
+
+@functools.partial(
+    jax.jit, static_argnames=("floor", "block_rows", "interpret")
+)
+def significance_filter(
+    u: jax.Array,
+    x: jax.Array,
+    r: jax.Array,
+    v_t: jax.Array,
+    *,
+    floor: float = 1e-8,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused filter over an arbitrary-shaped tensor.
+
+    Args:
+      u: this step's update (any shape).
+      x: current parameter values (same shape).
+      r: carried residual (same shape).
+      v_t: scalar significance threshold.
+      interpret: run the kernel body in Python (CPU validation mode).
+
+    Returns:
+      (sig, new_residual) with sig + new_residual == r + u.
+    """
+    shape, dtype = u.shape, u.dtype
+    u2, n = _pad_to_tiles(u.reshape(-1), block_rows)
+    x2, _ = _pad_to_tiles(x.reshape(-1), block_rows)
+    r2, _ = _pad_to_tiles(r.reshape(-1), block_rows)
+    rows = u2.shape[0]
+    grid = (rows // block_rows,)
+    vt_arr = jnp.asarray(v_t, jnp.float32).reshape(1, 1)
+
+    out_shape = [
+        jax.ShapeDtypeStruct((rows, LANES), dtype),
+        jax.ShapeDtypeStruct((rows, LANES), r.dtype),
+    ]
+    block = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    sig2, res2 = pl.pallas_call(
+        functools.partial(_sig_kernel, floor=floor),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # v_t scalar tile
+            block,
+            block,
+            block,
+        ],
+        out_specs=[block, block],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(vt_arr, u2, x2, r2)
+    sig = sig2.reshape(-1)[:n].reshape(shape)
+    res = res2.reshape(-1)[:n].reshape(shape)
+    return sig, res

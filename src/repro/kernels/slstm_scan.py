@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: fused sLSTM time scan (xlstm-1.3b's sequential path).
+
+The sLSTM cell is inherently sequential (recurrent h->gate connections), so
+the XLA fallback lowers it as a 4096-iteration `lax.scan` whose every step
+round-trips the (B, 4d) gate tensors through HBM — the dominant memory term
+of the xlstm train cell (EXPERIMENTS.md §Perf cell (a)). This kernel keeps
+the recurrent state (c, n, h) in VMEM scratch across the whole sequence and
+streams xg in (block_t, 4d) tiles:
+
+    HBM traffic = read xg once + write h once + stream R once per tile
+                ~ S*5d*4B per layer-pass, vs the fallback's ~20 tensors
+                  of (B,4d) per STEP.
+
+This is the TPU adaptation of xLSTM's fused CUDA kernel (DESIGN.md §8).
+
+Grid: (B, S/block_t); the time dimension is the innermost (sequential on
+TPU) grid axis; scratch persists across it. The recurrent matmul runs
+per-head as one (d x 4d) block-diagonal matmul materialized at kernel-build
+time (R is small: heads x dh x 4dh).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_T = 128
+
+
+def _slstm_kernel(xg_ref, r_ref, out_ref, c_ref, n_ref, h_ref, *,
+                  d: int, n_heads: int, block_t: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    r = r_ref[...].astype(jnp.float32)  # (d, 4d) block-diagonal
+
+    def step(t, carry):
+        c, n, h = carry
+        # recurrent gates: h (1, d) @ R (d, 4d); R is block-diagonal per
+        # head, materialized dense (zeros elsewhere) for one MXU matmul
+        rh = h @ r  # (1, 4d)
+        g = xg_ref[0, t][None, :] + rh
+        i = jnp.exp(jnp.minimum(g[:, 0 * d:1 * d], 8.0))
+        f = jax.nn.sigmoid(g[:, 1 * d:2 * d])
+        z = jnp.tanh(g[:, 2 * d:3 * d])
+        o = jax.nn.sigmoid(g[:, 3 * d:4 * d])
+        c1 = f * c + i * z
+        n1 = f * n + i
+        h1 = o * (c1 / jnp.maximum(jnp.abs(n1), 1.0))
+        out_ref[0, t] = h1[0].astype(out_ref.dtype)
+        return c1, n1, h1
+
+    carry = (c_ref[...], n_ref[...], h_ref[...])
+    c, n, h = jax.lax.fori_loop(0, block_t, step, carry)
+    c_ref[...] = c
+    n_ref[...] = n
+    h_ref[...] = h
+
+
+def block_diag_r(r: jax.Array) -> jax.Array:
+    """(H, dh, 4*dh) per-head recurrent weights -> dense (d, 4d) block-
+    diagonal matrix in the fused w_in gate layout (i|f|z|o interleave as
+    produced by slstm_apply's reorder)."""
+    hh, dh, four_dh = r.shape
+    d = hh * dh
+    dense = jnp.zeros((d, 4 * d), r.dtype)
+    for head in range(hh):
+        rows = slice(head * dh, (head + 1) * dh)
+        blk = r[head].reshape(dh, 4, dh)  # per-head gates contiguous
+        for gate in range(4):
+            cols = slice(gate * d + head * dh, gate * d + (head + 1) * dh)
+            dense = dense.at[rows, cols].set(blk[:, gate])
+    return dense
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_heads", "block_t", "interpret")
+)
+def slstm_scan(
+    xg: jax.Array,  # (B, S, 4d) fp32 pre-computed input gates
+    r: jax.Array,  # (H, dh, 4*dh) recurrent weights
+    *,
+    n_heads: int,
+    block_t: int = DEFAULT_BLOCK_T,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns h (B, S, d). Zero initial state (training entry point)."""
+    b, s, four_d = xg.shape
+    d = four_d // 4
+    assert s % block_t == 0, (s, block_t)
+    r_dense = block_diag_r(r)
+
+    kern = functools.partial(
+        _slstm_kernel, d=d, n_heads=n_heads, block_t=block_t
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(b, s // block_t),
+        in_specs=[
+            pl.BlockSpec((1, block_t, 4 * d), lambda bi, ti: (bi, ti, 0)),
+            pl.BlockSpec((d, 4 * d), lambda bi, ti: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, d), lambda bi, ti: (bi, ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xg, r_dense)

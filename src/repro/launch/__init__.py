@@ -1,0 +1,1 @@
+"""Launchers: production mesh, allocation-free dry-run, train/serve drivers."""

@@ -1,0 +1,538 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE: a
+``lax.scan`` of 48 transformer blocks reports the FLOPs/bytes of one block
+(empirically verified — an 8-iteration scan of matmuls reports exactly 1
+matmul of FLOPs). Since this framework deliberately lowers depth as scans
+(DESIGN.md §5: O(pattern) HLO keeps 512-device compiles tractable), the
+built-in numbers undercount every roofline term by the trip count, and the
+same undercount applies to collective wire bytes parsed from the HLO text
+(the all-gather inside the while body executes ``reps`` times but appears
+once).
+
+This module re-derives the three roofline inputs from the optimized HLO:
+
+* ``flops``      — dot FLOPs (2*M*N*K from result shape x contracting dims)
+                   plus 1 flop/element for elementwise/reduce ops,
+* ``bytes``      — per-instruction operand+result bytes at fusion
+                   granularity (XLA's own convention for bytes-accessed),
+* ``collectives``— ring-model wire bytes per op kind,
+
+each multiplied by the product of enclosing while-loop trip counts. Trip
+counts are extracted from the loop condition's ROOT compare against a
+constant — the shape JAX's scan/fori_loop lowering always produces. Unknown
+bounds conservatively count as 1 and are reported in ``unknown_loops``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "token": 0,
+}
+
+# one array type like bf16[16,4096,512]{2,1,0:T(8,128)} (layout stripped)
+_ARRAY_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[\d,]*)\]")
+
+_COMP_HDR_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?(?P<name>[\w\.\-]+)\s+\((?P<params>.*?)\)\s*->"
+)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w\.\-]+)\s+=\s+(?P<type>\(.*?\)|\S+)\s+"
+    r"(?P<opcode>[\w\-]+)\((?P<rest>.*)$"
+)
+_PARAM_RE = re.compile(r"%?(?P<name>[\w\.\-]+):\s*(?P<type>\([^)]*\)|[^,]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((-?\d+)\)")
+_TRIP_CFG_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_DIRECTION_RE = re.compile(r"direction=(\w+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_IOTA_FULL_RE = re.compile(
+    r"replica_groups=\[(?P<dims>[\d,]+)\]<=\[(?P<src>[\d,]+)\]"
+    r"(?:T\((?P<perm>[\d,]+)\))?"
+)
+
+_COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# opcodes that move no data / are free at runtime
+_FREE_OPS = frozenset({
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+    "get-dimension-size", "opt-barrier", "custom-call",
+})
+
+# ~1 flop per output element
+_ELEMENTWISE_HINT = frozenset({
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "compare", "select", "and", "or", "xor", "not", "sign", "floor",
+    "ceil", "round-nearest-afz", "clamp", "convert", "reduce", "map",
+    "reduce-window", "exponential-minus-one", "log-plus-one", "cosine",
+    "sine", "erf", "atan2", "remainder", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "stochastic-convert",
+})
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _ARRAY_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        dims = m.group("dims")
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    total = 0
+    for m in _ARRAY_RE.finditer(type_str):
+        if m.group("dt") not in _DTYPE_BYTES:
+            continue
+        n = 1
+        dims = m.group("dims")
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _array_dims(type_str: str) -> list[int]:
+    m = _ARRAY_RE.search(type_str)
+    if not m or not m.group("dims"):
+        return []
+    return [int(d) for d in m.group("dims").split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # everything after the opening paren (operands + attrs)
+
+    @property
+    def operands(self) -> list[str]:
+        # operand list ends at the first unbalanced ')'
+        depth = 1
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return _OPERAND_RE.findall(self.rest[:i])
+        return _OPERAND_RE.findall(self.rest)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    shapes: dict[str, str]  # instr/param name -> type string
+
+
+def parse_module(hlo_text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and ("{" in line) and "->" in line:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group("name"), [], {})
+                comps[cur.name] = cur
+                for pm in _PARAM_RE.finditer(m.group("params")):
+                    cur.shapes[pm.group("name")] = pm.group("type")
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if im:
+            ins = Instr(im.group("name"), im.group("type"),
+                        im.group("opcode"), im.group("rest"))
+            cur.instrs.append(ins)
+            cur.shapes[ins.name] = ins.type_str
+    return comps
+
+
+def _trip_count(cond: Computation) -> Optional[int]:
+    """Extract the loop bound from the condition's compare-vs-constant."""
+    consts: dict[str, int] = {}
+    for ins in cond.instrs:
+        cm = _CONST_RE.search(ins.rest)
+        if ins.opcode == "constant" and cm:
+            consts[ins.name] = int(cm.group(1))
+    root = cond.instrs[-1] if cond.instrs else None
+    for ins in cond.instrs:
+        if ins.opcode == "compare":
+            root = ins
+    if root is None or root.opcode != "compare":
+        return None
+    dm = _DIRECTION_RE.search(root.rest)
+    direction = dm.group(1) if dm else "LT"
+    ops = root.operands
+    bound = None
+    for o in ops:
+        if o in consts:
+            bound = consts[o]
+    if bound is None:
+        return None
+    if direction in ("LT", "GT"):
+        return max(bound, 0)
+    if direction in ("LE", "GE"):
+        return max(bound + 1, 0)
+    return None
+
+
+@dataclasses.dataclass
+class CostResult:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    wire_bytes_dci: float = 0.0  # subset of wire crossing pod boundaries
+    collectives: dict = dataclasses.field(default_factory=dict)
+    collective_count: int = 0
+    unknown_loops: int = 0
+
+    def scaled(self, k: float) -> "CostResult":
+        return CostResult(
+            self.flops * k, self.bytes * k, self.wire_bytes * k,
+            self.wire_bytes_dci * k,
+            {op: v * k for op, v in self.collectives.items()},
+            self.collective_count, self.unknown_loops,
+        )
+
+    def add(self, other: "CostResult") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.wire_bytes += other.wire_bytes
+        self.wire_bytes_dci += other.wire_bytes_dci
+        for op, v in other.collectives.items():
+            self.collectives[op] = self.collectives.get(op, 0.0) + v
+        self.collective_count += other.collective_count
+        self.unknown_loops += other.unknown_loops
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_BRACE_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    return 0
+
+
+def _first_group_ids(rest: str) -> Optional[list[int]]:
+    """Device ids of the first replica group (brace or iota format)."""
+    m = _GROUPS_BRACE_RE.search(rest)
+    if m:
+        return [int(x) for x in m.group(1).split(",")]
+    m = _GROUPS_IOTA_FULL_RE.search(rest)
+    if m:
+        import numpy as _np
+
+        dims = [int(x) for x in m.group("dims").split(",")]
+        src = [int(x) for x in m.group("src").split(",")]
+        n = 1
+        for s in src:
+            n *= s
+        ids = _np.arange(n).reshape(src)
+        if m.group("perm"):
+            perm = [int(x) for x in m.group("perm").split(",")]
+            ids = ids.transpose(perm)
+        ids = ids.reshape(dims)
+        return list(ids[0 if len(dims) > 1 else slice(None)].reshape(-1)[: dims[-1]])
+    return None
+
+
+def crosses_pod(rest: str, chips_per_pod: int) -> bool:
+    """True if the collective's replica groups span pod boundaries
+    (device ids are pod-major in jax.make_mesh order)."""
+    ids = _first_group_ids(rest)
+    if not ids:
+        return False
+    pods = {i // chips_per_pod for i in ids}
+    return len(pods) > 1
+
+
+def _collective_wire(op: str, ins: Instr, comps, comp) -> float:
+    """Ring-model wire bytes for one collective instruction (one execution).
+
+    all-gather / all-reduce(-start) result types include the full gathered /
+    reduced buffer; reduce-scatter's result is the scattered shard.
+    """
+    g = _group_size(ins.rest) or 8
+    frac = (g - 1) / g
+    out_bytes = _type_bytes(ins.type_str)
+    if op == "all-reduce":
+        return 2.0 * frac * out_bytes
+    if op == "reduce-scatter":
+        return frac * out_bytes * g
+    if op == "collective-permute":
+        return float(out_bytes)
+    # all-gather, all-to-all
+    return frac * out_bytes
+
+
+class HloCost:
+    """Walks the call graph multiplying while-loop trip counts."""
+
+    def __init__(self, hlo_text: str, chips_per_pod: int = 0):
+        self.chips_per_pod = chips_per_pod  # 0 = single pod (no DCI split)
+        self.comps = parse_module(hlo_text)
+        self._memo: dict[str, CostResult] = {}
+        entry = None
+        for name, c in self.comps.items():
+            if re.match(r"main", name) or name.startswith("jit"):
+                entry = name
+        if entry is None and self.comps:
+            # ENTRY is conventionally the last computation printed
+            entry = list(self.comps)[-1]
+        self.entry = entry
+
+    def analyze(self) -> CostResult:
+        if self.entry is None:
+            return CostResult()
+        return self._comp_cost(self.entry)
+
+    # -- per-computation --------------------------------------------------
+
+    def _comp_cost(self, name: str) -> CostResult:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        res = CostResult()
+        if comp is None:
+            self._memo[name] = res
+            return res
+        self._memo[name] = res  # break cycles defensively
+        for ins in comp.instrs:
+            res.add(self._instr_cost(ins, comp))
+        return res
+
+    def _operand_bytes(self, ins: Instr, comp: Computation) -> int:
+        total = 0
+        for o in ins.operands:
+            t = comp.shapes.get(o)
+            if t:
+                total += _type_bytes(t)
+        return total
+
+    def _instr_cost(self, ins: Instr, comp: Computation) -> CostResult:
+        op = ins.opcode
+        res = CostResult()
+        base = op.replace("-start", "")
+        if op in _FREE_OPS or op.endswith("-done"):
+            return res
+        if base in _COLLECTIVE_OPS:
+            wire = _collective_wire(base, ins, self.comps, comp)
+            res.wire_bytes += wire
+            res.collectives[base] = res.collectives.get(base, 0.0) + wire
+            if self.chips_per_pod and crosses_pod(ins.rest,
+                                                  self.chips_per_pod):
+                res.wire_bytes_dci += wire
+                res.collectives["dci:" + base] = (
+                    res.collectives.get("dci:" + base, 0.0) + wire
+                )
+            res.collective_count += 1
+            res.bytes += _type_bytes(ins.type_str)
+            return res
+        if op == "while":
+            bm = _BODY_RE.search(ins.rest)
+            cm = _COND_RE.search(ins.rest)
+            if not bm:
+                return res
+            body = self._comp_cost(bm.group(1))
+            # primary: XLA's own annotation on the while instruction
+            tm = _TRIP_CFG_RE.search(ins.rest)
+            trip = int(tm.group(1)) if tm else None
+            if trip is None and cm and cm.group(1) in self.comps:
+                trip = _trip_count(self.comps[cm.group(1)])
+            if trip is None:
+                res.unknown_loops += 1
+                trip = 1
+            res.add(body.scaled(float(trip)))
+            return res
+        if op == "fusion":
+            cm = _CALLS_RE.search(ins.rest)
+            in_place_root = False
+            if cm:
+                inner = self._comp_cost(cm.group(1))
+                # fused elementwise/dot flops count; bytes are the fusion's
+                # own operands+result (fusion internals stay in registers)
+                res.flops += inner.flops
+                res.wire_bytes += inner.wire_bytes
+                for k, v in inner.collectives.items():
+                    res.collectives[k] = res.collectives.get(k, 0.0) + v
+                res.collective_count += inner.collective_count
+                res.unknown_loops += inner.unknown_loops
+                callee = self.comps.get(cm.group(1))
+                if callee and callee.instrs:
+                    in_place_root = callee.instrs[-1].opcode
+            op_bytes = [
+                _type_bytes(comp.shapes.get(o, "")) for o in ins.operands
+            ]
+            small = sum(op_bytes) - (max(op_bytes) if op_bytes else 0)
+            result_b = _type_bytes(ins.type_str)
+            if in_place_root in ("dynamic-update-slice", "scatter", "pad"):
+                # writes a slice into a big (aliased / fused-consumer)
+                # buffer: traffic = slice inputs in + slice out, NOT the
+                # buffer twice (a scan backward accumulating d_xs would
+                # otherwise charge the full stacked gradient PER STEP)
+                res.bytes += 2.0 * small
+            elif in_place_root in ("dynamic-slice", "slice", "gather"):
+                # reads a slice of a big source: result + small operands
+                res.bytes += 2.0 * result_b + small
+            else:
+                res.bytes += result_b + self._operand_bytes(ins, comp)
+            return res
+        if op in ("call", "conditional", "async-start"):
+            cm = _CALLS_RE.search(ins.rest)
+            if cm:
+                res.add(self._comp_cost(cm.group(1)))
+            return res
+        if op == "dot":
+            out_elems = _type_elems(ins.type_str)
+            k_prod = 1
+            ops_ = ins.operands
+            lhs_t = comp.shapes.get(ops_[0]) if ops_ else None
+            cm = _CONTRACT_RE.search(ins.rest)
+            if lhs_t and cm and cm.group(1):
+                dims = _array_dims(lhs_t)
+                for di in cm.group(1).split(","):
+                    i = int(di)
+                    if i < len(dims):
+                        k_prod *= dims[i]
+            res.flops += 2.0 * out_elems * k_prod
+            res.bytes += _type_bytes(ins.type_str) + self._operand_bytes(
+                ins, comp
+            )
+            return res
+        if op == "convolution":
+            # not used by this framework (frontends are stubs); approximate
+            res.flops += 2.0 * _type_elems(ins.type_str)
+            res.bytes += _type_bytes(ins.type_str) + self._operand_bytes(
+                ins, comp
+            )
+            return res
+        if op in ("dynamic-update-slice", "scatter"):
+            # executed in place on TPU (donated/aliased buffers): traffic is
+            # the updated slice read+write, not the whole buffer twice
+            upd_idx = 1 if op == "dynamic-update-slice" else 2
+            upd_bytes = 0
+            ops_ = ins.operands
+            if len(ops_) > upd_idx:
+                t = comp.shapes.get(ops_[upd_idx])
+                if t:
+                    upd_bytes = _type_bytes(t)
+            res.bytes += 2.0 * upd_bytes
+            return res
+        if op in ("dynamic-slice", "slice", "gather"):
+            # reads only the sliced/gathered rows, not the whole source
+            # (a scan slicing its xs per step would otherwise charge the
+            # full stacked input once PER ITERATION — petabytes of phantom
+            # traffic for sLSTM's 32k-step scans)
+            res.bytes += 2.0 * _type_bytes(ins.type_str)
+            return res
+        # default: elementwise-ish — 1 flop per output element, move bytes
+        if base in _ELEMENTWISE_HINT:
+            res.flops += float(_type_elems(ins.type_str))
+        res.bytes += _type_bytes(ins.type_str) + self._operand_bytes(ins, comp)
+        return res
+
+
+def analyze_hlo(hlo_text: str, chips_per_pod: int = 0) -> CostResult:
+    return HloCost(hlo_text, chips_per_pod=chips_per_pod).analyze()
+
+
+_METADATA_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def top_costs(hlo_text: str, n: int = 25) -> list[dict]:
+    """The n heaviest instructions by trip-multiplied bytes — the §Perf
+    profiling view (no wall-clock on CPU; this is the structural profile).
+
+    Returns records {bytes, flops, trips, opcode, name, op_name} sorted by
+    bytes descending. Instructions inside while bodies are scaled by the
+    product of enclosing trip counts.
+    """
+    hc = HloCost(hlo_text)
+    hc.analyze()  # memoize
+    # multiplier per computation: entry=1; while bodies scale by trip
+    mult: dict[str, float] = {hc.entry: 1.0} if hc.entry else {}
+    frontier = [hc.entry] if hc.entry else []
+    while frontier:
+        cname = frontier.pop()
+        comp = hc.comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for ins in comp.instrs:
+            callees: list[tuple[str, float]] = []
+            if ins.opcode == "while":
+                bm = _BODY_RE.search(ins.rest)
+                cm = _COND_RE.search(ins.rest)
+                tm = _TRIP_CFG_RE.search(ins.rest)
+                trip = float(tm.group(1)) if tm else 1.0
+                if bm:
+                    callees.append((bm.group(1), m * trip))
+                if cm:
+                    callees.append((cm.group(1), m))
+            elif ins.opcode in ("call", "conditional"):
+                # NOT fusion: fused interiors never touch HBM; the fusion
+                # instruction row already carries their flops
+                cm = _CALLS_RE.search(ins.rest)
+                if cm:
+                    callees.append((cm.group(1), m))
+            for cn, cm_ in callees:
+                if cn not in mult or mult[cn] < cm_:
+                    mult[cn] = cm_
+                    frontier.append(cn)
+    rows = []
+    for cname, m in mult.items():
+        comp = hc.comps.get(cname)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode in ("while", "call", "conditional"):
+                continue
+            c = hc._instr_cost(ins, comp)
+            if c.bytes <= 0 and c.flops <= 0 and c.wire_bytes <= 0:
+                continue
+            md = _METADATA_RE.search(ins.rest)
+            rows.append({
+                "bytes": c.bytes * m,
+                "flops": c.flops * m,
+                "wire": c.wire_bytes * m,
+                "trips": m,
+                "opcode": ins.opcode,
+                "name": ins.name,
+                "op_name": md.group(1)[-120:] if md else "",
+            })
+    rows.sort(key=lambda r: -r["bytes"])
+    return rows[:n]

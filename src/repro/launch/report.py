@@ -1,0 +1,108 @@
+"""Roofline report: results/dryrun/*.json -> the EXPERIMENTS.md §Roofline table.
+
+    PYTHONPATH=src python -m repro.launch.report [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(results_dir: str, mesh_tag: str) -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        r = json.load(open(f))
+        name = os.path.basename(f)[: -len(".json")]
+        parts = name.split("__")
+        if len(parts) != 4 or parts[2] != mesh_tag:
+            continue
+        r["_cell"] = name
+        r["_arch"], r["_shape"] = parts[0], parts[1]
+        rows.append(r)
+    return rows
+
+
+_ARCH_ORDER = (
+    "whisper-base", "phi4-mini-3.8b", "gemma3-12b", "qwen1.5-32b",
+    "starcoder2-7b", "mixtral-8x22b", "phi3.5-moe-42b-a6.6b",
+    "recurrentgemma-9b", "xlstm-1.3b", "paligemma-3b",
+)
+_SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def fmt_table(rows: list[dict]) -> str:
+    idx = {(r["_arch"], r["_shape"]): r for r in rows}
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dci s |"
+        " bottleneck | MODEL/HLO flops | roofline frac | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in _ARCH_ORDER:
+        for s in _SHAPE_ORDER:
+            r = idx.get((a, s))
+            if r is None:
+                lines.append(
+                    f"| {a} | {s} | - | - | - | - | MISSING | - | - | - |"
+                )
+                continue
+            st = r.get("status", "?")
+            if st != "ok":
+                lines.append(
+                    f"| {a} | {s} | - | - | - | - | {st.split(':')[0]} |"
+                    " - | - | - |"
+                )
+                continue
+            lines.append(
+                "| {a} | {s} | {c:.3f} | {m:.3f} | {k:.3f} | {d:.3f} |"
+                " **{b}** | {u:.2f} | {f:.3f} | {fit} |".format(
+                    a=a, s=s,
+                    c=r["compute_term_s"], m=r["memory_term_s"],
+                    k=r["collective_term_s"],
+                    d=r.get("dci_term_s", 0.0),
+                    b=r["bottleneck"],
+                    u=r["useful_flops_ratio"], f=r["roofline_fraction"],
+                    fit="yes" if r.get("fits_hbm_16gb") else "NO",
+                )
+            )
+    return "\n".join(lines)
+
+
+def summary_stats(rows: list[dict]) -> dict:
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skipped = [r for r in rows if str(r.get("status", "")).startswith("skip")]
+    err = [r for r in rows if str(r.get("status", "")).startswith("error")]
+    bn = {}
+    for r in ok:
+        bn[r["bottleneck"]] = bn.get(r["bottleneck"], 0) + 1
+    return {
+        "ok": len(ok), "skipped": len(skipped), "errors": len(err),
+        "bottlenecks": bn,
+        "worst": sorted(ok, key=lambda r: r["roofline_fraction"])[:3],
+        "best": sorted(ok, key=lambda r: -r["roofline_fraction"])[:3],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=("single", "multi"))
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    rows = load(args.dir, args.mesh)
+    print(fmt_table(rows))
+    st = summary_stats(rows)
+    print(f"\nok={st['ok']} skipped={st['skipped']} errors={st['errors']} "
+          f"bottlenecks={st['bottlenecks']}")
+    if st["ok"]:
+        print("worst roofline:",
+              [(r["_cell"], round(r["roofline_fraction"], 4))
+               for r in st["worst"]])
+        print("best  roofline:",
+              [(r["_cell"], round(r["roofline_fraction"], 4))
+               for r in st["best"]])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,261 @@
+"""Roofline extraction: HLO parsing + the three-term model (assignment spec).
+
+    compute term    = HLO_FLOPs / (chips x 197e12 bf16 FLOP/s)
+    memory term     = HLO_bytes_accessed / (chips x 819e9 B/s HBM)
+    collective term = wire_bytes / (chips x 50e9 B/s ICI link)
+
+``compiled.cost_analysis()`` is per-device for SPMD executables (the module
+IS the per-device program), so the per-chip division is already done for the
+compute/memory terms; we keep the formulas in per-device form. Collective
+wire bytes come from parsing the post-optimization HLO: every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute instruction's
+shapes, with ring-algorithm multipliers:
+
+    all-gather:  (G-1)/G x out_bytes      (receives everyone else's shard)
+    all-reduce:  2 x (G-1)/G x out_bytes  (reduce-scatter + all-gather)
+    reduce-scatter: (G-1)/G x in_bytes
+    all-to-all:  (G-1)/G x out_bytes
+    collective-permute: out_bytes
+
+where G is the replica-group size parsed from the instruction.
+
+MODEL_FLOPS uses the standard 6*N_active*D (+ attention term) accounting, so
+the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/causal-mask/dispatch waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.models.config import ArchConfig, Mixer, ShapeConfig
+
+# ---- hardware constants (TPU v5e, assignment spec) ---------------------------
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+# cross-pod (DCI/DCN) effective bandwidth per chip: pods are not ICI-linked;
+# 1/8 of ICI is the documented modeling assumption (typical v5e multislice)
+DCI_BW = ICI_BW / 8.0
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?P<rtype>.+?)\s+(?P<op>all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)(?P<suffix>-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(?P<dt>\w+?)\[(?P<dims>[\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [a,b]<=[N]...: replica groups are the rows of an
+        # (a, b) reshape -> group size b
+        return int(m.group(2))
+    return 0
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    by_op: dict = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+    def add(self, op: str, bytes_: float):
+        self.by_op[op] = self.by_op.get(op, 0.0) + bytes_
+        self.wire_bytes += bytes_
+        self.count += 1
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum wire bytes over all collective instructions in optimized HLO."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue  # -done re-states the -start result; count once
+        op = m.group("op")
+        out_bytes = _shape_bytes(m.group("rtype"))
+        g = _group_size(line) or 8
+        frac = (g - 1) / g
+        if op == "all-reduce":
+            wire = 2.0 * frac * out_bytes
+        elif op == "reduce-scatter":
+            # out is the scattered shard; ring moves ~(G-1) shards
+            wire = frac * out_bytes * g
+        elif op == "collective-permute":
+            wire = float(out_bytes)
+        else:  # all-gather, all-to-all
+            wire = frac * out_bytes
+        stats.add(op, wire)
+    return stats
+
+
+# ---- MODEL_FLOPS accounting ----------------------------------------------------
+
+
+def model_flops(
+    arch: ArchConfig, shape: ShapeConfig, n_active_params: int
+) -> float:
+    """Useful-work FLOPs for one step of this cell (whole job, all chips).
+
+    train: 6*N*D matmul flops (fwd 2 + bwd 4) + attention score/value flops;
+    prefill: 2*N*D + fwd attention; decode: 2*N*B + attention over the cache.
+    Attention per layer (fwd): 4*B*H*Sq*Skv_eff*Dh, causal halves Skv_eff,
+    SWA caps it at the window.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    h, dh = arch.n_heads, arch.resolved_head_dim
+    tokens = b * (s if shape.kind != "decode" else 1)
+    if shape.kind == "train":
+        flops = 6.0 * n_active_params * tokens
+        mult = 3.0  # fwd + bwd
+    elif shape.kind == "prefill":
+        flops = 2.0 * n_active_params * tokens
+        mult = 1.0
+    else:
+        flops = 2.0 * n_active_params * tokens
+        mult = 1.0
+
+    attn = 0.0
+    for sb, reps in arch.groups:
+        for spec in sb:
+            if spec.mixer not in (Mixer.GLOBAL_ATTN, Mixer.LOCAL_ATTN,
+                                  Mixer.CROSS_ATTN):
+                continue
+            if shape.kind == "decode":
+                skv = s if spec.mixer is Mixer.GLOBAL_ATTN else min(
+                    s, spec.window or s
+                )
+                attn += reps * 4.0 * b * h * 1 * skv * dh
+            else:
+                if spec.mixer is Mixer.LOCAL_ATTN and spec.window:
+                    skv_eff = min(spec.window, s)
+                    attn += reps * mult * 4.0 * b * h * s * skv_eff * dh
+                elif spec.mixer is Mixer.CROSS_ATTN:
+                    enc = arch.encoder.ctx_len if arch.encoder else s
+                    attn += reps * mult * 4.0 * b * h * s * enc * dh
+                else:
+                    attn += reps * mult * 4.0 * b * h * s * (s / 2.0) * dh
+    return flops + attn
+
+
+# ---- the three terms -------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    model_flops_total: float
+    collectives: dict
+    peak_vmem_bytes: float = 0.0
+    argument_bytes: float = 0.0
+    wire_bytes_dci_per_chip: float = 0.0  # subset crossing pod boundaries
+
+    @property
+    def compute_term_s(self) -> float:
+        return self.hlo_flops_per_chip / PEAK_FLOPS
+
+    @property
+    def memory_term_s(self) -> float:
+        return self.hlo_bytes_per_chip / HBM_BW
+
+    @property
+    def collective_term_s(self) -> float:
+        """Within-pod (ICI) wire time."""
+        return (
+            self.wire_bytes_per_chip - self.wire_bytes_dci_per_chip
+        ) / ICI_BW
+
+    @property
+    def dci_term_s(self) -> float:
+        """Cross-pod wire time at DCI bandwidth (0 on single-pod meshes)."""
+        return self.wire_bytes_dci_per_chip / DCI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_term_s,
+            "memory": self.memory_term_s,
+            "collective": self.collective_term_s,
+            "dci": self.dci_term_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step-time bound: max of the terms (perfect overlap)."""
+        return max(self.compute_term_s, self.memory_term_s,
+                   self.collective_term_s, self.dci_term_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hlo_total = self.hlo_flops_per_chip * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the step-time bound:
+        MODEL_FLOPS / (chips * peak * step_time). This is the MFU the cell
+        would sustain if it ran exactly at its dominant-term bound."""
+        denom = self.chips * PEAK_FLOPS * self.step_time_s
+        return self.model_flops_total / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops_per_chip": self.hlo_flops_per_chip,
+            "hlo_bytes_per_chip": self.hlo_bytes_per_chip,
+            "wire_bytes_per_chip": self.wire_bytes_per_chip,
+            "model_flops_total": self.model_flops_total,
+            "compute_term_s": self.compute_term_s,
+            "memory_term_s": self.memory_term_s,
+            "collective_term_s": self.collective_term_s,
+            "dci_term_s": self.dci_term_s,
+            "wire_bytes_dci_per_chip": self.wire_bytes_dci_per_chip,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collectives": self.collectives,
+            "peak_vmem_bytes": self.peak_vmem_bytes,
+            "argument_bytes": self.argument_bytes,
+        }

@@ -1,0 +1,217 @@
+"""Per-cell input specs: ShapeDtypeStructs + NamedShardings, no allocation.
+
+``build_cell(arch_name, shape_name, mesh, ...)`` resolves everything a cell
+needs: the LM with the right ShardingPolicy, abstract params/opt/cache/batch
+structs, and the matching NamedShardings. The sharding POLICY varies by cell
+kind (DESIGN.md §5):
+
+  * train / prefill — batch over (pod, data); activations sequence-parallel
+    over 'model' between blocks; attention heads / d_ff / experts over
+    'model'; params + optimizer FSDP over 'data' and TP over 'model'.
+  * decode_32k      — batch over (pod, data); full-attention KV caches
+    sharded over 'model' on the SEQUENCE dim (flash-decode layout: softmax
+    stats all-reduced over 'model'); ring buffers replicated on seq.
+  * long_500k       — batch=1: KV/seq sharded over ('data','model');
+    recurrent-state archs carry O(1) state and ignore kv_seq.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.models import params as pdefs
+from repro.models.attention import ShardingPolicy
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig, shape_applicable
+from repro.models.transformer import LM
+from repro.launch.mesh import batch_axes
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: ArchConfig
+    shape: ShapeConfig
+    lm: LM
+    param_defs: PyTree
+    batch_structs: dict[str, jax.ShapeDtypeStruct]
+    batch_specs: dict[str, P]
+    cache_defs: Optional[PyTree]  # decode/prefill cells
+
+    def param_structs(self) -> PyTree:
+        return pdefs.to_struct(self.param_defs)
+
+    def param_specs(self) -> PyTree:
+        return pdefs.to_specs(self.param_defs)
+
+    def shardings(self, mesh, tree_of_specs: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), tree_of_specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+
+def make_policy(mesh, shape: ShapeConfig, arch: ArchConfig) -> ShardingPolicy:
+    """Resolve the activation-sharding policy for one cell.
+
+    Scheme selection (napkin math in EXPERIMENTS.md §Perf — FSDP-vs-TP
+    traffic per layer is ~3x params_bytes vs ~6x B_loc*S*D bytes; at the
+    assigned 4k tokens/chip the weight-gather side wins for every arch):
+
+    * train (B divisible by the whole chip count) — **FSDP-2D**: batch over
+      every mesh axis, attention and recurrences fully local, parameters
+      ZeRO-3-gathered per layer by GSPMD. MoE experts take the 'model' axis
+      at the dispatch boundary (EP) with groups on the batch axes.
+    * prefill (B < chips) — batch over the data axes; heads over 'model'
+      when the head count divides it (Megatron attention), otherwise the
+      residual stream is sequence-sharded over 'model' and attention runs
+      the kv-chunk-only core (q never sliced).
+    * decode — batch over data axes; KV caches sharded over 'model' on the
+      sequence dim (flash-decode layout). long_500k (B=1): cache sharded
+      over both axes.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_size = sizes.get("model", 1)
+    bax = batch_axes(mesh)
+    batch = bax if len(bax) > 1 else (bax[0] if bax else None)
+    n_batch_shards = 1
+    for a in bax:
+        n_batch_shards *= sizes[a]
+    total_chips = n_batch_shards * model_size
+    tokens = shape.global_batch * max(shape.seq_len, 1)
+    heads_ok = model_size > 1 and arch.n_heads % model_size == 0
+    ep_ok = False
+    if arch.moe is not None and model_size > 1:
+        from repro.models.moe import expert_split
+
+        e_virt = arch.moe.n_experts * expert_split(arch)
+        ep_ok = e_virt % model_size == 0
+
+    if shape.kind == "decode":
+        # decode MoE: EP over 'model' is safe — the dispatch buffers are a
+        # few tokens, so even a GSPMD fallback reshard moves ~MBs
+        moe_groups = n_batch_shards if tokens % n_batch_shards == 0 else 1
+        if shape.global_batch == 1:  # long_500k
+            return ShardingPolicy(batch=None, heads=None,
+                                  kv_seq=("data", "model"), moe_groups=1,
+                                  mesh=mesh)
+        return ShardingPolicy(
+            batch=batch, heads=None, kv_seq="model",
+            moe_groups=moe_groups,
+            moe_group_ax=batch if moe_groups > 1 else None,
+            moe_ep_ax="model" if ep_ok else None,
+            mesh=mesh,
+        )
+
+    if shape.global_batch % total_chips == 0:
+        # FSDP-2D: batch over every axis. MoE dispatch is CHIP-LOCAL
+        # (one group per chip, G = all chips): GSPMD cannot lower a
+        # cross-'model' capacity scatter/gather to an all-to-all — it emits
+        # full all-reduces of token-sized f32 tensors (measured 1655s
+        # collective term for mixtral). Chip-local groups make dispatch
+        # collective-free; expert weights are ZeRO-3-gathered per layer
+        # like every other parameter. The shard_map a2a EP path is the
+        # §Perf hillclimb on top of this baseline.
+        full = tuple(bax) + ("model",)
+        moe_groups = total_chips if tokens % total_chips == 0 else 1
+        return ShardingPolicy(
+            batch=full, heads=None, seq=None, kv_seq=None,
+            moe_groups=moe_groups,
+            moe_group_ax=full if moe_groups > 1 else None,
+            moe_token_ax=None,
+            moe_ep_ax=None,
+            moe_a2a=bool(ep_ok and moe_groups > 1),
+            mesh=mesh,
+        )
+
+    # small-batch train (multi-pod: 256 < 512 chips) or prefill: batch over
+    # the data axes, heads over 'model' where divisible. The residual
+    # stream is sequence-sharded when (a) heads cannot take 'model', or
+    # (b) this is TRAINING (the scan carry must stay small per chip —
+    # Megatron-SP at the block boundaries). Expert compute is f-sharded
+    # over 'model' (groups sit on the data axes — no conflict).
+    moe_groups = n_batch_shards if tokens % n_batch_shards == 0 else 1
+    need_sp = (not heads_ok) or shape.kind == "train"
+    seq_ax = "model" if (model_size > 1 and need_sp) else None
+    return ShardingPolicy(
+        batch=batch, heads="model" if heads_ok else None, kv_seq=None,
+        seq=seq_ax,
+        moe_groups=moe_groups,
+        moe_group_ax=batch if moe_groups > 1 else None,
+        moe_token_ax=None,
+        moe_ep_ax=None,
+        moe_f_ax="model" if model_size > 1 else None,
+        mesh=mesh,
+    )
+
+
+def _token_specs(
+    arch: ArchConfig, shape: ShapeConfig, policy: ShardingPolicy
+) -> tuple[dict, dict]:
+    """(structs, pspecs) for the data batch of this cell."""
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    bspec = policy.batch if b > 1 else None
+    structs: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    structs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    specs["tokens"] = P(bspec, None)
+    if shape.kind == "train":
+        structs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs["labels"] = P(bspec, None)
+    if arch.family == "audio":
+        structs["frames"] = jax.ShapeDtypeStruct(
+            (b, arch.encoder.ctx_len, arch.d_model), jnp.float32
+        )
+        specs["frames"] = P(bspec, None, None)
+    if arch.family == "vlm" and shape.kind != "decode":
+        structs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, arch.encoder.ctx_len, arch.d_model), jnp.float32
+        )
+        specs["vision_embeds"] = P(bspec, None, None)
+    return structs, specs
+
+
+def build_cell(arch_name: str, shape_name: str, mesh) -> Cell:
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(arch, shape)
+    if not ok:
+        raise ValueError(f"{arch_name} x {shape_name}: {why}")
+    policy = make_policy(mesh, shape, arch)
+    lm = LM(arch, policy)
+    param_defs = lm.param_defs()
+    batch_structs, batch_specs = _token_specs(arch, shape, policy)
+    cache_defs = None
+    if shape.kind in ("prefill", "decode"):
+        cache_defs = lm.cache_defs(shape.global_batch, shape.seq_len)
+    return Cell(
+        arch=arch,
+        shape=shape,
+        lm=lm,
+        param_defs=param_defs,
+        batch_structs=batch_structs,
+        batch_specs=batch_specs,
+        cache_defs=cache_defs,
+    )
+
+
+def opt_state_defs(param_defs: PyTree) -> PyTree:
+    """OptState-shaped defs mirroring the params (Adam mu/nu).
+
+    mu/nu must MATERIALIZE to zeros (optimizer.init semantics) — they
+    mirror the params' shapes/shardings but not their init."""
+    from repro.optim.optimizers import OptState
+
+    zeroed = jax.tree.map(
+        lambda d: dataclasses.replace(d, init="zeros"), param_defs,
+        is_leaf=pdefs.is_def,
+    )
+    step = pdefs.ParamDef((), jnp.int32, (), "ones")
+    return OptState(step=step, mu=zeroed, nu=zeroed)

@@ -1,0 +1,186 @@
+"""Step-function builders: BSP train, ISP-compressed train, prefill, decode.
+
+These are the exact functions the dry-run lowers and the drivers execute —
+one definition, both uses (the anti-drift rule again).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.isp import ISPConfig
+from repro.dist.compression import CompressionConfig, isp_compressed_step
+from repro.models.transformer import LM
+from repro.optim import Optimizer, apply_updates, clip_by_global_norm
+
+PyTree = Any
+
+
+def make_train_step(lm: LM, optimizer: Optimizer, clip_norm: float = 1.0):
+    """BSP data-parallel train step (gradient reduction via GSPMD).
+
+    This is the single-program analogue of the paper's BSP baseline: every
+    shard's gradient contribution is summed every step, dense.
+    """
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lm.train_loss, has_aux=True
+        )(params, batch)
+        if clip_norm:
+            grads = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss, metrics
+
+    return train_step
+
+
+def make_isp_train_step(
+    lm: LM,
+    optimizer: Optimizer,
+    mesh,
+    isp_cfg: ISPConfig,
+    comp_cfg: CompressionConfig,
+    clip_norm: float = 1.0,
+):
+    """ISP-over-pods train step (DESIGN.md §2), pure-GSPMD formulation.
+
+    The pod dim is a LEADING TENSOR DIM sharded over 'pod' (a partial-manual
+    shard_map over 'pod' with nested auto data/model trips an XLA SPMD
+    partitioner CHECK — spmd_partitioner_util.cc:504). Per pod (vmap):
+    local gradient -> local optimizer (divergent moments, the paper's
+    per-worker state) -> significance split against the shared params ->
+    compressed exchange -> apply. Exchange semantics by scheme:
+
+    * dense — sum the filtered updates over the pod dim: GSPMD emits a
+      dense all-reduce over 'pod' (the ISP-semantics baseline: exact filter,
+      no wire saving — the paper's observation that arbitrary-sparsity
+      updates don't compress a dense collective).
+    * topk — per pod, compact (values, indices) block-top-k; a scan over
+      pods dynamic-slices each pod's COMPACT arrays (GSPMD moves only those
+      bytes across 'pod') and scatter-adds into a replicated accumulator.
+      Wire per step ~ 2 * budget * n_params * 8B instead of 2 * n_params *
+      4B — the paper's Redis byte reduction, ICI form.
+
+    ``lm`` must carry a pod-stripped policy (launch.dryrun strips it).
+    """
+    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
+
+    def pod_fn(params, opt_state, res, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lm.train_loss, has_aux=True
+        )(params, batch)
+        if clip_norm:
+            grads = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        v_t = isp_cfg.threshold(opt_state.step)
+        from repro.core.isp import significance_split
+
+        out = jax.tree.map(
+            lambda u, x, r: significance_split(
+                r + u, x, v_t, isp_cfg.absolute_floor
+            ),
+            updates, params, res,
+        )
+        td = jax.tree.structure(params)
+        ls = td.flatten_up_to(out)
+        sig = td.unflatten([l[0] for l in ls])
+        res2 = td.unflatten([l[1] for l in ls])
+        nz = sum(
+            jnp.sum(l[2].astype(jnp.float32)) for l in ls
+        )
+        total = float(sum(l[2].size for l in ls))
+        return sig, opt_state, res2, loss, nz / total
+
+    def train_step(params, opt_pod, res_pod, batch):
+        # (B, ...) -> (n_pods, B/n_pods, ...): dim0 shards over 'pod'
+        batch_p = jax.tree.map(
+            lambda x: x.reshape((n_pods, x.shape[0] // n_pods)
+                                + x.shape[1:]),
+            batch,
+        )
+        sig_pod, opt_pod, res_pod, losses, fracs = jax.vmap(
+            pod_fn, in_axes=(None, 0, 0, 0)
+        )(params, opt_pod, res_pod, batch_p)
+
+        if comp_cfg.scheme == "dense":
+            combined = jax.tree.map(lambda s: jnp.sum(s, axis=0), sig_pod)
+        else:  # topk: compact exchange over the pod dim
+            combined = _topk_combine(comp_cfg, sig_pod, n_pods)
+        new_params = jax.tree.map(
+            lambda p_, c: (p_ + c).astype(p_.dtype), params, combined
+        )
+        return (new_params, opt_pod, res_pod, jnp.mean(losses),
+                jnp.mean(fracs))
+
+    return train_step
+
+
+def _topk_combine(comp_cfg: CompressionConfig, sig_pod, n_pods: int):
+    """Row-top-k compact exchange, GSPMD-auto and sharding-preserving.
+
+    Per leaf: (n_pods, *shape) pod-sharded significant updates -> per-pod
+    top-k per LAST-AXIS ROW (values, indices) -> scan over pods slicing the
+    compact arrays (only compact bytes cross 'pod') -> put_along_axis into
+    a dense accumulator that keeps the leaf's natural leading-dim sharding.
+
+    Two refuted formulations led here (EXPERIMENTS.md §Perf c2/c3): a
+    replicated (nb, block) accumulator makes GSPMD reshard the dense tensor
+    per pod, and ANY full flatten (`reshape(n_pods, -1)`) collapses the 2D
+    parameter sharding, which GSPMD resolves by gathering the entire f32
+    update across pods (51 GB/chip measured). Rows along the original last
+    axis preserve every sharded dim.
+    """
+
+    def leaf(s):
+        last = s.shape[-1]
+        kk = max(1, min(last, int(round(last * comp_cfg.budget)) or 1))
+        _, idx = jax.lax.top_k(jnp.abs(s), kk)  # (P, *lead, kk)
+        vals = jnp.take_along_axis(s, idx, axis=-1)
+
+        def add_pod(acc, pi):
+            v = jax.lax.dynamic_index_in_dim(vals, pi, 0, keepdims=False)
+            i = jax.lax.dynamic_index_in_dim(idx, pi, 0, keepdims=False)
+            upd = jnp.put_along_axis(
+                jnp.zeros_like(acc), i, v, axis=-1, inplace=False
+            )
+            return acc + upd, None
+
+        acc, _ = jax.lax.scan(
+            add_pod, jnp.zeros(s.shape[1:], s.dtype), jnp.arange(n_pods)
+        )
+        return acc
+
+    return jax.tree.map(leaf, sig_pod)
+
+
+def Pspec_replicated() -> P:
+    return P()
+
+
+def make_prefill_step(lm: LM):
+    def prefill_step(params, cache, batch):
+        return lm.prefill(params, cache, batch)
+
+    return prefill_step
+
+
+def make_decode_step(lm: LM):
+    def decode_step(params, cache, batch, pos):
+        return lm.decode_step(params, cache, batch, pos)
+
+    return decode_step
+
+
+def make_eval_step(lm: LM):
+    def eval_step(params, batch):
+        loss, metrics = lm.train_loss(params, batch)
+        return metrics["xent"]
+
+    return eval_step

@@ -1,0 +1,282 @@
+"""End-to-end LM training driver.
+
+The pod-runtime realization of the MLLess loop (DESIGN.md §2): data-parallel
+training with the ISP significance filter on the gradient exchange and the
+scale-in auto-tuner driving *elastic weak scaling* — evicting a worker
+shrinks the global batch (B_g = P*B, paper §3.2) and the step is re-lowered
+for the smaller pool, exactly the checkpoint -> re-mesh -> restore transition
+a pod would perform.
+
+Fault tolerance: deterministic step-indexed checkpoints (atomic rename);
+``--restore`` resumes from the newest one, reproducing the optimizer/filter
+state bit-exactly. Eviction writes a checkpoint first (the transition IS a
+restore), so a node failure at any point costs at most one interval.
+
+Usage (CPU example sizes):
+  python -m repro.launch.train --arch lm-100m --steps 300 --workers 4 \
+      --per-worker-batch 4 --seq 512 --mode isp --autotune \
+      --checkpoint-dir /tmp/ckpt
+  python -m repro.launch.train --arch xlstm-1.3b --smoke --steps 20
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.checkpoint import store as ckpt
+from repro.configs import ARCH_NAMES, get_arch, get_smoke
+from repro.core.autotuner import AutoTunerConfig, ScaleInAutoTuner
+from repro.core.billing import CommModel, faas_cost
+from repro.core.isp import ISPConfig, communicated_fraction
+from repro.data.tokens import TokenPipeline
+from repro.models.config import ArchConfig, BlockSpec, FF, Mixer, uniform_groups
+from repro.models.transformer import LM
+from repro.optim import apply_updates, clip_by_global_norm
+
+PyTree = Any
+
+# the deliverable's "~100M model": 12L x d768 SwiGLU, 32k vocab -> ~103M
+LM_100M = ArchConfig(
+    name="lm-100m",
+    family="dense",
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=2048,
+    vocab_size=32_768,
+    groups=uniform_groups(BlockSpec(Mixer.GLOBAL_ATTN, FF.SWIGLU), 12),
+    max_seq_len=8192,
+    sub_quadratic=False,
+)
+
+LM_8M = dataclasses.replace(
+    LM_100M, name="lm-8m", d_model=256, n_heads=8, n_kv_heads=8, d_ff=512,
+    vocab_size=8192,
+    groups=uniform_groups(BlockSpec(Mixer.GLOBAL_ATTN, FF.SWIGLU), 4),
+)
+
+_EXTRA = {"lm-100m": LM_100M, "lm-8m": LM_8M}
+
+
+def resolve_arch(name: str, smoke: bool) -> ArchConfig:
+    if name in _EXTRA:
+        return _EXTRA[name]
+    return get_smoke(name) if smoke else get_arch(name)
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt_state: Any
+    residual: PyTree  # ISP error-feedback residual
+    step: int
+    pool: int  # current worker count (elastic weak scaling)
+
+
+def make_step(lm: LM, optimizer, isp: Optional[ISPConfig], clip: float = 1.0):
+    """One jitted train step for a fixed pool size.
+
+    BSP: plain update. ISP: optimizer update -> residual accumulate ->
+    significance split -> apply only the significant part (the residual
+    stays local; on a pod the significant part is what crosses the pod
+    axis — see dist.compression for the collective form).
+    """
+
+    def step_fn(params, opt_state, residual, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lm.train_loss, has_aux=True
+        )(params, batch)
+        if clip:
+            grads = clip_by_global_norm(grads, clip)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        if isp is None:
+            params = apply_updates(params, updates)
+            sent_frac = jnp.asarray(1.0, jnp.float32)
+        else:
+            from repro.core.isp import significance_split
+
+            v_t = isp.threshold(opt_state.step)
+
+            def split(u, x, r):
+                return significance_split(r + u, x, v_t, isp.absolute_floor)
+
+            out = jax.tree.map(split, updates, params, residual)
+            td = jax.tree.structure(params)
+            ls = td.flatten_up_to(out)
+            sig = td.unflatten([l[0] for l in ls])
+            residual = td.unflatten([l[1] for l in ls])
+            masks = td.unflatten([l[2] for l in ls])
+            params = apply_updates(params, sig)
+            sent_frac = communicated_fraction(masks)
+        return params, opt_state, residual, loss, sent_frac
+
+    return jax.jit(step_fn, donate_argnums=(0, 1, 2))
+
+
+def save_checkpoint(d: str, st: TrainState) -> str:
+    return ckpt.save(
+        d, st.step,
+        {"params": st.params, "opt": st.opt_state, "residual": st.residual},
+        extra={"pool": st.pool},
+    )
+
+
+def restore_checkpoint(d: str, st: TrainState) -> TrainState:
+    step = ckpt.latest_step(d)
+    if step is None:
+        return st
+    tree = ckpt.restore(
+        d, step,
+        {"params": st.params, "opt": st.opt_state, "residual": st.residual},
+    )
+    extra = ckpt.manifest_extra(d, step)
+    return TrainState(
+        params=tree["params"], opt_state=tree["opt"],
+        residual=tree["residual"], step=step, pool=extra.get("pool", st.pool),
+    )
+
+
+def train(args) -> dict:
+    cfg = resolve_arch(args.arch, args.smoke)
+    lm = LM(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    optimizer = optim.make(args.optimizer, args.lr)
+    isp = ISPConfig(v=args.isp_v) if args.mode == "isp" else None
+
+    params = lm.init(key)
+    n_params = lm.n_params()
+    print(f"arch={cfg.name} params={n_params:,} mode={args.mode} "
+          f"workers={args.workers}")
+
+    st = TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        residual=jax.tree.map(jnp.zeros_like, params),
+        step=0,
+        pool=args.workers,
+    )
+    if args.restore and args.checkpoint_dir:
+        st = restore_checkpoint(args.checkpoint_dir, st)
+        print(f"restored step={st.step} pool={st.pool}")
+
+    tuner = None
+    if args.autotune:
+        tuner = ScaleInAutoTuner(
+            AutoTunerConfig(
+                sched_interval_s=args.sched_interval,
+                delta_s=args.sched_interval / 2,
+                min_workers=1,
+            ),
+            st.pool,
+        )
+
+    step_fn = make_step(lm, optimizer, isp)
+    history = []
+    worker_seconds = 0.0
+    t_job0 = time.time()
+
+    while st.step < args.steps:
+        # weak scaling (paper §3.2): global batch = pool * per-worker batch
+        gb = st.pool * args.per_worker_batch
+        pipe = TokenPipeline(cfg.vocab_size, args.seq, gb, seed=args.seed)
+        batch = pipe.next_batch(st.step)
+        t0 = time.time()
+        st.params, st.opt_state, st.residual, loss, sent = step_fn(
+            st.params, st.opt_state, st.residual, batch
+        )
+        loss = float(loss)
+        dt = time.time() - t0
+        worker_seconds += dt * st.pool
+        st.step += 1
+        history.append(
+            {"step": st.step, "loss": loss, "sent_fraction": float(sent),
+             "pool": st.pool, "step_s": dt}
+        )
+        if st.step % args.log_every == 0:
+            print(f"step {st.step:5d} pool={st.pool:2d} loss={loss:.4f} "
+                  f"sent={float(sent):.3f} {dt*1e3:.0f}ms")
+
+        if args.checkpoint_dir and st.step % args.checkpoint_every == 0:
+            save_checkpoint(args.checkpoint_dir, st)
+
+        if tuner is not None:
+            tuner.observe(st.step, loss, dt)
+            if tuner.decide().remove_worker and st.pool > 1:
+                # elastic scale-in: checkpoint -> shrink pool -> re-lower.
+                # ISP: flush the residual into the params first (the paper's
+                # leaving-worker model-averaging reintegration, error-
+                # feedback form — no update mass is lost across the re-mesh)
+                if isp is not None:
+                    st.params = apply_updates(st.params, st.residual)
+                    st.residual = jax.tree.map(jnp.zeros_like, st.residual)
+                if args.checkpoint_dir:
+                    save_checkpoint(args.checkpoint_dir, st)
+                st.pool -= 1
+                step_fn = make_step(lm, optimizer, isp)  # re-lower
+                print(f"  [autotuner] scale-in -> pool={st.pool} "
+                      f"(global batch {st.pool * args.per_worker_batch})")
+
+    wall = time.time() - t_job0
+    bill = faas_cost([worker_seconds], wall, n_redis=1)
+    result = {
+        "arch": cfg.name,
+        "n_params": n_params,
+        "final_loss": history[-1]["loss"] if history else None,
+        "steps": st.step,
+        "final_pool": st.pool,
+        "wall_s": wall,
+        "worker_seconds": worker_seconds,
+        "mean_sent_fraction": float(
+            np.mean([h["sent_fraction"] for h in history])
+        ) if history else None,
+        "faas_cost_usd": bill.total,
+        "history": history,
+    }
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="lm-8m",
+                    choices=tuple(_EXTRA) + ARCH_NAMES)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--per-worker-batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--mode", choices=("bsp", "isp"), default="bsp")
+    ap.add_argument("--isp-v", type=float, default=0.7)
+    ap.add_argument("--optimizer", default="adam",
+                    choices=("adam", "sgd", "nesterov"))
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--autotune", action="store_true")
+    ap.add_argument("--sched-interval", type=float, default=20.0)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--restore", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    res = train(args)
+    print(json.dumps({k: v for k, v in res.items() if k != "history"},
+                     indent=1))
+
+
+if __name__ == "__main__":
+    main()

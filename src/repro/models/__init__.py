@@ -1,0 +1,1 @@
+"""Model zoo: the paper's LR/PMF plus the assigned LM architecture stack."""

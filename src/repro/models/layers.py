@@ -1,0 +1,225 @@
+"""Layer primitives: norms, MLPs, embeddings, RoPE — ParamDef-declared.
+
+Convention: every layer exposes ``<layer>_defs(cfg, ...) -> ParamDef tree``
+and ``<layer>_apply(cfg, params, x, ...) -> y``. Activations flow in
+``cfg.activation_dtype`` (bf16 by default); normalization statistics, softmax
+and loss accumulate in fp32 (standard TPU mixed-precision discipline).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, FF
+from repro.models.params import ParamDef
+
+PyTree = Any
+
+
+def adt(cfg: ArchConfig):
+    return jnp.dtype(cfg.activation_dtype)
+
+
+def pdt(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---- normalization -----------------------------------------------------------
+
+
+def norm_defs(cfg: ArchConfig, d: Optional[int] = None) -> PyTree:
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {
+            "scale": ParamDef((d,), pdt(cfg), (None,), "ones"),
+            "bias": ParamDef((d,), pdt(cfg), (None,), "zeros"),
+        }
+    return {"scale": ParamDef((d,), pdt(cfg), (None,), "ones")}
+
+
+def norm_apply(cfg: ArchConfig, p: PyTree, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---- feed-forward -------------------------------------------------------------
+
+
+def ff_defs(cfg: ArchConfig, kind: FF) -> PyTree:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = pdt(cfg)
+    if kind in (FF.SWIGLU, FF.GEGLU):
+        return {
+            "w_gate": ParamDef((d, f), dt, ("data", "model")),
+            "w_up": ParamDef((d, f), dt, ("data", "model")),
+            "w_down": ParamDef((f, d), dt, ("model", "data")),
+        }
+    if kind is FF.GELU:
+        return {
+            "w_up": ParamDef((d, f), dt, ("data", "model")),
+            "b_up": ParamDef((f,), dt, ("model",), "zeros"),
+            "w_down": ParamDef((f, d), dt, ("model", "data")),
+            "b_down": ParamDef((d,), dt, (None,), "zeros"),
+        }
+    raise ValueError(f"ff_defs: unsupported {kind}")
+
+
+def ff_apply(cfg: ArchConfig, kind: FF, p: PyTree, x: jax.Array) -> jax.Array:
+    """x: (..., d_model) -> (..., d_model)."""
+    if kind in (FF.SWIGLU, FF.GEGLU):
+        g = x @ p["w_gate"]
+        u = x @ p["w_up"]
+        act = jax.nn.silu(g) if kind is FF.SWIGLU else jax.nn.gelu(g)
+        return ((act * u) @ p["w_down"]).astype(x.dtype)
+    if kind is FF.GELU:
+        h = jax.nn.gelu(x @ p["w_up"] + p["b_up"].astype(x.dtype))
+        return (h @ p["w_down"] + p["b_down"].astype(x.dtype)).astype(x.dtype)
+    raise ValueError(f"ff_apply: unsupported {kind}")
+
+
+# ---- embeddings ----------------------------------------------------------------
+
+
+def embed_defs(cfg: ArchConfig) -> PyTree:
+    defs = {
+        "tok": ParamDef(
+            (cfg.padded_vocab, cfg.d_model), pdt(cfg), ("model", "data"),
+            init_scale=1.0,
+        )
+    }
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef(
+            (cfg.d_model, cfg.padded_vocab), pdt(cfg), ("data", "model")
+        )
+    return defs
+
+
+def embed_apply(cfg: ArchConfig, p: PyTree, tokens: jax.Array) -> jax.Array:
+    """tokens (B, S) int32 -> (B, S, d_model)."""
+    x = jnp.take(p["tok"], tokens, axis=0).astype(adt(cfg))
+    # gemma-style sqrt(d) scaling keeps tied-embedding logits sane
+    return x * jnp.asarray(jnp.sqrt(cfg.d_model), adt(cfg))
+
+
+def unembed_apply(cfg: ArchConfig, p: PyTree, x: jax.Array) -> jax.Array:
+    """x (..., d_model) -> logits (..., vocab) in fp32."""
+    w = p.get("unembed")
+    if w is None:
+        w = p["tok"].T
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+# ---- rotary position embeddings -------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, base: float) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (B, S) or (S,). Pairs are (even, odd)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, S, 1, half)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal table (fp32, (S, D))."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d_model)
+    tab = jnp.zeros((seq_len, d_model), jnp.float32)
+    tab = tab.at[:, 0::2].set(jnp.sin(angle))
+    tab = tab.at[:, 1::2].set(jnp.cos(angle))
+    return tab
+
+
+# ---- losses ---------------------------------------------------------------------
+
+
+def chunked_softmax_xent(
+    cfg: ArchConfig,
+    embed_params: PyTree,
+    hidden: jax.Array,
+    labels: jax.Array,
+    mask: Optional[jax.Array] = None,
+    chunk: int = 512,
+) -> jax.Array:
+    """Cross entropy without materializing (B, S, vocab).
+
+    Scans over sequence chunks; each chunk computes logits -> logsumexp ->
+    label logit, accumulating in fp32. The chunk body is rematerialized in
+    the backward pass (jax.checkpoint), so peak memory is O(B*chunk*V_shard)
+    rather than O(B*S*V) — this is what makes 256k-vocab training shapes fit
+    (DESIGN.md §5).
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    rem = s - n_chunks * chunk
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+
+    # padded vocab columns must not leak into the softmax normalizer
+    vpad = cfg.padded_vocab
+    col_valid = (jnp.arange(vpad) < cfg.vocab_size).astype(jnp.float32)
+    col_bias = (1.0 - col_valid) * (-1e30)
+
+    # hoist the unembedding out of the chunk scan: under FSDP-2D the table
+    # is 2D-sharded and must be gathered to compute logits — gathering once
+    # here instead of once per chunk cuts the loss's collective bytes by
+    # n_chunks x (gemma3's 262k-vocab table is 2GB: 16 gathers -> 1)
+    w_unembed = embed_params.get("unembed")
+    if w_unembed is None:
+        w_unembed = embed_params["tok"].T
+    try:
+        w_unembed = jax.lax.with_sharding_constraint(
+            w_unembed, jax.sharding.PartitionSpec(None, None)
+        )
+    except (ValueError, RuntimeError):
+        pass  # outside a mesh context (CPU smoke tests)
+
+    @jax.checkpoint
+    def chunk_loss(h_c, y_c, m_c):
+        logits = (h_c @ w_unembed.astype(h_c.dtype)).astype(jnp.float32)
+        logits = logits + col_bias
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, y_c[..., None].astype(jnp.int32), -1)[
+            ..., 0
+        ]
+        return jnp.sum((lse - lab) * m_c), jnp.sum(m_c)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h_c, y_c, m_c = xs
+        l, n = chunk_loss(h_c, y_c, m_c)
+        return (tot + l, cnt + n), None
+
+    hs = hidden[:, : n_chunks * chunk].reshape(b, n_chunks, chunk, d)
+    ys = labels[:, : n_chunks * chunk].reshape(b, n_chunks, chunk)
+    ms = mask[:, : n_chunks * chunk].reshape(b, n_chunks, chunk)
+    (tot, cnt), _ = jax.lax.scan(
+        body,
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs.swapaxes(0, 1), ys.swapaxes(0, 1), ms.swapaxes(0, 1)),
+    )
+    if rem:
+        l, n = chunk_loss(hidden[:, -rem:], labels[:, -rem:], mask[:, -rem:])
+        tot, cnt = tot + l, cnt + n
+    return tot / jnp.maximum(cnt, 1.0)

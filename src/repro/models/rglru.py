@@ -1,0 +1,132 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x -> {gelu gate branch, linear branch -> temporal conv(4) -> RG-LRU}
+-> elementwise product -> down projection.
+
+RG-LRU recurrence (fp32):
+    r_t = sigmoid(W_r xi_t + b_r)          # recurrence gate
+    i_t = sigmoid(W_i xi_t + b_i)          # input gate
+    a_t = exp(c * r_t * log(sigmoid(lam))) # per-channel decay, c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * xi_t)
+
+Training runs the recurrence as one ``jax.lax.associative_scan`` over the
+sequence (log-depth, parallel — the TPU-native adaptation of the paper's
+linear-scan CUDA kernel); decode carries (h, conv window) state.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.params import ParamDef
+
+PyTree = Any
+
+_CONV_W = 4
+_C_EXP = 8.0
+
+
+def rglru_defs(cfg: ArchConfig) -> PyTree:
+    d = cfg.d_model
+    dr = d  # d_rnn = d_model (Griffin uses ~d; keep square)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "w_gate": ParamDef((d, dr), dt, ("data", "model")),
+        "w_x": ParamDef((d, dr), dt, ("data", "model")),
+        "conv": ParamDef((_CONV_W, dr), dt, (None, "model"), init_scale=0.5),
+        "w_r": ParamDef((dr, dr), dt, ("data", "model")),
+        "b_r": ParamDef((dr,), jnp.float32, ("model",), "zeros"),
+        "w_i": ParamDef((dr, dr), dt, ("data", "model")),
+        "b_i": ParamDef((dr,), jnp.float32, ("model",), "zeros"),
+        "lam": ParamDef((dr,), jnp.float32, ("model",), "zeros"),
+        "w_out": ParamDef((dr, d), dt, ("model", "data")),
+    }
+
+
+def rglru_cache_defs(cfg: ArchConfig, batch: int, policy) -> PyTree:
+    dr = cfg.d_model
+    bax = policy.batch if batch > 1 else None
+    return {
+        "h": ParamDef((batch, dr), jnp.float32, (bax, "model"), "zeros"),
+        "conv_buf": ParamDef(
+            (batch, _CONV_W - 1, dr), jnp.dtype(cfg.activation_dtype),
+            (bax, None, "model"), "zeros",
+        ),
+    }
+
+
+def _gates(p: PyTree, xi: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(a_t, gated input) in fp32. xi: (..., dr)."""
+    xf = xi.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_r"].astype(jnp.float32) + p["b_r"])
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a_base = jax.nn.log_sigmoid(p["lam"] + 4.0)  # init ~= 0.982 decay
+    a = jnp.exp(_C_EXP * r * log_a_base)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-9)) * (i * xf)
+    return a, b
+
+
+def _conv(p: PyTree, xl: jax.Array, buf: Optional[jax.Array]) -> jax.Array:
+    """Causal temporal conv, width 4. xl: (B, S, dr)."""
+    w = p["conv"].astype(jnp.float32)  # (4, dr)
+    if buf is None:
+        pad = jnp.zeros((xl.shape[0], _CONV_W - 1, xl.shape[-1]), xl.dtype)
+    else:
+        pad = buf.astype(xl.dtype)
+    xp = jnp.concatenate([pad, xl], axis=1).astype(jnp.float32)
+    out = sum(
+        w[j][None, None, :] * xp[:, j : j + xl.shape[1]] for j in range(_CONV_W)
+    )
+    return out.astype(xl.dtype)
+
+
+def rglru_apply(
+    cfg: ArchConfig,
+    p: PyTree,
+    x: jax.Array,
+    cache: Optional[PyTree] = None,
+    decode: bool = False,
+    policy=None,  # rg-lru's associative scan needs no carry constraint
+) -> tuple[jax.Array, Optional[PyTree]]:
+    """x: (B, S, d). Returns (out, new_cache)."""
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype))
+    xl = x @ p["w_x"].astype(x.dtype)
+
+    if decode:
+        assert cache is not None and x.shape[1] == 1
+        xc = _conv(p, xl, cache["conv_buf"])  # (B, 1, dr)
+        a, b = _gates(p, xc[:, 0])
+        h = a * cache["h"] + b  # (B, dr) fp32
+        new_cache = {
+            "h": h,
+            "conv_buf": jnp.concatenate(
+                [cache["conv_buf"][:, 1:], xl], axis=1
+            ).astype(cache["conv_buf"].dtype),
+        }
+        y = h[:, None, :].astype(x.dtype)
+    else:
+        xc = _conv(p, xl, None)
+        a, b = _gates(p, xc)  # (B, S, dr) each
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        a_acc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        new_cache = None
+        if cache is not None:  # prefill: persist final state + conv tail
+            new_cache = {
+                "h": h[:, -1],
+                "conv_buf": xl[:, -(_CONV_W - 1) :].astype(
+                    cache["conv_buf"].dtype
+                ),
+            }
+        y = h.astype(x.dtype)
+
+    out = (gate * y) @ p["w_out"].astype(x.dtype)
+    return out.astype(x.dtype), new_cache

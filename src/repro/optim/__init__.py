@@ -1,0 +1,20 @@
+"""Optimizers (paper Table 1): SGD, SGD + Nesterov momentum, Adam.
+
+Deliberately optax-shaped but self-contained (the container is offline):
+``init(params) -> state``; ``update(grads, state, params) -> (updates, state)``
+where *updates are the deltas to be ADDED to the parameters* (u_t in the
+paper: x_t = x_{t-1} + u_t). Returning updates rather than new params is what
+lets the consistency layer (BSP/SSP/ISP) intercept and filter them.
+"""
+
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    OptState,
+    adam,
+    sgd,
+    nesterov,
+    make,
+    apply_updates,
+    global_norm,
+    clip_by_global_norm,
+)

@@ -1,0 +1,156 @@
+"""Data pipelines + optimizers + ParamDef system."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.data import synthetic
+from repro.data.tokens import TokenPipeline
+from repro.models import params as pdefs
+
+
+# ---- data ----------------------------------------------------------------------
+
+
+def test_token_pipeline_deterministic_and_shifted():
+    pipe = TokenPipeline(1024, 64, 4, seed=7)
+    b1 = pipe.next_batch(3)
+    b2 = pipe.next_batch(3)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    # labels are tokens shifted by one
+    assert b1["tokens"].shape == (4, 64)
+    assert b1["labels"].shape == (4, 64)
+    b3 = pipe.next_batch(4)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    assert int(b1["tokens"].max()) < 1024
+
+
+def test_criteo_dense_learnable():
+    cfg = synthetic.CriteoLikeConfig(n_samples=5000, seed=0)
+    x, y = synthetic.make_criteo_dense(cfg)
+    assert x.shape == (5000, 13)
+    assert x.min() >= 0.0 and x.max() <= 1.0 + 1e-6
+    assert 0.2 < y.mean() < 0.8  # not degenerate
+
+
+def test_criteo_sparse_layout():
+    cfg = synthetic.CriteoLikeConfig(n_samples=2000, hash_dim=5000, seed=0)
+    idx, val, y = synthetic.make_criteo_sparse(cfg)
+    assert idx.shape == (2000, 39)
+    assert int(idx.max()) < 5000
+    assert int(idx.min()) >= 0
+
+
+def test_movielens_zipf_and_scale():
+    cfg = synthetic.MovieLensLikeConfig(n_users=500, n_movies=800,
+                                        n_ratings=20_000, seed=0)
+    u, m, r = synthetic.make_movielens(cfg)
+    assert int(u.max()) < 500 and int(m.max()) < 800
+    assert r.min() >= 0.5 and r.max() <= 5.0
+    # Zipf: the most popular user appears much more than the median
+    counts = np.bincount(u)
+    assert counts.max() > 10 * max(np.median(counts[counts > 0]), 1)
+
+
+# ---- optimizers -----------------------------------------------------------------
+
+
+def _quad_target(dim=30, seed=0):
+    t = jax.random.normal(jax.random.PRNGKey(seed), (dim,))
+    return t, lambda x: 0.5 * jnp.sum(jnp.square(x - t))
+
+
+@pytest.mark.parametrize("name,lr", [("sgd", 0.3), ("nesterov", 0.1),
+                                     ("adam", 0.3)])
+def test_optimizers_converge_on_quadratic(name, lr):
+    target, loss = _quad_target()
+    opt = optim.make(name, lr)
+    x = jnp.zeros_like(target)
+    state = opt.init(x)
+    for _ in range(200):
+        g = jax.grad(loss)(x)
+        upd, state = opt.update(g, state, x)
+        x = optim.apply_updates(x, upd)
+    assert float(loss(x)) < 1e-3 * float(loss(jnp.zeros_like(target)))
+
+
+def test_adam_matches_reference_formula():
+    from repro.kernels import ref
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (64,))
+    g = jax.random.normal(jax.random.PRNGKey(1), (64,))
+    opt = optim.make("adam", 1e-2)
+    state = opt.init(x)
+    upd, state2 = opt.update(g, state, x)
+    want_p, want_mu, want_nu = ref.adam_ref(
+        x, g, jnp.zeros_like(x), jnp.zeros_like(x), 1e-2, step=1
+    )
+    np.testing.assert_allclose(np.asarray(x + upd[...]), np.asarray(want_p),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(state2.mu), np.asarray(want_mu),
+                               rtol=1e-6)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0), "b": jnp.full((4,), 10.0)}
+    clipped = optim.clip_by_global_norm(g, 1.0)
+    n = optim.global_norm(clipped)
+    assert float(n) == pytest.approx(1.0, rel=1e-5)
+    small = {"a": jnp.full((4,), 0.01), "b": jnp.full((4,), 0.01)}
+    un = optim.clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(un["a"]), np.asarray(small["a"]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(lr=st.floats(1e-4, 0.5), steps=st.integers(1, 50))
+def test_property_sgd_lr_decay_schedule(lr, steps):
+    """eta_t = eta / sqrt(t) (Theorem 1 schedule)."""
+    opt = optim.make("sgd", lr, lr_decay=True)
+    x = jnp.ones((4,))
+    state = opt.init(x)
+    for _ in range(steps - 1):
+        _, state = opt.update(jnp.zeros_like(x), state, x)
+    g = jnp.ones((4,))
+    upd, _ = opt.update(g, state, x)
+    want = -lr / np.sqrt(steps)
+    np.testing.assert_allclose(np.asarray(upd), want, rtol=1e-5)
+
+
+# ---- ParamDef system --------------------------------------------------------------
+
+
+def test_paramdef_three_views_consistent():
+    defs = {
+        "w": pdefs.ParamDef((8, 16), jnp.float32, ("data", "model")),
+        "b": pdefs.ParamDef((16,), jnp.bfloat16, ("model",), "zeros"),
+    }
+    structs = pdefs.to_struct(defs)
+    specs = pdefs.to_specs(defs)
+    arrs = pdefs.materialize(defs, jax.random.PRNGKey(0))
+    assert structs["w"].shape == arrs["w"].shape == (8, 16)
+    assert structs["b"].dtype == arrs["b"].dtype
+    from jax.sharding import PartitionSpec as P
+
+    assert specs["w"] == P("data", "model")
+    assert float(jnp.max(jnp.abs(arrs["b"]))) == 0.0
+
+
+def test_paramdef_stack_and_drop_axis():
+    d = pdefs.ParamDef((8, 16), jnp.float32, ("data", "model"))
+    s = pdefs.stack({"w": d}, 4)["w"]
+    assert s.shape == (4, 8, 16)
+    assert s.axes == (None, "data", "model")
+    dropped = pdefs.drop_axis({"w": d}, "data")["w"]
+    assert dropped.axes == (None, "model")
+
+
+def test_count_params_and_bytes():
+    defs = {"w": pdefs.ParamDef((10, 10), jnp.bfloat16),
+            "b": pdefs.ParamDef((10,), jnp.float32)}
+    assert pdefs.count_params(defs) == 110
+    assert pdefs.param_bytes(defs) == 10 * 10 * 2 + 10 * 4

@@ -1,0 +1,187 @@
+"""ISP significance filter: unit + property tests (paper §4.1, Theorem 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isp
+
+
+def _tree(key, scale=1.0):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w": scale * jax.random.normal(k1, (32, 16)),
+        "b": scale * jax.random.normal(k2, (16,)),
+        "nested": {"u": scale * jax.random.normal(k3, (8,))},
+    }
+
+
+def test_split_conservation_and_disjointness():
+    key = jax.random.PRNGKey(0)
+    acc = jax.random.normal(key, (1000,))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1000,))
+    sig, res, mask = isp.significance_split(acc, x, jnp.float32(0.5))
+    np.testing.assert_allclose(np.asarray(sig + res), np.asarray(acc))
+    # sig and res have disjoint support
+    assert float(jnp.sum(jnp.abs(sig) * jnp.abs(res))) == 0.0
+    # mask consistency
+    assert bool(jnp.all((sig != 0) == (mask & (acc != 0))))
+
+
+def test_threshold_schedule():
+    cfg = isp.ISPConfig(v=0.7, decay=True)
+    assert float(cfg.threshold(1)) == pytest.approx(0.7)
+    assert float(cfg.threshold(4)) == pytest.approx(0.35)
+    assert float(cfg.threshold(100)) == pytest.approx(0.07)
+    const = isp.ISPConfig(v=0.7, decay=False)
+    assert float(const.threshold(100)) == pytest.approx(0.7)
+
+
+def test_v0_is_bsp():
+    """Corollary 1: v = 0 communicates everything, residual stays zero."""
+    cfg = isp.ISPConfig(v=0.0, decay=False)
+    params = _tree(jax.random.PRNGKey(0))
+    state = isp.init_state(params)
+    for step in range(3):
+        upd = _tree(jax.random.PRNGKey(10 + step), scale=0.1)
+        sig, state, masks = isp.filter_update(cfg, state, upd, params)
+        for s, u in zip(jax.tree.leaves(sig), jax.tree.leaves(upd)):
+            np.testing.assert_allclose(np.asarray(s), np.asarray(u),
+                                       rtol=1e-6)
+        for r in jax.tree.leaves(state.residual):
+            assert float(jnp.max(jnp.abs(r))) == 0.0
+    assert float(isp.communicated_fraction(masks)) == pytest.approx(1.0)
+
+
+def test_residual_bound_invariant():
+    """After filtering, every residual entry satisfies |r| <= v_t * |x|
+    (+floor) — the Theorem 1 noisy-view bound witness."""
+    cfg = isp.ISPConfig(v=0.7, decay=True, absolute_floor=1e-8)
+    params = _tree(jax.random.PRNGKey(2))
+    state = isp.init_state(params)
+    for step in range(5):
+        upd = _tree(jax.random.PRNGKey(20 + step), scale=0.05)
+        v_t = float(cfg.threshold(state.step))
+        sig, state, _ = isp.filter_update(cfg, state, upd, params)
+        for r, x in zip(jax.tree.leaves(state.residual),
+                        jax.tree.leaves(params)):
+            bound = v_t * np.maximum(np.abs(np.asarray(x)), 1e-8)
+            assert np.all(np.abs(np.asarray(r)) <= bound + 1e-6)
+
+
+def test_mass_conservation_across_steps():
+    """Sum of all communicated + final residual == sum of all updates."""
+    cfg = isp.ISPConfig(v=1.5, decay=False)
+    params = _tree(jax.random.PRNGKey(3))
+    state = isp.init_state(params)
+    total_upd = jax.tree.map(jnp.zeros_like, params)
+    total_sig = jax.tree.map(jnp.zeros_like, params)
+    for step in range(7):
+        upd = _tree(jax.random.PRNGKey(30 + step), scale=0.1)
+        total_upd = jax.tree.map(jnp.add, total_upd, upd)
+        sig, state, _ = isp.filter_update(cfg, state, upd, params)
+        total_sig = jax.tree.map(jnp.add, total_sig, sig)
+    recon = jax.tree.map(jnp.add, total_sig, state.residual)
+    for a, b in zip(jax.tree.leaves(recon), jax.tree.leaves(total_upd)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_flush_empties_residual():
+    cfg = isp.ISPConfig(v=100.0, decay=False)  # filter everything
+    params = _tree(jax.random.PRNGKey(4))
+    state = isp.init_state(params)
+    upd = _tree(jax.random.PRNGKey(40), scale=0.1)
+    sig, state, _ = isp.filter_update(cfg, state, upd, params)
+    assert float(isp.communicated_fraction(
+        jax.tree.map(lambda s: s != 0, sig))) == 0.0
+    flushed, state2 = isp.flush(state)
+    for f, u in zip(jax.tree.leaves(flushed), jax.tree.leaves(upd)):
+        np.testing.assert_allclose(np.asarray(f), np.asarray(u), rtol=1e-6)
+    for r in jax.tree.leaves(state2.residual):
+        assert float(jnp.max(jnp.abs(r))) == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    v=st.floats(0.0, 5.0),
+    scale=st.floats(1e-3, 10.0),
+    n=st.integers(1, 300),
+    seed=st.integers(0, 2**16),
+)
+def test_property_split_partition(v, scale, n, seed):
+    """For any acc/x/v: sig+res == acc, supports disjoint, and the residual
+    obeys the significance bound."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    acc = scale * jax.random.normal(k1, (n,))
+    x = jax.random.normal(k2, (n,))
+    sig, res, mask = isp.significance_split(acc, x, jnp.float32(v))
+    np.testing.assert_allclose(np.asarray(sig + res), np.asarray(acc),
+                               rtol=1e-6, atol=1e-7)
+    denom = np.maximum(np.abs(np.asarray(x)), 1e-8)
+    assert np.all(np.abs(np.asarray(res)) <= v * denom * (1 + 1e-6) + 1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), v=st.floats(0.0, 2.0))
+def test_property_higher_threshold_sends_less(seed, v):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    acc = jax.random.normal(k1, (500,))
+    x = jax.random.normal(k2, (500,))
+    _, _, m1 = isp.significance_split(acc, x, jnp.float32(v))
+    _, _, m2 = isp.significance_split(acc, x, jnp.float32(v + 0.5))
+    assert int(jnp.sum(m2)) <= int(jnp.sum(m1))
+
+
+def test_isp_sgd_convergence_quadratic():
+    """ISP-filtered SGD on a convex quadratic converges (Theorem 1 spirit):
+    the average regret goes to ~0 and matches unfiltered SGD's optimum."""
+    dim = 50
+    key = jax.random.PRNGKey(0)
+    target = jax.random.normal(key, (dim,))
+
+    def loss(x):
+        return 0.5 * jnp.sum(jnp.square(x - target))
+
+    cfg = isp.ISPConfig(v=0.5, decay=True)
+    x = jnp.zeros((dim,))
+    state = isp.init_state(x)
+    eta0 = 0.3
+    for t in range(1, 400):
+        g = jax.grad(loss)(x)
+        u = -(eta0 / jnp.sqrt(t)) * g
+        sig, state, _ = isp.filter_update(cfg, state, u, x)
+        x = x + sig
+    assert float(loss(x)) < 1e-2 * float(loss(jnp.zeros((dim,))))
+
+
+def test_regret_sublinear_slope():
+    """Empirical O(sqrt(T)) check: cumulative regret on convex SGD grows
+    with slope < 1 in log-log (Theorem 1)."""
+    dim = 20
+    target = jax.random.normal(jax.random.PRNGKey(1), (dim,))
+
+    def f(x):
+        return 0.5 * jnp.sum(jnp.square(x - target))
+
+    cfg = isp.ISPConfig(v=0.7, decay=True)
+    x = jnp.zeros((dim,))
+    state = isp.init_state(x)
+    fstar = 0.0
+    regret = []
+    acc = 0.0
+    for t in range(1, 600):
+        g = jax.grad(f)(x)
+        u = -(0.3 / jnp.sqrt(t)) * g
+        sig, state, _ = isp.filter_update(cfg, state, u, x)
+        x = x + sig
+        acc += float(f(x)) - fstar
+        regret.append(acc)
+    # slope of log(regret) vs log(t) over the second half
+    ts = np.arange(1, 600)
+    half = len(ts) // 2
+    slope = np.polyfit(np.log(ts[half:]), np.log(np.asarray(regret)[half:]),
+                       1)[0]
+    assert slope < 0.9, f"regret slope {slope} not sublinear"

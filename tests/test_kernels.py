@@ -1,0 +1,235 @@
+"""Pallas kernel sweeps: shapes x dtypes, interpret=True vs ref.py oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.fused_adam import adam_sig_update, adam_update
+from repro.kernels.significance import significance_filter
+from repro.kernels import ops
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---- significance filter -------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(17,), (128,), (1000,), (256, 384),
+                                   (3, 5, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("v_t", [0.0, 0.3, 2.0])
+def test_significance_kernel_matches_ref(shape, dtype, v_t):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    u = _rand(k1, shape, dtype)
+    x = _rand(k2, shape, dtype)
+    r = _rand(k3, shape, dtype)
+    sig_k, res_k = significance_filter(
+        u, x, r, jnp.float32(v_t), interpret=True
+    )
+    sig_r, res_r = ref.significance_ref(u, x, r, v_t)
+    np.testing.assert_allclose(np.asarray(sig_k, np.float32),
+                               np.asarray(sig_r, np.float32), rtol=1e-6,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(res_k, np.float32),
+                               np.asarray(res_r, np.float32), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_significance_conservation():
+    """sig + res == r + u exactly (the filter never loses mass)."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    u = _rand(k1, (513,), jnp.float32)
+    x = _rand(k2, (513,), jnp.float32)
+    r = _rand(k3, (513,), jnp.float32)
+    sig, res = significance_filter(u, x, r, jnp.float32(0.5), interpret=True)
+    np.testing.assert_allclose(np.asarray(sig + res), np.asarray(r + u),
+                               rtol=1e-6)
+
+
+def test_significance_v0_sends_everything():
+    """v = 0 reduces ISP to BSP (Corollary 1): all mass is significant."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    u = _rand(k1, (200,), jnp.float32) + 0.1  # bounded away from 0
+    x = _rand(k2, (200,), jnp.float32)
+    r = jnp.zeros((200,), jnp.float32)
+    sig, res = significance_filter(u, x, r, jnp.float32(0.0), interpret=True)
+    np.testing.assert_allclose(np.asarray(sig), np.asarray(u), rtol=1e-6)
+    assert float(jnp.max(jnp.abs(res))) == 0.0
+
+
+# ---- flash attention --------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seq,dh", [(128, 128), (256, 128), (384, 256)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(seq, dh, causal, dtype):
+    b, h = 2, 2
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _rand(k1, (b, seq, h, dh), dtype)
+    k = _rand(k2, (b, seq, h, dh), dtype)
+    v = _rand(k3, (b, seq, h, dh), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.mha_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol,
+                               atol=tol)
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_attention_sliding_window(window):
+    b, h, seq, dh = 1, 2, 256, 128
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = _rand(k1, (b, seq, h, dh), jnp.float32)
+    k = _rand(k2, (b, seq, h, dh), jnp.float32)
+    v = _rand(k3, (b, seq, h, dh), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              interpret=True)
+    want = ref.mha_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_flash_attention_unpadded_head_dim():
+    """Dh=64 (whisper) exercises the wrapper's pad-to-128 path."""
+    b, h, seq, dh = 1, 2, 128, 64
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = _rand(k1, (b, seq, h, dh), jnp.float32)
+    k = _rand(k2, (b, seq, h, dh), jnp.float32)
+    v = _rand(k3, (b, seq, h, dh), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.mha_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_flash_attention_q_offset_decode_like():
+    """Sq < Skv with q_offset (chunked prefill against a longer cache)."""
+    b, h, dh = 1, 2, 128
+    sq, skv, off = 128, 384, 256
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = _rand(k1, (b, sq, h, dh), jnp.float32)
+    k = _rand(k2, (b, skv, h, dh), jnp.float32)
+    v = _rand(k3, (b, skv, h, dh), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, q_offset=off,
+                              interpret=True)
+    want = ref.mha_ref(q, k, v, causal=True, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+# ---- fused adam ---------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(100,), (256, 128), (33, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("step", [1, 100])
+def test_fused_adam_matches_ref(shape, dtype, step):
+    keys = jax.random.split(jax.random.PRNGKey(7), 4)
+    p = _rand(keys[0], shape, dtype)
+    g = _rand(keys[1], shape, dtype)
+    mu = _rand(keys[2], shape, jnp.float32)
+    nu = jnp.abs(_rand(keys[3], shape, jnp.float32))
+    got = adam_update(p, g, mu, nu, 1e-3, step, interpret=True)
+    want = ref.adam_ref(p, g, mu, nu, 1e-3, step=step)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=tol,
+                                   atol=tol)
+
+
+def test_fused_adam_weight_decay():
+    keys = jax.random.split(jax.random.PRNGKey(8), 4)
+    p = _rand(keys[0], (128,), jnp.float32)
+    g = _rand(keys[1], (128,), jnp.float32)
+    mu = jnp.zeros((128,), jnp.float32)
+    nu = jnp.zeros((128,), jnp.float32)
+    got = adam_update(p, g, mu, nu, 1e-2, 1, weight_decay=0.1,
+                      interpret=True)
+    want = ref.adam_ref(p, g, mu, nu, 1e-2, step=1, weight_decay=0.1)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(500,), (64, 200)])
+@pytest.mark.parametrize("v_t", [0.0, 0.7])
+def test_fused_adam_sig_matches_ref(shape, v_t):
+    keys = jax.random.split(jax.random.PRNGKey(9), 5)
+    p = _rand(keys[0], shape, jnp.float32)
+    g = _rand(keys[1], shape, jnp.float32)
+    mu = _rand(keys[2], shape, jnp.float32)
+    nu = jnp.abs(_rand(keys[3], shape, jnp.float32))
+    r = _rand(keys[4], shape, jnp.float32)
+    got = adam_sig_update(p, g, mu, nu, r, 1e-3, 5, v_t, interpret=True)
+    want = ref.adam_sig_ref(p, g, mu, nu, r, v_t, 1e-3, step=5)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_fused_adam_sig_equals_adam_then_filter():
+    """The fusion must equal optimizer-then-filter composition exactly."""
+    keys = jax.random.split(jax.random.PRNGKey(10), 5)
+    p = _rand(keys[0], (300,), jnp.float32)
+    g = _rand(keys[1], (300,), jnp.float32)
+    mu = _rand(keys[2], (300,), jnp.float32)
+    nu = jnp.abs(_rand(keys[3], (300,), jnp.float32))
+    r = _rand(keys[4], (300,), jnp.float32)
+    p2, mu2, nu2 = ref.adam_ref(p, g, mu, nu, 1e-3, step=3)
+    u = p2 - p  # the adam update
+    sig_a, res_a = ref.significance_ref(u, p, r, 0.5)
+    sig_b, mu_b, nu_b, res_b = ref.adam_sig_ref(p, g, mu, nu, r, 0.5, 1e-3,
+                                                step=3)
+    np.testing.assert_allclose(np.asarray(sig_a), np.asarray(sig_b),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(res_a), np.asarray(res_b),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(mu2), np.asarray(mu_b), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(nu2), np.asarray(nu_b), rtol=1e-6)
+
+
+# ---- fused sLSTM scan ---------------------------------------------------------
+
+
+def test_slstm_kernel_matches_module():
+    """The Pallas fused time scan must equal models.xlstm's sequential
+    reference cell-for-cell (zero initial state)."""
+    import dataclasses
+
+    from repro.kernels.slstm_scan import slstm_scan
+    from repro.models import xlstm as xl
+    from repro.models.config import ArchConfig, BlockSpec as BS, FF, Mixer, uniform_groups
+
+    cfg = ArchConfig(
+        name="slstm-test", family="ssm", d_model=64, n_heads=2,
+        n_kv_heads=2, d_ff=0, vocab_size=64,
+        groups=uniform_groups(BS(Mixer.SLSTM, FF.NONE), 1),
+        max_seq_len=64, lstm_proj_factor=1.0,
+    )
+    import jax as _jax
+    p = __import__("repro.models.params", fromlist=["materialize"]).materialize(
+        xl.slstm_defs(cfg), _jax.random.PRNGKey(0)
+    )
+    B, S, d = 2, 16, 64
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d), jnp.float32)
+    xg = (x @ p["w_in"].astype(x.dtype)).astype(jnp.float32) + p["b_in"]
+
+    # reference: the module's sequential scan
+    state = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(3))
+
+    def body(carry, xg_t):
+        return xl._slstm_cell(p, xg_t, carry)
+
+    _, hs_ref = jax.lax.scan(body, state, xg.swapaxes(0, 1))
+    hs_ref = hs_ref.swapaxes(0, 1)
+
+    hs_k = slstm_scan(xg, p["r"], n_heads=2, block_t=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(hs_k), np.asarray(hs_ref),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,126 @@
+"""Simulator + billing: platform orderings, cost model, paper sanity check."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import billing, consistency as cons
+from repro.core.isp import ISPConfig
+from repro.core.simulator import Platform, ServerlessSimulator, SimulatorConfig
+from repro.models import pmf
+
+
+def test_pricing_matches_table2():
+    """Paper Table 2 (us-east, Apr 2021)."""
+    # worker: 3.4e-5 $/s; C1.4x4 0.15 $/h; M1.2x16 0.17 $/h; B1.4x8 0.2 $/h
+    bill = billing.faas_cost([100.0], wall_s=100.0, n_redis=1)
+    assert bill.worker_cost == pytest.approx(3.4e-5 * 100.0)
+    infra_hourly = 0.15 + 0.17
+    assert bill.infra_cost == pytest.approx(infra_hourly / 3600 * 100.0)
+    # four PyTorch workers share one B1.4x8 VM
+    assert billing.iaas_cost(8, 3600.0) == pytest.approx(2 * 0.2)
+
+
+def test_faas_cheaper_when_scaled_in():
+    """Sub-second billing: dropping workers cuts the bill proportionally."""
+    full = billing.faas_cost([100.0] * 8, 100.0, 1).total
+    half = billing.faas_cost([100.0] * 4 + [50.0] * 4, 100.0, 1).total
+    assert half < full
+
+
+def _mini_pmf(P=4, platform=Platform.MLLESS, model=cons.Model.BSP,
+              tuner=None, steps=30, seed=0):
+    cfg = pmf.PMFConfig(n_users=200, n_movies=300, rank=8)
+    params = pmf.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    users = rng.integers(0, 200, 20_000).astype(np.int32)
+    movies = rng.integers(0, 300, 20_000).astype(np.int32)
+    ratings = rng.normal(3.0, 1.0, 20_000).astype(np.float32)
+
+    def batch_fn(step, n_workers):
+        r = np.random.default_rng(step)
+        idx = r.integers(0, 20_000, size=(n_workers, 256))
+        return pmf.RatingsBatch(
+            user=jnp.asarray(users[idx]), movie=jnp.asarray(movies[idx]),
+            rating=jnp.asarray(ratings[idx]),
+        )
+
+    sim = ServerlessSimulator(
+        SimulatorConfig(
+            n_workers=P, platform=platform,
+            consistency=cons.ConsistencyConfig(model=model,
+                                               isp=ISPConfig(v=0.7)),
+            sparse_model=True, seed=seed,
+        ),
+        grad_fn=partial(pmf.grad_fn, cfg),
+        optimizer=optim.make("nesterov", 0.05),
+        params=params,
+        flops_per_sample=6 * 8 * 3,
+        update_nnz_fn=lambda b: 2 * 8 * b,
+    )
+    return sim.run(batch_fn, 256, steps, tuner=tuner)
+
+
+def test_platform_step_time_ordering():
+    """Per modelled step: PyWren (object-store exchange) slowest; the
+    specialized platforms faster."""
+    t = {}
+    for plat in (Platform.MLLESS, Platform.SERVERFUL, Platform.PYWREN):
+        res = _mini_pmf(platform=plat, steps=10)
+        t[plat] = res.total_wall_s / len(res.records)
+    assert t[Platform.PYWREN] > t[Platform.MLLESS]
+    assert t[Platform.PYWREN] > t[Platform.SERVERFUL]
+
+
+def test_isp_reduces_comm_bytes():
+    bsp = _mini_pmf(model=cons.Model.BSP, steps=15)
+    isp = _mini_pmf(model=cons.Model.ISP, steps=15)
+    bsp_bytes = sum(r.comm_bytes for r in bsp.records)
+    isp_bytes = sum(r.comm_bytes for r in isp.records)
+    assert isp_bytes < 0.7 * bsp_bytes, (isp_bytes, bsp_bytes)
+
+
+def test_convergence_identical_across_platforms_fixed_seed():
+    """The paper's §6.1 sanity check: same seed -> identical per-step loss
+    on every platform (timing differs, optimization does not)."""
+    a = _mini_pmf(platform=Platform.MLLESS, steps=8)
+    b = _mini_pmf(platform=Platform.SERVERFUL, steps=8)
+    la = [r.loss for r in a.records]
+    lb = [r.loss for r in b.records]
+    np.testing.assert_allclose(la, lb, rtol=1e-5)
+
+
+def test_tuner_reduces_cost():
+    from repro.core.autotuner import AutoTunerConfig, ScaleInAutoTuner
+
+    fixed = _mini_pmf(model=cons.Model.ISP, steps=60)
+    tuned = _mini_pmf(
+        model=cons.Model.ISP, steps=60,
+        tuner=ScaleInAutoTuner(
+            AutoTunerConfig(sched_interval_s=0.5, delta_s=0.25,
+                            min_points_for_fit=5), 4),
+    )
+    assert tuned.summary["final_workers"] <= fixed.summary["final_workers"]
+    if tuned.summary["final_workers"] < fixed.summary["final_workers"]:
+        assert tuned.total_cost < fixed.total_cost
+
+
+def test_eviction_masks_worker_inert():
+    res = _mini_pmf(steps=5)
+    assert res.summary["final_workers"] == 4
+    assert len(res.worker_lifetimes_s) == 4
+    assert all(lt > 0 for lt in res.worker_lifetimes_s)
+
+
+def test_comm_model_monotonicity():
+    cm = billing.CommModel()
+    t1 = cm.indirect_exchange_time(1e6, 4, 1)
+    t2 = cm.indirect_exchange_time(1e6, 8, 1)
+    t3 = cm.indirect_exchange_time(1e6, 8, 2)
+    assert t2 > t1  # more workers -> more exchange through one store
+    assert t3 < t2  # sharding the store helps
+    assert cm.allreduce_time(1e6, 8) < cm.indirect_exchange_time(1e6, 8, 1)

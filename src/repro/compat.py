@@ -1,0 +1,29 @@
+"""jax version-compat surface (0.4.x <-> 0.5+), one place only.
+
+The repo targets the jax>=0.5 spellings; this module backfills them on
+0.4.x so the same code runs on both. Mesh axis_types compat lives in
+``launch.mesh`` (it must not import jax device state at module load).
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5/0.6: top-level export, axis_names/check_vma kwargs
+    shard_map = jax.shard_map
+except AttributeError:  # jax 0.4.x: experimental home, auto/check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+
+    def shard_map(f, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None, **kw):
+        if axis_names is not None:
+            # 0.4 spells partial-manual as the COMPLEMENT: the axes that
+            # stay automatic
+            kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        return _shard_map_04(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+
+__all__ = ["shard_map"]

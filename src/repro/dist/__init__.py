@@ -1,0 +1,16 @@
+"""SPMD "pod" distribution layer: compressed collectives + elastic re-meshing.
+
+MLLess's two contributions live in ``core`` in substrate-agnostic form (the
+ISP significance filter, the scale-in auto-tuner). This package adapts them
+to the accelerator runtime:
+
+* ``dist.compression`` — the error-feedback ISP exchange across a leading
+  pod axis, with scheme-dependent wire encodings (dense / topk / bitmap).
+* ``dist.elastic``     — pool-size transitions: the auto-tuner's eviction
+  decisions mapped onto DP-axis re-meshing, model-averaging reintegration,
+  and the weak-scaling batch contract B_g = P * B.
+"""
+
+from repro.dist import compression, elastic
+
+__all__ = ["compression", "elastic"]

@@ -92,17 +92,33 @@ def dataclasses_replace_policy_strip_pod(lm):
     return dataclasses.replace(lm, policy=type(pol)(**fields))
 
 
+_ISP_SCHEMES = {"isp-dense": "dense", "isp-topk": "topk",
+                "isp-bitmap": "bitmap"}
+
+
 def lower_cell(
     arch_name: str,
     shape_name: str,
     multi_pod: bool,
     mode: str = "bsp",
     budget: float = 0.01,
+    n_pods: Optional[int] = None,
 ):
-    """Returns (lowered, compiled, cell, mesh). Raises on inapplicable."""
+    """Returns (lowered, compiled, cell, mesh). Raises on inapplicable.
+
+    ``n_pods`` overrides the production mesh with an elastic pool size
+    (``dist.elastic.mesh_shape_for`` at 16x16 chips per pod) — the shape a
+    scaled-in job re-lowers for after an auto-tuner eviction.
+    """
     from jax.sharding import PartitionSpec as P
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if n_pods is not None:
+        from repro.dist.elastic import make_mesh_for
+
+        mesh = make_mesh_for(n_pods, data=16, model=16)
+        multi_pod = n_pods > 1
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     cell = build_cell(arch_name, shape_name, mesh)
     lm = cell.lm
     optimizer = optim.make("adam", 1e-3)
@@ -130,7 +146,7 @@ def lower_cell(
         elif mode.startswith("isp"):
             assert multi_pod, "ISP mode compresses across the pod axis"
             n_pods = mesh.shape["pod"]
-            scheme = "topk" if mode == "isp-topk" else "dense"
+            scheme = _ISP_SCHEMES.get(mode, "dense")
             # inside shard_map over 'pod' the pod axis is MANUAL — the
             # model's sharding constraints must not mention it
             lm_inner = dataclasses_replace_policy_strip_pod(lm)
@@ -216,6 +232,8 @@ def lower_cell(
 def analyze(compiled, cell, mesh, mode: str) -> dict:
     mem = compiled.memory_analysis()
     xla_cost = compiled.cost_analysis()
+    if isinstance(xla_cost, (list, tuple)):  # jax 0.4.x returns [dict]
+        xla_cost = xla_cost[0] if xla_cost else {}
     hlo = compiled.as_text()
     # trip-count-aware analysis: XLA's cost_analysis visits while bodies
     # ONCE, undercounting every scanned layer (launch/hloanalysis.py)
@@ -280,11 +298,15 @@ def _load_hlo(out_dir: str, cell_id: str) -> Optional[str]:
 
 
 def reanalyze_cell(
-    arch_name: str, shape_name: str, multi_pod: bool, mode: str, out_dir: str
+    arch_name: str, shape_name: str, multi_pod: bool, mode: str,
+    out_dir: str, n_pods: Optional[int] = None,
 ) -> Optional[dict]:
     """Recompute the roofline record from the CACHED optimized HLO — no
     recompilation (the analyzer evolves faster than the compiler does)."""
-    mesh_tag = "multi" if multi_pod else "single"
+    mesh_tag = (
+        f"pods{n_pods}" if n_pods is not None
+        else ("multi" if multi_pod else "single")
+    )
     cell_id = f"{arch_name}__{shape_name}__{mesh_tag}__{mode}"
     out_path = os.path.join(out_dir, cell_id + ".json")
     hlo = _load_hlo(out_dir, cell_id)
@@ -294,7 +316,12 @@ def reanalyze_cell(
         old = json.load(f)
     if old.get("status") != "ok":
         return old
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if n_pods is not None:
+        from repro.dist.elastic import make_mesh_for
+
+        mesh = make_mesh_for(n_pods, data=16, model=16)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
     cpp = mesh.devices.size // n_pods if n_pods > 1 else 0
     cost = analyze_hlo(hlo, chips_per_pod=cpp)
@@ -336,8 +363,12 @@ def run_cell(
     out_dir: str,
     budget: float = 0.01,
     force: bool = False,
+    n_pods: Optional[int] = None,
 ) -> Optional[dict]:
-    mesh_tag = "multi" if multi_pod else "single"
+    mesh_tag = (
+        f"pods{n_pods}" if n_pods is not None
+        else ("multi" if multi_pod else "single")
+    )
     cell_id = f"{arch_name}__{shape_name}__{mesh_tag}__{mode}"
     os.makedirs(out_dir, exist_ok=True)
     out_path = os.path.join(out_dir, cell_id + ".json")
@@ -361,7 +392,7 @@ def run_cell(
     print(f"[lower+compile] {cell_id} ...", flush=True)
     try:
         lowered, compiled, cell, mesh, timings = lower_cell(
-            arch_name, shape_name, multi_pod, mode, budget
+            arch_name, shape_name, multi_pod, mode, budget, n_pods
         )
         _save_hlo(out_dir, cell_id, compiled.as_text())
         rec = analyze(compiled, cell, mesh, mode)
@@ -398,8 +429,11 @@ def main() -> None:
     ap.add_argument("--mesh", choices=("single", "multi", "both"),
                     default="single")
     ap.add_argument("--mode", default="bsp",
-                    choices=("bsp", "isp-dense", "isp-topk"))
+                    choices=("bsp",) + tuple(_ISP_SCHEMES))
     ap.add_argument("--budget", type=float, default=0.01)
+    ap.add_argument("--pods", type=int, default=None,
+                    help="elastic pool size (overrides --mesh; 16x16 "
+                         "chips per pod, pod axis dropped at 1)")
     ap.add_argument("--all", action="store_true",
                     help="run every applicable (arch x shape) cell")
     ap.add_argument("--out", default="results/dryrun")
@@ -424,7 +458,8 @@ def main() -> None:
     for a, s in cells:
         for mp in meshes:
             if args.reanalyze:
-                rec = reanalyze_cell(a, s, mp, args.mode, args.out)
+                rec = reanalyze_cell(a, s, mp, args.mode, args.out,
+                                     args.pods)
                 if rec is None:
                     print(f"[no cached hlo] {a} {s}")
                     continue
@@ -432,7 +467,7 @@ def main() -> None:
                 n_ok += st == "ok"
                 continue
             rec = run_cell(a, s, mp, args.mode, args.out, args.budget,
-                           args.force)
+                           args.force, args.pods)
             st = (rec or {}).get("status", "?")
             if st == "ok":
                 n_ok += 1

@@ -14,10 +14,32 @@ Mesh axes:
 
 from __future__ import annotations
 
+import enum
 from typing import Optional
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit-sharding axis types
+    from jax.sharding import AxisType
+
+    _HAS_AXIS_TYPES = True
+except ImportError:  # jax 0.4.x: every mesh axis is implicitly Auto
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    _HAS_AXIS_TYPES = False
+
+
+def _mk(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """jax.make_mesh across the 0.4/0.5 axis_types API change."""
+    if _HAS_AXIS_TYPES:
+        return jax.make_mesh(
+            shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -25,20 +47,23 @@ def make_production_mesh(*, multi_pod: bool = False):
     2x16x16 two-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mk(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Arbitrary mesh (elastic pool sizes, CPU smoke meshes)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mk(shape, axes)
 
 
 def make_elastic_mesh(n_pods: int, data: int = 16, model: int = 16):
     """Mesh for a scaled-in pool of ``n_pods`` pods (the auto-tuner's
-    transition target). n_pods == 1 drops the pod axis entirely."""
-    if n_pods == 1:
-        return make_mesh((data, model), ("data", "model"))
-    return make_mesh((n_pods, data, model), ("pod", "data", "model"))
+    transition target). n_pods == 1 drops the pod axis entirely; the
+    shape/axes schedule is owned by ``dist.elastic.mesh_shape_for``."""
+    from repro.dist.elastic import mesh_axes_for, mesh_shape_for
+
+    return make_mesh(
+        mesh_shape_for(n_pods, data, model), mesh_axes_for(n_pods)
+    )
 
 
 def has_axis(mesh, name: str) -> bool:

@@ -109,7 +109,9 @@ def make_isp_train_step(
             pod_fn, in_axes=(None, 0, 0, 0)
         )(params, opt_pod, res_pod, batch_p)
 
-        if comp_cfg.scheme == "dense":
+        if comp_cfg.scheme in ("dense", "bitmap"):
+            # bitmap is a wire ENCODING of the same numbers (mask + packed
+            # values); the lowered collective is the dense sum either way
             combined = jax.tree.map(lambda s: jnp.sum(s, axis=0), sig_pod)
         else:  # topk: compact exchange over the pod dim
             combined = _topk_combine(comp_cfg, sig_pod, n_pods)
@@ -123,41 +125,12 @@ def make_isp_train_step(
 
 
 def _topk_combine(comp_cfg: CompressionConfig, sig_pod, n_pods: int):
-    """Row-top-k compact exchange, GSPMD-auto and sharding-preserving.
-
-    Per leaf: (n_pods, *shape) pod-sharded significant updates -> per-pod
-    top-k per LAST-AXIS ROW (values, indices) -> scan over pods slicing the
-    compact arrays (only compact bytes cross 'pod') -> put_along_axis into
-    a dense accumulator that keeps the leaf's natural leading-dim sharding.
-
-    Two refuted formulations led here (EXPERIMENTS.md §Perf c2/c3): a
-    replicated (nb, block) accumulator makes GSPMD reshard the dense tensor
-    per pod, and ANY full flatten (`reshape(n_pods, -1)`) collapses the 2D
-    parameter sharding, which GSPMD resolves by gathering the entire f32
-    update across pods (51 GB/chip measured). Rows along the original last
-    axis preserve every sharded dim.
+    """Row-top-k compact exchange — canonical form in ``dist.compression``
+    (``topk_combine``); kept under this name for the dry-run/test contract.
     """
+    from repro.dist.compression import topk_combine
 
-    def leaf(s):
-        last = s.shape[-1]
-        kk = max(1, min(last, int(round(last * comp_cfg.budget)) or 1))
-        _, idx = jax.lax.top_k(jnp.abs(s), kk)  # (P, *lead, kk)
-        vals = jnp.take_along_axis(s, idx, axis=-1)
-
-        def add_pod(acc, pi):
-            v = jax.lax.dynamic_index_in_dim(vals, pi, 0, keepdims=False)
-            i = jax.lax.dynamic_index_in_dim(idx, pi, 0, keepdims=False)
-            upd = jnp.put_along_axis(
-                jnp.zeros_like(acc), i, v, axis=-1, inplace=False
-            )
-            return acc + upd, None
-
-        acc, _ = jax.lax.scan(
-            add_pod, jnp.zeros(s.shape[1:], s.dtype), jnp.arange(n_pods)
-        )
-        return acc
-
-    return jax.tree.map(leaf, sig_pod)
+    return topk_combine(comp_cfg, sig_pod, n_pods)
 
 
 def Pspec_replicated() -> P:

@@ -39,6 +39,12 @@ from repro.core.autotuner import AutoTunerConfig, ScaleInAutoTuner
 from repro.core.billing import CommModel, faas_cost
 from repro.core.isp import ISPConfig, communicated_fraction
 from repro.data.tokens import TokenPipeline
+from repro.dist import elastic as dist_elastic
+from repro.dist.compression import (
+    CompressionConfig,
+    apply_combined,
+    isp_compressed_step,
+)
 from repro.models.config import ArchConfig, BlockSpec, FF, Mixer, uniform_groups
 from repro.models.transformer import LM
 from repro.optim import apply_updates, clip_by_global_norm
@@ -123,6 +129,60 @@ def make_step(lm: LM, optimizer, isp: Optional[ISPConfig], clip: float = 1.0):
     return jax.jit(step_fn, donate_argnums=(0, 1, 2))
 
 
+def lift_pod(tree: PyTree, n_pods: int) -> PyTree:
+    """Stack a shared tree into per-pod state: every leaf gains a leading
+    (n_pods,) dim. Used for the divergent optimizer moments and residuals
+    of the pod path (the paper's per-worker state)."""
+    return jax.tree.map(lambda x: jnp.repeat(x[None], n_pods, axis=0), tree)
+
+
+def make_pod_step(
+    lm: LM,
+    optimizer,
+    isp: ISPConfig,
+    comp: CompressionConfig,
+    n_pods: int,
+    clip: float = 1.0,
+):
+    """One jitted ISP-pod train step (DESIGN.md §2) for a fixed pool size.
+
+    The global batch arrives as (P*B, ...) and is reshaped so dim 0 is the
+    pod axis; each pod runs its own optimizer on its own shard (divergent
+    moments), then the error-feedback compressed exchange
+    (``dist.compression.isp_compressed_step``) combines the significant
+    parts into the shared parameters. This is the single-host vmap
+    analogue of the GSPMD formulation in ``launch.steps``; on a real
+    multi-pod mesh the leading dim shards over 'pod'.
+    """
+
+    def step_fn(params, opt_pod, res_pod, batch):
+        batch_p = jax.tree.map(
+            lambda x: x.reshape((n_pods, x.shape[0] // n_pods) + x.shape[1:]),
+            batch,
+        )
+
+        def pod_fn(opt_state, b):
+            (loss, metrics), grads = jax.value_and_grad(
+                lm.train_loss, has_aux=True
+            )(params, b)
+            if clip:
+                grads = clip_by_global_norm(grads, clip)
+            updates, opt_state = optimizer.update(grads, opt_state, params)
+            return updates, opt_state, loss
+
+        updates, opt_pod, losses = jax.vmap(pod_fn)(opt_pod, batch_p)
+        v_t = isp.threshold(opt_pod.step[0])
+        combined, res_pod, stats = isp_compressed_step(
+            comp, updates, params, res_pod, v_t,
+            floor=isp.absolute_floor,
+        )
+        params = apply_combined(params, combined)
+        return (params, opt_pod, res_pod, jnp.mean(losses),
+                stats["sent_fraction"])
+
+    return jax.jit(step_fn, donate_argnums=(0, 1, 2))
+
+
 def save_checkpoint(d: str, st: TrainState) -> str:
     return ckpt.save(
         d, st.step,
@@ -151,23 +211,48 @@ def train(args) -> dict:
     lm = LM(cfg)
     key = jax.random.PRNGKey(args.seed)
     optimizer = optim.make(args.optimizer, args.lr)
-    isp = ISPConfig(v=args.isp_v) if args.mode == "isp" else None
+    pod_mode = args.mode == "isp-pod"
+    isp = ISPConfig(v=args.isp_v) if args.mode.startswith("isp") else None
+    comp = (
+        CompressionConfig(
+            scheme=getattr(args, "scheme", "dense"),
+            budget=getattr(args, "budget", 0.01),
+        )
+        if pod_mode
+        else None
+    )
 
     params = lm.init(key)
     n_params = lm.n_params()
     print(f"arch={cfg.name} params={n_params:,} mode={args.mode} "
           f"workers={args.workers}")
 
-    st = TrainState(
-        params=params,
-        opt_state=optimizer.init(params),
-        residual=jax.tree.map(jnp.zeros_like, params),
-        step=0,
-        pool=args.workers,
-    )
+    def fresh_state(pool: int) -> TrainState:
+        opt0 = optimizer.init(params)
+        res0 = jax.tree.map(jnp.zeros_like, params)
+        if pod_mode:  # per-pod divergent optimizer moments + residuals
+            opt0, res0 = lift_pod(opt0, pool), lift_pod(res0, pool)
+        return TrainState(params=params, opt_state=opt0, residual=res0,
+                          step=0, pool=pool)
+
+    st = fresh_state(args.workers)
     if args.restore and args.checkpoint_dir:
+        step = ckpt.latest_step(args.checkpoint_dir)
+        if step is not None and pod_mode:
+            # per-pod state shapes depend on the checkpointed pool size —
+            # rebuild the restore template at that pool first
+            pool = ckpt.manifest_extra(args.checkpoint_dir, step).get(
+                "pool", st.pool
+            )
+            st = fresh_state(pool)
         st = restore_checkpoint(args.checkpoint_dir, st)
         print(f"restored step={st.step} pool={st.pool}")
+
+    # the weak-scaling contract B_g = P * B lives in the elastic plan
+    plan = dist_elastic.ElasticPlan(
+        initial_pods=max(args.workers, st.pool),
+        per_pod_batch=args.per_worker_batch,
+    )
 
     tuner = None
     if args.autotune:
@@ -180,14 +265,19 @@ def train(args) -> dict:
             st.pool,
         )
 
-    step_fn = make_step(lm, optimizer, isp)
+    def build_step(pool: int):
+        if pod_mode:
+            return make_pod_step(lm, optimizer, isp, comp, pool)
+        return make_step(lm, optimizer, isp)
+
+    step_fn = build_step(st.pool)
     history = []
     worker_seconds = 0.0
     t_job0 = time.time()
 
     while st.step < args.steps:
         # weak scaling (paper §3.2): global batch = pool * per-worker batch
-        gb = st.pool * args.per_worker_batch
+        gb = plan.global_batch(st.pool)
         pipe = TokenPipeline(cfg.vocab_size, args.seq, gb, seed=args.seed)
         batch = pipe.next_batch(st.step)
         t0 = time.time()
@@ -212,19 +302,52 @@ def train(args) -> dict:
         if tuner is not None:
             tuner.observe(st.step, loss, dt)
             if tuner.decide().remove_worker and st.pool > 1:
-                # elastic scale-in: checkpoint -> shrink pool -> re-lower.
-                # ISP: flush the residual into the params first (the paper's
-                # leaving-worker model-averaging reintegration, error-
-                # feedback form — no update mass is lost across the re-mesh)
-                if isp is not None:
-                    st.params = apply_updates(st.params, st.residual)
-                    st.residual = jax.tree.map(jnp.zeros_like, st.residual)
-                if args.checkpoint_dir:
-                    save_checkpoint(args.checkpoint_dir, st)
-                st.pool -= 1
-                step_fn = make_step(lm, optimizer, isp)  # re-lower
+                # elastic scale-in: reintegrate -> checkpoint -> re-lower.
+                if pod_mode:
+                    # dist.elastic owns the transition: the evicted pod's
+                    # residual is flushed into the shared params (error-
+                    # feedback model averaging) and its optimizer/residual
+                    # slices are dropped
+                    tr = dist_elastic.plan_transition(
+                        plan, st.pool, st.pool - 1
+                    )
+                    st.params, st.opt_state, st.residual = (
+                        dist_elastic.apply_transition(
+                            tr, st.params, st.opt_state, st.residual
+                        )
+                    )
+                    st.pool = tr.new_pods
+                    if args.checkpoint_dir:
+                        save_checkpoint(args.checkpoint_dir, st)
+                        # the transition IS a restore: reload under the new
+                        # pool's mesh whenever this host can build it
+                        if jax.device_count() >= int(
+                            np.prod(tr.new_mesh_shape)
+                        ):
+                            tree = {"params": st.params, "opt": st.opt_state,
+                                    "residual": st.residual}
+                            out = dist_elastic.resharded_restore(
+                                args.checkpoint_dir, st.step, tree,
+                                tr.new_pods,
+                            )
+                            st.params = out["params"]
+                            st.opt_state = out["opt"]
+                            st.residual = out["residual"]
+                else:
+                    # ISP: flush the residual into the params first (the
+                    # paper's leaving-worker model-averaging reintegration,
+                    # error-feedback form — no update mass is lost)
+                    if isp is not None:
+                        st.params = apply_updates(st.params, st.residual)
+                        st.residual = jax.tree.map(
+                            jnp.zeros_like, st.residual
+                        )
+                    if args.checkpoint_dir:
+                        save_checkpoint(args.checkpoint_dir, st)
+                    st.pool -= 1
+                step_fn = build_step(st.pool)  # re-lower
                 print(f"  [autotuner] scale-in -> pool={st.pool} "
-                      f"(global batch {st.pool * args.per_worker_batch})")
+                      f"(global batch {plan.global_batch(st.pool)})")
 
     wall = time.time() - t_job0
     bill = faas_cost([worker_seconds], wall, n_redis=1)
@@ -259,8 +382,14 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--per-worker-batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--mode", choices=("bsp", "isp"), default="bsp")
+    ap.add_argument("--mode", choices=("bsp", "isp", "isp-pod"),
+                    default="bsp")
     ap.add_argument("--isp-v", type=float, default=0.7)
+    ap.add_argument("--scheme", choices=("dense", "topk", "bitmap"),
+                    default="dense",
+                    help="isp-pod wire encoding (dist.compression)")
+    ap.add_argument("--budget", type=float, default=0.01,
+                    help="topk fraction kept per block")
     ap.add_argument("--optimizer", default="adam",
                     choices=("adam", "sgd", "nesterov"))
     ap.add_argument("--lr", type=float, default=3e-4)

@@ -29,6 +29,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
+
 from repro.models.config import ArchConfig
 from repro.models.params import ParamDef
 
@@ -301,7 +303,7 @@ def slstm_apply(
             # every step chip-local by construction.
             from jax.sharding import PartitionSpec as P
 
-            state, hs = jax.shard_map(
+            state, hs = shard_map(
                 run_scan,
                 mesh=mesh,
                 in_specs=(

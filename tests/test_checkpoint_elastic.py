@@ -110,10 +110,11 @@ def test_elastic_restore_with_resharding(tmp_path):
     — restore_with_sharding -> device_put per leaf — is the real one."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.launch.mesh import make_mesh
+
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     ckpt.save(str(tmp_path), 2, tree)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     shardings = {"w": NamedSharding(mesh, P("data", None))}
     out = ckpt.restore_with_sharding(str(tmp_path), 2, tree, shardings)
     np.testing.assert_array_equal(np.asarray(out["w"]),

@@ -1,0 +1,140 @@
+"""dist.elastic: transition sequences, batch contract, reintegration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist import elastic
+
+
+# -- plan + mesh schedule -----------------------------------------------------
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        elastic.ElasticPlan(initial_pods=0, per_pod_batch=4)
+    with pytest.raises(ValueError):
+        elastic.ElasticPlan(initial_pods=4, per_pod_batch=4, min_pods=5)
+    plan = elastic.ElasticPlan(initial_pods=4, per_pod_batch=4, min_pods=2)
+    with pytest.raises(ValueError):
+        plan.global_batch(1)  # below min_pods
+    with pytest.raises(ValueError):
+        plan.global_batch(8)  # above initial
+
+
+def test_monotone_shrink_8_to_1():
+    """The full 8 -> 1 schedule: batch contract B_g = P*B at every step,
+    mesh shapes match mesh_shape_for, pod axis dropped exactly at P=1."""
+    plan = elastic.ElasticPlan(
+        initial_pods=8, per_pod_batch=4, data=2, model=2
+    )
+    sizes = [8, 7, 6, 5, 4, 3, 2, 1]
+    trs = elastic.transition_schedule(plan, sizes)
+    assert len(trs) == 7
+    for tr, (old, new) in zip(trs, zip(sizes[:-1], sizes[1:])):
+        assert (tr.old_pods, tr.new_pods) == (old, new)
+        assert tr.old_global_batch == old * 4
+        assert tr.new_global_batch == new * 4
+        assert tr.old_mesh_shape == elastic.mesh_shape_for(old, 2, 2)
+        assert tr.new_mesh_shape == elastic.mesh_shape_for(new, 2, 2)
+        assert tr.evicted == tuple(range(new, old))
+    assert trs[-1].new_mesh_shape == (2, 2)  # pod axis gone at P=1
+    assert elastic.mesh_axes_for(1) == ("data", "model")
+    assert elastic.mesh_axes_for(2) == ("pod", "data", "model")
+
+
+def test_transition_schedule_rejects_bad_start():
+    plan = elastic.ElasticPlan(initial_pods=4, per_pod_batch=2)
+    with pytest.raises(ValueError):
+        elastic.transition_schedule(plan, [3, 2, 1])
+    with pytest.raises(ValueError):
+        elastic.plan_transition(plan, 2, 2)  # must strictly shrink
+    with pytest.raises(ValueError):
+        elastic.plan_transition(plan, 2, 3)  # never grows
+
+
+def test_mesh_shape_for_matches_checkpoint_elastic_contract():
+    assert elastic.mesh_shape_for(4, data=2, model=2) == (4, 2, 2)
+    assert elastic.mesh_shape_for(2, data=2, model=2) == (2, 2, 2)
+    assert elastic.mesh_shape_for(1, data=2, model=2) == (2, 2)
+    with pytest.raises(ValueError):
+        elastic.mesh_shape_for(0)
+
+
+# -- reintegration ------------------------------------------------------------
+
+
+def test_replica_reintegration_preserves_parameter_mean():
+    """Mean-preserving model averaging: after the evicted replica is pulled
+    into the survivors with weight 1/P, the pool-mean parameter vector is
+    exactly unchanged."""
+    P, evicted = 5, 3
+    reps = {"w": jax.random.normal(jax.random.PRNGKey(0), (P, 6, 4)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (P, 9))}
+    mask = jnp.asarray([True] * P).at[evicted].set(False)
+    out = elastic.reintegrate_replicas(reps, evicted, mask)
+    for k in reps:
+        old_mean = np.asarray(jnp.mean(reps[k], axis=0))
+        active = np.asarray(out[k])[np.asarray(mask)]
+        np.testing.assert_allclose(active.mean(0), old_mean,
+                                   rtol=1e-5, atol=1e-6)
+        # the evicted slot is untouched (inert)
+        np.testing.assert_array_equal(np.asarray(out[k][evicted]),
+                                      np.asarray(reps[k][evicted]))
+
+
+def test_apply_transition_conserves_update_mass():
+    """Error-feedback reintegration: params' + surviving residual mass ==
+    params + all residual mass; the evicted pods' unsent updates are
+    flushed, not dropped."""
+    plan = elastic.ElasticPlan(initial_pods=4, per_pod_batch=2)
+    tr = elastic.plan_transition(plan, 4, 2)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(2), (5, 3))}
+    opt = {"mu": jax.random.normal(jax.random.PRNGKey(3), (4, 5, 3))}
+    res = {"w": 0.1 * jax.random.normal(jax.random.PRNGKey(4), (4, 5, 3))}
+    p2, opt2, res2 = elastic.apply_transition(tr, params, opt, res)
+    assert opt2["mu"].shape == (2, 5, 3)
+    assert res2["w"].shape == (2, 5, 3)
+    np.testing.assert_array_equal(np.asarray(res2["w"]),
+                                  np.asarray(res["w"][:2]))
+    total_before = np.asarray(params["w"]) + np.asarray(
+        jnp.sum(res["w"], axis=0))
+    total_after = np.asarray(p2["w"]) + np.asarray(
+        jnp.sum(res2["w"], axis=0))
+    np.testing.assert_allclose(total_after, total_before,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_shrink_pod_state_slices_every_leaf():
+    tree = {"a": jnp.arange(12.0).reshape(4, 3),
+            "n": {"b": jnp.arange(8.0).reshape(4, 2)}}
+    out = elastic.shrink_pod_state(tree, 2)
+    assert out["a"].shape == (2, 3) and out["n"]["b"].shape == (2, 2)
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(tree["a"][:2]))
+
+
+# -- checkpoint-mediated re-mesh ---------------------------------------------
+
+
+def test_resharded_restore_roundtrip(tmp_path):
+    """Save under pool P, restore under pool 1's mesh (the only pool a
+    1-device CPU host can build): values identical, sharding on the new
+    mesh."""
+    from repro.checkpoint import store as ckpt
+
+    tree = {"w": jnp.arange(24.0).reshape(6, 4),
+            "b": jnp.ones((3,), jnp.bfloat16)}
+    ckpt.save(str(tmp_path), 9, tree, extra={"pool": 4})
+    out = elastic.resharded_restore(str(tmp_path), 9, tree, pods=1)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert out["w"].sharding.mesh.axis_names == ("data", "model")
+
+
+def test_make_mesh_for_single_pod_on_cpu():
+    mesh = elastic.make_mesh_for(1, data=1, model=1)
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.devices.shape == (1, 1)

@@ -3,9 +3,18 @@
 Runs each job with and without the auto-tuner (ISP on) and reports the
 Perf/$ ratio — the paper measures 1.1x-1.6x improvements depending on the
 workload.
+
+``run(live=True)`` additionally runs the SAME PMF job on the real
+multi-process FaaS runtime (``repro.runtime``) and on the simulator with a
+matching configuration, and emits ``BENCH_runtime.json`` at the repo root
+comparing simulator-predicted vs measured step durations and FaaS cost —
+the calibration check of the timing model (DESIGN.md §8 vs §9).
 """
 
 from __future__ import annotations
+
+import json
+import os
 
 from benchmarks.common import (
     lr_batch_fn,
@@ -21,6 +30,13 @@ from repro.core import consistency as cons
 
 P = 8
 B = 2048
+
+# -- live-vs-simulated configuration ------------------------------------------
+# the live job IS the quickstart job (examples/mlless_faas.py) — one shared
+# config in repro.runtime, so the benchmark always calibrates against the
+# job the example runs
+LIVE_P = 4
+LIVE_STEPS = 140
 
 
 def _run(kind: str, with_tuner: bool) -> dict:
@@ -42,7 +58,106 @@ def _run(kind: str, with_tuner: bool) -> dict:
     return summarize(f"{kind}_{tag}", res)
 
 
-def run() -> dict:
+def _run_live() -> dict:
+    """The same PMF job, live (real processes) and simulated (timing model)."""
+    import tempfile
+    from functools import partial
+
+    from repro import optim
+    from repro.core.isp import ISPConfig
+    from repro.core.simulator import (
+        Platform, ServerlessSimulator, SimulatorConfig,
+    )
+    from repro.runtime import (
+        build_workload, pmf_quickstart_config, run_job,
+    )
+
+    # -- live: real worker processes, measured durations, real bill
+    job = pmf_quickstart_config(
+        run_dir=tempfile.mkdtemp(prefix="bench_faas_"),
+        n_workers=LIVE_P,
+        total_steps=LIVE_STEPS,
+    )
+    wl = build_workload(job.workload, job.workload_cfg)
+    live = run_job(job)
+
+    # -- simulated: identical math (same Workload object), modelled platform
+    rank = wl.cfg["rank"]
+    sim = ServerlessSimulator(
+        SimulatorConfig(
+            n_workers=LIVE_P,
+            platform=Platform.MLLESS,
+            consistency=cons.ConsistencyConfig(
+                model=cons.Model.ISP, isp=ISPConfig(v=job.isp_v)
+            ),
+            sparse_model=True,
+        ),
+        grad_fn=wl.grad_fn,
+        optimizer=optim.make(job.optimizer, job.lr),
+        params=wl.params0,
+        flops_per_sample=6 * rank * 3,
+        update_nnz_fn=partial(
+            lambda r, n, bsz: 2 * r * min(bsz, n), rank, wl.cfg["n_users"]
+        ),
+    )
+
+    def batch_fn(step: int, n_workers: int):
+        return wl.make_batch(wl.store.fetch_stacked(step, n_workers))
+
+    simres = sim.run(
+        batch_fn, wl.cfg["batch_size"], LIVE_STEPS,
+        tuner=tuner(LIVE_P, interval=2.0),
+    )
+
+    predicted_step = simres.total_wall_s / max(len(simres.records), 1)
+    payload = {
+        "workload": dict(wl.cfg),
+        "n_workers": LIVE_P,
+        "steps": LIVE_STEPS,
+        "isp_v": job.isp_v,
+        "live": {
+            "measured_step_s_mean": live["measured_step_s"],
+            "wall_s": live["wall_s"],
+            "faas_cost_usd": live["bill"]["total"],
+            "worker_seconds": live["bill"]["worker_seconds"],
+            "final_loss": live["final_loss"],
+            "final_pool": live["final_pool"],
+            "n_scale_events": len(live["scale_events"]),
+            "n_invocations": live["n_invocations"],
+            "wire_bytes_total": live["wire_bytes_total"],
+            "invariant_max_err": live["invariant_max_err"],
+            # measured loss/pool trajectory — fig7/fig8-style time-to-loss
+            # and cost-to-loss curves from a LIVE run instead of the model
+            "history": [
+                {"step": r["step"], "loss": r["loss"],
+                 "dur_s": r["dur_s"], "p_active": r["p_active"]}
+                for r in live["history"]
+            ],
+        },
+        "simulated": {
+            "predicted_step_s_mean": predicted_step,
+            "modelled_wall_s": simres.total_wall_s,
+            "faas_cost_usd": simres.total_cost,
+            "final_loss": simres.final_loss,
+            "final_workers": simres.summary["final_workers"],
+        },
+        "ratios": {
+            "step_time_measured_over_predicted": (
+                (live["measured_step_s"] or 0.0) / max(predicted_step, 1e-12)
+            ),
+            "cost_measured_over_predicted": (
+                live["bill"]["total"] / max(simres.total_cost, 1e-12)
+            ),
+        },
+    }
+    root = os.path.join(os.path.dirname(__file__), "..")
+    with open(os.path.join(root, "BENCH_runtime.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    write_result("fig6_runtime_live", payload)
+    return payload
+
+
+def run(live: bool = False) -> dict:
     rows = []
     ratios = {}
     for kind in ("pmf", "lr_dense", "lr_sparse"):
@@ -53,7 +168,10 @@ def run() -> dict:
         ratios[kind] = ratio
         rows += [fixed, tuned]
     write_result("fig6_autotuner", {"rows": rows, "perf_ratios": ratios})
-    return {"rows": rows, "perf_ratios": ratios}
+    out = {"rows": rows, "perf_ratios": ratios}
+    if live:
+        out["runtime_live"] = _run_live()
+    return out
 
 
 def report(out: dict) -> list[str]:
@@ -65,4 +183,16 @@ def report(out: dict) -> list[str]:
         )
     for k, v in out["perf_ratios"].items():
         lines.append(f"fig6,{k}_perf_ratio,{v*1e6:.0f},tuned/fixed={v:.2f}x")
+    rt = out.get("runtime_live")
+    if rt:
+        meas = rt["live"]["measured_step_s_mean"] or 0.0
+        pred = rt["simulated"]["predicted_step_s_mean"]
+        lines.append(
+            f"fig6,runtime_live_step,{meas*1e6:.0f},"
+            f"measured/predicted={rt['ratios']['step_time_measured_over_predicted']:.2f}x"
+        )
+        lines.append(
+            f"fig6,runtime_live_cost,{rt['live']['faas_cost_usd']*1e6:.0f},"
+            f"cost_ratio={rt['ratios']['cost_measured_over_predicted']:.2f}x"
+        )
     return lines

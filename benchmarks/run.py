@@ -6,10 +6,15 @@ modelled platform time; derived = the figure's headline ratio/metric).
 
     PYTHONPATH=src python -m benchmarks.run            # all figures
     PYTHONPATH=src python -m benchmarks.run fig5 fig9  # a subset
+    PYTHONPATH=src python -m benchmarks.run --live fig6
+        # fig6 additionally runs the PMF job on the real multi-process FaaS
+        # runtime and emits BENCH_runtime.json (simulator-predicted vs
+        # measured step durations and cost)
 """
 
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 
@@ -34,12 +39,17 @@ def main() -> None:
         "fig10": fig10_scalability,
         "table3": table3_weak_scaling,
     }
-    want = sys.argv[1:] or list(suites)
+    argv = sys.argv[1:]
+    live = "--live" in argv
+    want = [a for a in argv if a != "--live"] or list(suites)
     print("name,us_per_call,derived")
     for key in want:
         mod = suites[key]
         t0 = time.time()
-        out = mod.run()
+        kwargs = {}
+        if live and "live" in inspect.signature(mod.run).parameters:
+            kwargs["live"] = True
+        out = mod.run(**kwargs)
         for line in mod.report(out):
             print(line, flush=True)
         print(f"{key}_harness,{(time.time()-t0)*1e6:.0f},host_seconds="

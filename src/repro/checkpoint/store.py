@@ -1,10 +1,29 @@
-"""Atomic pytree checkpoint store (npz + json manifest)."""
+"""Atomic pytree checkpoint store (npz + json manifest).
+
+Concurrency contract (exercised by the FaaS runtime, where several worker
+*processes* write and restore snapshots concurrently):
+
+* **Writers never collide**: each ``save`` stages into a private
+  ``step_XXX.tmp-<pid>-<nonce>`` directory and installs it with an atomic
+  ``os.rename`` — two processes saving the same tag can interleave freely
+  and the final directory is always one writer's complete output, never a
+  torn mix.
+* **Readers never see partial state**: ``restore`` only ever opens the
+  installed directory; a reader racing a replace (rename-aside + rename-in)
+  can momentarily observe the tag missing and retries briefly.
+* ``latest_step`` ignores staging/aside directories, so a crash mid-save
+  (SIGKILL'd worker) leaves at worst dead ``.tmp`` litter, never a
+  half-visible checkpoint.
+"""
 
 from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
+import time
+import uuid
 from typing import Any, Optional
 
 import jax
@@ -13,13 +32,23 @@ import numpy as np
 PyTree = Any
 
 _SEP = "/"
+_STEP_RE = re.compile(r"^step_(\d{10})$")
+
+
+def path_key(path) -> str:
+    """Canonical '/'-joined key of one tree_flatten_with_path entry.
+
+    The single source of truth for pytree-leaf naming: checkpoint manifests
+    and the runtime's wire metadata (``runtime.protocol``) both use it, so
+    the two layouts can never drift apart.
+    """
+    return _SEP.join(_path_part(p) for p in path)
 
 
 def _flatten_with_paths(tree: PyTree) -> dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = _SEP.join(_path_part(p) for p in path)
-        flat[key] = np.asarray(leaf)
+        flat[path_key(path)] = np.asarray(leaf)
     return flat
 
 
@@ -28,56 +57,98 @@ def _path_part(p) -> str:
         return str(p.key)
     if hasattr(p, "idx"):
         return f"#{p.idx}"
+    if hasattr(p, "name"):
+        return str(p.name)
     return str(p)
 
 
+def _install(tmp: str, final: str) -> None:
+    """Atomically make ``tmp`` the contents of ``final``.
+
+    POSIX cannot rename over a non-empty directory, so replacing an
+    existing checkpoint moves the old one aside first; a concurrent reader
+    retries the brief not-found window, and a concurrent writer that loses
+    the race simply installs over us the same way.
+    """
+    last: Optional[OSError] = None
+    for _ in range(100):
+        try:
+            os.rename(tmp, final)
+            return
+        except OSError as e:
+            last = e
+        if os.path.isdir(final):
+            aside = final + f".old-{uuid.uuid4().hex[:8]}"
+            try:
+                os.rename(final, aside)
+            except OSError:
+                continue  # another writer swapped in between; retry install
+            shutil.rmtree(aside, ignore_errors=True)
+        # else: a concurrent writer moved final aside between our failed
+        # rename and now — the next rename attempt can win the slot
+    raise OSError(f"could not install checkpoint at {final}") from last
+
+
 def save(directory: str, step: int, tree: PyTree, extra: Optional[dict] = None) -> str:
-    """Atomically write ``tree`` as checkpoint ``step``. Returns the path."""
+    """Atomically write ``tree`` as checkpoint ``step``. Returns the path.
+
+    Safe under concurrent writers of the same ``(directory, step)`` tag and
+    under readers restoring while a writer replaces the tag.
+    """
     final = os.path.join(directory, f"step_{step:010d}")
-    tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
+    tmp = final + f".tmp-{os.getpid()}-{uuid.uuid4().hex[:8]}"
     os.makedirs(tmp, exist_ok=True)
-    flat = _flatten_with_paths(tree)
-    # npz cannot hold bfloat16: store the raw bits as uint16; the true
-    # dtype is in the manifest and restored on load
-    stored = {
-        k: (v.view(np.uint16) if v.dtype.name == "bfloat16" else v)
-        for k, v in flat.items()
-    }
-    np.savez(os.path.join(tmp, "arrays.npz"), **stored)
-    manifest = {
-        "step": step,
-        "keys": sorted(flat),
-        "shapes": {k: list(v.shape) for k, v in flat.items()},
-        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
-        "extra": extra or {},
-    }
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+    try:
+        flat = _flatten_with_paths(tree)
+        # npz cannot hold bfloat16: store the raw bits as uint16; the true
+        # dtype is in the manifest and restored on load
+        stored = {
+            k: (v.view(np.uint16) if v.dtype.name == "bfloat16" else v)
+            for k, v in flat.items()
+        }
+        manifest = {
+            "step": step,
+            "keys": sorted(flat),
+            "shapes": {k: list(v.shape) for k, v in flat.items()},
+            "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+            "extra": extra or {},
+        }
+        # the manifest rides INSIDE the npz too: restore then needs a single
+        # file open, so a concurrent replace can never hand it one version's
+        # manifest with another version's arrays
+        stored["__manifest__"] = np.frombuffer(
+            json.dumps(manifest).encode("utf-8"), dtype=np.uint8
+        )
+        np.savez(os.path.join(tmp, "arrays.npz"), **stored)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        _install(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
     return final
 
 
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
-    steps = [
-        int(d.split("_")[1])
-        for d in os.listdir(directory)
-        if d.startswith("step_") and not d.endswith(".tmp")
-    ]
+    steps = []
+    for d in os.listdir(directory):
+        m = _STEP_RE.match(d)
+        if m:  # staging (.tmp-*) and aside (.old-*) dirs never match
+            steps.append(int(m.group(1)))
     return max(steps) if steps else None
 
 
-def restore(directory: str, step: int, like: PyTree) -> PyTree:
-    """Restore into the structure of ``like`` (shapes validated)."""
-    path = os.path.join(directory, f"step_{step:010d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+def _restore_once(path: str, like: PyTree) -> PyTree:
     arrays = np.load(os.path.join(path, "arrays.npz"))
+    if "__manifest__" in arrays:  # single-open read: immune to replaces
+        manifest = json.loads(arrays["__manifest__"].tobytes().decode("utf-8"))
+    else:  # pre-embedding checkpoints
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
     dtypes = manifest.get("dtypes", {})
     flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []
@@ -95,6 +166,23 @@ def restore(directory: str, step: int, like: PyTree) -> PyTree:
             raise ValueError(f"{key}: checkpoint {arr.shape} != expected {want}")
         out.append(arr)
     return jax.tree_util.tree_unflatten(jax.tree.structure(like), out)
+
+
+def restore(directory: str, step: int, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shapes validated).
+
+    Retries the brief not-found window a concurrent replace opens (the old
+    directory moves aside before the new one moves in).
+    """
+    path = os.path.join(directory, f"step_{step:010d}")
+    last: Optional[Exception] = None
+    for _ in range(40):
+        try:
+            return _restore_once(path, like)
+        except FileNotFoundError as e:
+            last = e
+            time.sleep(0.025)
+    raise FileNotFoundError(f"checkpoint {path} never became readable") from last
 
 
 def restore_with_sharding(

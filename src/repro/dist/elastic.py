@@ -169,6 +169,22 @@ def shrink_pod_state(tree_pod: PyTree, new_pods: int) -> PyTree:
     return jax.tree.map(lambda x: x[:new_pods], tree_pod)
 
 
+def reintegrate_into(
+    own: PyTree, leaving: PyTree, pool_before: jax.Array | float
+) -> PyTree:
+    """One survivor's mean-preserving pull of a leaving replica.
+
+        x' = x + (x_leaving - x) / P_old
+
+    Applied by every survivor, the pool-mean parameter vector is unchanged
+    exactly (paper §4.2 eviction policy, mean-preserving form). This is the
+    per-replica view of ``reintegrate_replicas``; the FaaS runtime's worker
+    processes apply it to the flush payload a leaving peer publishes
+    through the broker (``runtime.worker``).
+    """
+    return jax.tree.map(lambda x, l: x + (l - x) / pool_before, own, leaving)
+
+
 def reintegrate_replicas(
     replicas: PyTree, evicted: int, active_mask: jax.Array
 ) -> PyTree:
@@ -186,9 +202,9 @@ def reintegrate_replicas(
     p_old = active_mask.shape[0]
 
     def leaf(x):
-        leaving = x[evicted]
+        leaving = jnp.broadcast_to(x[evicted][None], x.shape)
         mask = active_mask.reshape((-1,) + (1,) * (x.ndim - 1))
-        pulled = x + (leaving[None] - x) / p_old
+        pulled = reintegrate_into(x, leaving, p_old)
         return jnp.where(mask, pulled, x)
 
     return jax.tree.map(leaf, replicas)

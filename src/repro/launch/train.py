@@ -1,11 +1,22 @@
-"""End-to-end LM training driver.
+"""End-to-end training driver over pluggable execution substrates.
 
-The pod-runtime realization of the MLLess loop (DESIGN.md §2): data-parallel
-training with the ISP significance filter on the gradient exchange and the
-scale-in auto-tuner driving *elastic weak scaling* — evicting a worker
-shrinks the global batch (B_g = P*B, paper §3.2) and the step is re-lowered
-for the smaller pool, exactly the checkpoint -> re-mesh -> restore transition
-a pod would perform.
+Two registries keep ``main()`` flat as substrates accumulate (DESIGN.md §9):
+
+* ``RUNTIMES`` — *where* the job runs: ``inproc`` (this process: the jitted
+  single-host loop below) or ``faas`` (real multi-process serverless
+  runtime, ``repro.runtime``).
+* ``MODES`` — the in-process consistency/exchange mode: ``bsp``, ``isp``
+  (error-feedback filter on the update), ``isp-pod`` (per-pod divergent
+  state + compressed collective exchange). Each mode bundles its step
+  builder and its scale-in transition, so the training loop calls one
+  registry hook instead of branching.
+
+The in-process runtime realizes the MLLess loop as a pod would (DESIGN.md
+§2): data-parallel training with the ISP significance filter on the
+gradient exchange and the scale-in auto-tuner driving *elastic weak
+scaling* — evicting a worker shrinks the global batch (B_g = P*B, paper
+§3.2) and the step is re-lowered for the smaller pool, exactly the
+checkpoint -> re-mesh -> restore transition a pod would perform.
 
 Fault tolerance: deterministic step-indexed checkpoints (atomic rename);
 ``--restore`` resumes from the newest one, reproducing the optimizer/filter
@@ -17,6 +28,8 @@ Usage (CPU example sizes):
       --per-worker-batch 4 --seq 512 --mode isp --autotune \
       --checkpoint-dir /tmp/ckpt
   python -m repro.launch.train --arch xlstm-1.3b --smoke --steps 20
+  python -m repro.launch.train --runtime faas --workload pmf --steps 60 \
+      --workers 4 --autotune --run-dir /tmp/faas
 """
 
 from __future__ import annotations
@@ -183,6 +196,87 @@ def make_pod_step(
     return jax.jit(step_fn, donate_argnums=(0, 1, 2))
 
 
+# -- mode registry (DESIGN.md §9.5) -------------------------------------------
+#
+# A mode owns (a) how a train step is built for a pool size and (b) what a
+# scale-in transition does to the train state. New exchange modes register
+# here instead of adding branches to the training loop.
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainMode:
+    """One in-process exchange mode."""
+
+    name: str
+    pod: bool  # per-pod (lifted) optimizer/residual state
+    build_step: Any  # (lm, optimizer, isp, comp, pool) -> jitted step_fn
+    scale_in: Any  # (args, st, plan, isp) -> TrainState (pool shrunk by 1)
+
+
+MODES: dict[str, TrainMode] = {}
+
+
+def register_mode(mode: TrainMode) -> TrainMode:
+    MODES[mode.name] = mode
+    return mode
+
+
+def _scale_in_flat(args, st: TrainState, plan, isp) -> TrainState:
+    """bsp/isp scale-in: flush the ISP residual into the params (the paper's
+    leaving-worker model averaging, error-feedback form — no update mass is
+    lost), checkpoint, shrink the pool."""
+    if isp is not None:
+        st.params = apply_updates(st.params, st.residual)
+        st.residual = jax.tree.map(jnp.zeros_like, st.residual)
+    if args.checkpoint_dir:
+        save_checkpoint(args.checkpoint_dir, st)
+    st.pool -= 1
+    return st
+
+
+def _scale_in_pod(args, st: TrainState, plan, isp) -> TrainState:
+    """isp-pod scale-in: dist.elastic owns the transition — the evicted
+    pod's residual is flushed into the shared params and its optimizer/
+    residual slices dropped; the transition IS a checkpoint restore under
+    the smaller pool's mesh whenever this host can build it."""
+    tr = dist_elastic.plan_transition(plan, st.pool, st.pool - 1)
+    st.params, st.opt_state, st.residual = dist_elastic.apply_transition(
+        tr, st.params, st.opt_state, st.residual
+    )
+    st.pool = tr.new_pods
+    if args.checkpoint_dir:
+        save_checkpoint(args.checkpoint_dir, st)
+        if jax.device_count() >= int(np.prod(tr.new_mesh_shape)):
+            tree = {"params": st.params, "opt": st.opt_state,
+                    "residual": st.residual}
+            out = dist_elastic.resharded_restore(
+                args.checkpoint_dir, st.step, tree, tr.new_pods
+            )
+            st.params = out["params"]
+            st.opt_state = out["opt"]
+            st.residual = out["residual"]
+    return st
+
+
+register_mode(TrainMode(
+    name="bsp", pod=False,
+    build_step=lambda lm, opt, isp, comp, pool: make_step(lm, opt, None),
+    scale_in=_scale_in_flat,
+))
+register_mode(TrainMode(
+    name="isp", pod=False,
+    build_step=lambda lm, opt, isp, comp, pool: make_step(lm, opt, isp),
+    scale_in=_scale_in_flat,
+))
+register_mode(TrainMode(
+    name="isp-pod", pod=True,
+    build_step=lambda lm, opt, isp, comp, pool: make_pod_step(
+        lm, opt, isp, comp, pool
+    ),
+    scale_in=_scale_in_pod,
+))
+
+
 def save_checkpoint(d: str, st: TrainState) -> str:
     return ckpt.save(
         d, st.step,
@@ -211,7 +305,8 @@ def train(args) -> dict:
     lm = LM(cfg)
     key = jax.random.PRNGKey(args.seed)
     optimizer = optim.make(args.optimizer, args.lr)
-    pod_mode = args.mode == "isp-pod"
+    mode = MODES[args.mode]
+    pod_mode = mode.pod
     isp = ISPConfig(v=args.isp_v) if args.mode.startswith("isp") else None
     comp = (
         CompressionConfig(
@@ -266,9 +361,7 @@ def train(args) -> dict:
         )
 
     def build_step(pool: int):
-        if pod_mode:
-            return make_pod_step(lm, optimizer, isp, comp, pool)
-        return make_step(lm, optimizer, isp)
+        return mode.build_step(lm, optimizer, isp, comp, pool)
 
     step_fn = build_step(st.pool)
     history = []
@@ -302,49 +395,9 @@ def train(args) -> dict:
         if tuner is not None:
             tuner.observe(st.step, loss, dt)
             if tuner.decide().remove_worker and st.pool > 1:
-                # elastic scale-in: reintegrate -> checkpoint -> re-lower.
-                if pod_mode:
-                    # dist.elastic owns the transition: the evicted pod's
-                    # residual is flushed into the shared params (error-
-                    # feedback model averaging) and its optimizer/residual
-                    # slices are dropped
-                    tr = dist_elastic.plan_transition(
-                        plan, st.pool, st.pool - 1
-                    )
-                    st.params, st.opt_state, st.residual = (
-                        dist_elastic.apply_transition(
-                            tr, st.params, st.opt_state, st.residual
-                        )
-                    )
-                    st.pool = tr.new_pods
-                    if args.checkpoint_dir:
-                        save_checkpoint(args.checkpoint_dir, st)
-                        # the transition IS a restore: reload under the new
-                        # pool's mesh whenever this host can build it
-                        if jax.device_count() >= int(
-                            np.prod(tr.new_mesh_shape)
-                        ):
-                            tree = {"params": st.params, "opt": st.opt_state,
-                                    "residual": st.residual}
-                            out = dist_elastic.resharded_restore(
-                                args.checkpoint_dir, st.step, tree,
-                                tr.new_pods,
-                            )
-                            st.params = out["params"]
-                            st.opt_state = out["opt"]
-                            st.residual = out["residual"]
-                else:
-                    # ISP: flush the residual into the params first (the
-                    # paper's leaving-worker model-averaging reintegration,
-                    # error-feedback form — no update mass is lost)
-                    if isp is not None:
-                        st.params = apply_updates(st.params, st.residual)
-                        st.residual = jax.tree.map(
-                            jnp.zeros_like, st.residual
-                        )
-                    if args.checkpoint_dir:
-                        save_checkpoint(args.checkpoint_dir, st)
-                    st.pool -= 1
+                # elastic scale-in: reintegrate -> checkpoint -> re-lower,
+                # with the mode registry owning the transition semantics
+                st = mode.scale_in(args, st, plan, isp)
                 step_fn = build_step(st.pool)  # re-lower
                 print(f"  [autotuner] scale-in -> pool={st.pool} "
                       f"(global batch {plan.global_batch(st.pool)})")
@@ -372,8 +425,69 @@ def train(args) -> dict:
     return result
 
 
+# -- runtime registry ---------------------------------------------------------
+#
+# A runtime is a whole execution substrate: it receives the parsed args and
+# returns the result dict. ``inproc`` is the jitted loop above; ``faas`` is
+# the real multi-process serverless runtime.
+
+RUNTIMES: dict[str, Any] = {}
+
+
+def register_runtime(name: str):
+    def deco(fn):
+        RUNTIMES[name] = fn
+        return fn
+
+    return deco
+
+
+register_runtime("inproc")(train)
+
+
+@register_runtime("faas")
+def train_faas(args) -> dict:
+    """Run the job on the multi-process FaaS runtime (repro.runtime)."""
+    import tempfile
+
+    from repro.core.autotuner import AutoTunerConfig
+    from repro.runtime import FaaSJobConfig, run_job
+
+    run_dir = args.run_dir or args.checkpoint_dir or tempfile.mkdtemp(
+        prefix="repro_faas_"
+    )
+    cfg = FaaSJobConfig(
+        run_dir=run_dir,
+        workload=args.workload,
+        workload_cfg=json.loads(args.workload_cfg) if args.workload_cfg
+        else {},
+        n_workers=args.workers,
+        total_steps=args.steps,
+        invocation_steps=args.invocation_steps,
+        checkpoint_every=args.checkpoint_every,
+        optimizer=args.optimizer,
+        lr=args.lr,
+        isp_v=args.isp_v,
+        autotune=args.autotune,
+        tuner=AutoTunerConfig(
+            sched_interval_s=args.sched_interval,
+            delta_s=args.sched_interval / 2,
+        ),
+        seed=args.seed,
+    )
+    result = run_job(cfg)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1, default=str)
+    return result
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--runtime", default="inproc",
+                    choices=tuple(sorted(RUNTIMES)),
+                    help="execution substrate (see module docstring)")
     ap.add_argument("--arch", default="lm-8m",
                     choices=tuple(_EXTRA) + ARCH_NAMES)
     ap.add_argument("--smoke", action="store_true",
@@ -382,8 +496,7 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--per-worker-batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--mode", choices=("bsp", "isp", "isp-pod"),
-                    default="bsp")
+    ap.add_argument("--mode", choices=tuple(sorted(MODES)), default="bsp")
     ap.add_argument("--isp-v", type=float, default=0.7)
     ap.add_argument("--scheme", choices=("dense", "topk", "bitmap"),
                     default="dense",
@@ -401,10 +514,21 @@ def main() -> None:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
+    # faas-runtime options
+    ap.add_argument("--workload", default="pmf",
+                    help="faas runtime workload (repro.runtime.workload)")
+    ap.add_argument("--workload-cfg", default=None,
+                    help="JSON overrides for the workload config")
+    ap.add_argument("--invocation-steps", type=int, default=1_000_000,
+                    help="faas: steps per function invocation")
+    ap.add_argument("--run-dir", default=None,
+                    help="faas: checkpoints + worker logs directory")
     args = ap.parse_args()
-    res = train(args)
-    print(json.dumps({k: v for k, v in res.items() if k != "history"},
-                     indent=1))
+    res = RUNTIMES[args.runtime](args)
+    print(json.dumps(
+        {k: v for k, v in res.items() if k not in ("history", "updates")},
+        indent=1, default=str,
+    ))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,23 @@
+"""repro.runtime — multi-process FaaS-style training substrate (DESIGN.md §9).
+
+The executable form of the MLLess system: stateless invocation-bounded
+worker processes exchanging significance-filtered updates *indirectly*
+through an in-memory broker over local sockets, supervised by a host-side
+controller that drives the scale-in auto-tuner from live telemetry and
+meters real per-worker lifetimes at the FaaS billing quantum.
+
+    broker      — update store + pub/sub + minibatch keys + byte accounting
+    worker      — stateless ISP worker entrypoint (subprocess)
+    supervisor  — spawn/evict/respawn controller, billing, results
+    protocol    — socket framing + sparse pytree wire encoding
+    workload    — named deterministic workloads (pmf, lr)
+"""
+
+from repro.runtime.supervisor import (  # noqa: F401
+    FaaSJobConfig,
+    PMF_QUICKSTART_CFG,
+    Supervisor,
+    pmf_quickstart_config,
+    run_job,
+)
+from repro.runtime.workload import WORKLOAD_NAMES, build as build_workload  # noqa: F401

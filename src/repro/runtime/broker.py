@@ -1,0 +1,383 @@
+"""Update broker — the RabbitMQ/Redis stand-in of the FaaS runtime.
+
+One process (or one thread of the supervisor) owns all shared state of a
+training job; workers talk to it over local TCP sockets using
+``runtime.protocol`` framing.  Responsibilities, mirroring MLLess's
+messaging VM + KV store (paper §5):
+
+* **update store / pub-sub**: workers publish their significance-filtered
+  update for step t and pull the peers' updates for t; the pull blocks until
+  the ISP barrier for t is met (every worker active at t has published, and
+  every worker *evicted at* t has flushed).  Updates are retained so a
+  respawned worker can replay any step — the store IS the fault-tolerance
+  log, like the iteration keys MLLess leaves in Redis.
+* **minibatch keys**: deterministic round-robin assignment
+  ``((step - 1) * P + worker) % n_batches`` (steps are 1-indexed;
+  ``data.store.MinibatchStore``'s partitioning), served per request like
+  the COS key scheme of the paper.
+* **membership**: the supervisor requests evictions; the broker picks the
+  effective step ``e = max_published + 2`` so no worker can have computed a
+  step with a stale pool size (a worker only begins step t after pulling
+  t-1, and every response from here on carries the eviction table).
+* **telemetry**: per-(step, worker) loss / duration / sent-fraction /
+  conservation-error rows, aggregated per completed step for the
+  supervisor's auto-tuner poll.
+* **byte accounting**: per-message-type request/response byte counters —
+  the measured analogue of ``core.billing.CommModel``.
+
+The broker never decodes tensor payloads (workers own the math); it stores
+raw bytes plus a digest so duplicate publishes from a replayed worker can be
+verified bit-identical (``dup_mismatches`` must stay 0 — determinism check).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import socket
+import socketserver
+import threading
+from typing import Optional
+
+from repro.runtime import protocol
+
+
+class BrokerCore:
+    """All job state + request handling, guarded by one lock/condition."""
+
+    def __init__(self, job: dict):
+        self.job = dict(job)
+        self.P = int(job["n_workers"])
+        self.n_batches = int(job.get("n_batches", 1))
+        self.total_steps = int(job["total_steps"])
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        # step -> worker -> (meta, payload, digest)
+        self.updates: dict[int, dict[int, tuple[list, bytes, str]]] = {}
+        # step -> worker -> (meta, payload, digest)   (eviction flushes)
+        self.flushes: dict[int, dict[int, tuple[list, bytes, str]]] = {}
+        # (step, worker) -> telemetry dict
+        self.telemetry: dict[tuple[int, int], dict] = {}
+        self.evictions: dict[int, int] = {}  # worker -> effective step
+        self.statuses: dict[int, str] = {w: "spawned" for w in range(self.P)}
+        self.max_published = 0
+        self.dup_mismatches = 0
+        self._poll_cursor = 1  # next telemetry step the supervisor hasn't seen
+        self.stats: dict[str, dict[str, int]] = {}
+        self.shutting_down = False
+
+    # -- membership -----------------------------------------------------------
+
+    def active_at(self, step: int) -> list[int]:
+        return [
+            w
+            for w in range(self.P)
+            if w not in self.evictions or step < self.evictions[w]
+        ]
+
+    def _barrier_ready(self, step: int) -> bool:
+        pubs = self.updates.get(step, {})
+        if any(w not in pubs for w in self.active_at(step)):
+            return False
+        fl = self.flushes.get(step, {})
+        return all(
+            q in fl for q, e in self.evictions.items() if e == step
+        )
+
+    def _telemetry_complete(self, step: int) -> bool:
+        return all(
+            (step, w) in self.telemetry
+            and "dur_s" in self.telemetry[(step, w)]
+            for w in self.active_at(step)
+        )
+
+    # -- request dispatch -----------------------------------------------------
+
+    def handle(self, header: dict, payload: bytes) -> tuple[dict, bytes]:
+        kind = header.get("t", "?")
+        fn = getattr(self, f"_op_{kind}", None)
+        if fn is None:
+            return {"ok": False, "error": f"unknown message type {kind!r}"}, b""
+        return fn(header, payload)
+
+    def _membership(self) -> dict:
+        return {"evictions": {str(k): v for k, v in self.evictions.items()}}
+
+    def _op_hello(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
+        with self._lock:
+            w = int(h["worker"])
+            self.statuses[w] = "running"
+            resp = {"ok": True, "job": self.job, **self._membership()}
+        return resp, b""
+
+    def _op_batch(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
+        step, worker = int(h["step"]), int(h["worker"])
+        key = ((step - 1) * self.P + worker) % self.n_batches
+        with self._lock:
+            return {"ok": True, "key": key, **self._membership()}, b""
+
+    def _op_publish(self, h: dict, payload: bytes) -> tuple[dict, bytes]:
+        step, worker = int(h["step"]), int(h["worker"])
+        meta = h["meta"]
+        digest = hashlib.sha1(
+            json.dumps(meta, sort_keys=True).encode() + payload
+        ).hexdigest()
+        with self._cond:
+            slot = self.updates.setdefault(step, {})
+            dup = worker in slot
+            if dup:
+                if slot[worker][2] != digest:
+                    self.dup_mismatches += 1
+            else:
+                slot[worker] = (meta, payload, digest)
+                self.max_published = max(self.max_published, step)
+            self.telemetry.setdefault((step, worker), {}).update(
+                {
+                    "loss": h.get("loss"),
+                    "sent_fraction": h.get("sent_fraction"),
+                    "inv_err": h.get("inv_err"),
+                    "wire_bytes": protocol.wire_bytes(meta),
+                }
+            )
+            self._cond.notify_all()
+            return {"ok": True, "dup": dup, **self._membership()}, b""
+
+    def _op_flush(self, h: dict, payload: bytes) -> tuple[dict, bytes]:
+        step, worker = int(h["step"]), int(h["worker"])
+        digest = hashlib.sha1(
+            json.dumps(h["meta"], sort_keys=True).encode() + payload
+        ).hexdigest()
+        with self._cond:
+            slot = self.flushes.setdefault(step, {})
+            dup = worker in slot
+            if dup:
+                # a replayed flush must be bit-identical too — survivors may
+                # already have applied the first copy
+                if slot[worker][2] != digest:
+                    self.dup_mismatches += 1
+            else:
+                slot[worker] = (h["meta"], payload, digest)
+            self._cond.notify_all()
+        return {"ok": True, "dup": dup}, b""
+
+    def _op_pull(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
+        step, worker = int(h["step"]), int(h["worker"])
+        timeout = float(h.get("timeout_s", 2.0))
+        with self._cond:
+            ready = self._cond.wait_for(
+                lambda: self._barrier_ready(step) or self.shutting_down,
+                timeout=timeout,
+            )
+            if self.shutting_down:
+                return {"ok": False, "abort": True}, b""
+            if not ready or not self._barrier_ready(step):
+                return {"ok": True, "ready": False, **self._membership()}, b""
+            parts = []
+            for w in sorted(self.active_at(step)):
+                if w == worker:
+                    continue
+                meta, blob, _ = self.updates[step][w]
+                parts.append(({"worker": w, "meta": meta}, blob))
+            for q in sorted(self.flushes.get(step, {})):
+                if self.evictions.get(q) == step:
+                    meta, blob, _ = self.flushes[step][q]
+                    parts.append(
+                        ({"worker": q, "meta": meta, "flush": True}, blob)
+                    )
+            descs, payload = protocol.pack_parts(parts)
+            resp = {
+                "ok": True,
+                "ready": True,
+                "parts": descs,
+                **self._membership(),
+            }
+        return resp, payload
+
+    def _op_report(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
+        step, worker = int(h["step"]), int(h["worker"])
+        with self._lock:
+            self.telemetry.setdefault((step, worker), {})["dur_s"] = float(
+                h["dur_s"]
+            )
+        return {"ok": True}, b""
+
+    def _op_bye(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
+        with self._lock:
+            self.statuses[int(h["worker"])] = f"bye:{h.get('reason', '?')}"
+        return {"ok": True}, b""
+
+    def _op_evict(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
+        worker = int(h["worker"])
+        with self._cond:
+            if worker in self.evictions:
+                return {
+                    "ok": True, "granted": True,
+                    "evict_step": self.evictions[worker],
+                }, b""
+            # effective at a step no worker can have begun with the old
+            # pool; distinct from every prior eviction's step — with ONE
+            # leaver per step the survivors' sequential mean-preserving
+            # pulls x += (flush - x)/P_old stay exact (two flushes at the
+            # same step with the same divisor would drift the pool mean)
+            step = max(
+                self.max_published + 2,
+                max(self.evictions.values(), default=0) + 1,
+            )
+            if step > self.total_steps:
+                # the pool finishes before the eviction could take effect —
+                # granting it would strand a flush no survivor ever pulls
+                return {"ok": True, "granted": False,
+                        "reason": "past-end"}, b""
+            self.evictions[worker] = step
+            self._cond.notify_all()
+        return {"ok": True, "granted": True, "evict_step": step}, b""
+
+    def _op_poll(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
+        with self._lock:
+            rows = []
+            step = self._poll_cursor
+            while step <= self.total_steps and self._telemetry_complete(step):
+                active = self.active_at(step)
+                cells = [self.telemetry[(step, w)] for w in active]
+                rows.append(
+                    {
+                        "step": step,
+                        "loss": _mean([c["loss"] for c in cells]),
+                        "dur_s": _mean([c["dur_s"] for c in cells]),
+                        "sent_fraction": _mean(
+                            [c["sent_fraction"] for c in cells]
+                        ),
+                        "inv_err": max(
+                            float(c["inv_err"] or 0.0) for c in cells
+                        ),
+                        "wire_bytes": float(
+                            sum(c["wire_bytes"] for c in cells)
+                        ),
+                        "p_active": len(active),
+                    }
+                )
+                step += 1
+            self._poll_cursor = step
+            resp = {
+                "ok": True,
+                "rows": rows,
+                "statuses": {str(k): v for k, v in self.statuses.items()},
+                "max_published": self.max_published,
+                "dup_mismatches": self.dup_mismatches,
+                **self._membership(),
+            }
+        return resp, b""
+
+    def _op_dump(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
+        """Test/debug hook: every stored update as one multi-part payload."""
+        with self._lock:
+            parts = []
+            for step in sorted(self.updates):
+                for w in sorted(self.updates[step]):
+                    meta, blob, _ = self.updates[step][w]
+                    parts.append(
+                        ({"worker": w, "step": step, "meta": meta}, blob)
+                    )
+            descs, payload = protocol.pack_parts(parts)
+        return {"ok": True, "parts": descs}, payload
+
+    def _op_stats(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
+        with self._lock:
+            return {"ok": True, "stats": self.stats}, b""
+
+    def _op_shutdown(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
+        with self._cond:
+            self.shutting_down = True
+            self._cond.notify_all()
+            return {"ok": True, "stats": self.stats}, b""
+
+    # -- accounting -----------------------------------------------------------
+
+    def account(self, kind: str, bytes_in: int, bytes_out: int) -> None:
+        with self._lock:
+            row = self.stats.setdefault(
+                kind, {"count": 0, "bytes_in": 0, "bytes_out": 0}
+            )
+            row["count"] += 1
+            row["bytes_in"] += bytes_in
+            row["bytes_out"] += bytes_out
+
+
+def _mean(xs) -> Optional[float]:
+    vals = [float(x) for x in xs if x is not None]
+    return sum(vals) / len(vals) if vals else None
+
+
+# -- TCP server shell ---------------------------------------------------------
+
+
+class _Handler(socketserver.BaseRequestHandler):
+    def handle(self) -> None:  # one request per connection
+        core: BrokerCore = self.server.core  # type: ignore[attr-defined]
+        try:
+            self.request.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            header, payload = protocol.recv_msg(self.request)
+            resp, blob = core.handle(header, payload)
+            out = protocol.send_msg(self.request, resp, blob)
+            hdr_len = len(json.dumps(header, separators=(",", ":")))
+            core.account(header.get("t", "?"), 8 + hdr_len + len(payload), out)
+        except (ConnectionError, ValueError, OSError):
+            pass  # client vanished mid-request; nothing to clean up
+
+
+class _Server(socketserver.ThreadingTCPServer):
+    allow_reuse_address = True
+    daemon_threads = True
+
+
+class Broker:
+    """Socket-server shell around ``BrokerCore``; in-thread or standalone."""
+
+    def __init__(self, job: dict, host: str = "127.0.0.1", port: int = 0):
+        self.core = BrokerCore(job)
+        self._server = _Server((host, port), _Handler)
+        self._server.core = self.core  # type: ignore[attr-defined]
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def addr(self) -> tuple[str, int]:
+        return self._server.server_address[:2]
+
+    def start(self) -> tuple[str, int]:
+        self._thread = threading.Thread(
+            target=self._server.serve_forever,
+            kwargs={"poll_interval": 0.05},
+            daemon=True,
+        )
+        self._thread.start()
+        return self.addr
+
+    def stop(self) -> None:
+        with self.core._cond:
+            self.core.shutting_down = True
+            self.core._cond.notify_all()
+        self._server.shutdown()
+        self._server.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", required=True, help="job config JSON file")
+    ap.add_argument("--port", type=int, default=0)
+    args = ap.parse_args()
+    with open(args.config) as f:
+        job = json.load(f)
+    broker = Broker(job, port=args.port)
+    host, port = broker.start()
+    print(f"broker listening on {host}:{port}", flush=True)
+    try:
+        threading.Event().wait()
+    except KeyboardInterrupt:
+        broker.stop()
+
+
+if __name__ == "__main__":
+    main()

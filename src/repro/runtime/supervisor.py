@@ -1,0 +1,489 @@
+r"""Host-side supervisor of the FaaS runtime — the MLLess scheduler (§4.2, §5).
+
+Owns one training job end to end:
+
+* starts the update broker (``runtime.broker``) and spawns ``n_workers``
+  real OS worker processes (``runtime.worker``), each invocation-bounded;
+* polls live (loss, step-duration) telemetry off the broker and feeds the
+  *unmodified* ``core.autotuner.ScaleInAutoTuner`` — scale-in decisions are
+  made from measured wall-clock, not modelled time;
+* on a decision, evicts the highest-id worker: the broker picks the
+  effective step, the worker flushes its replica through the
+  mean-preserving reintegration path (``dist.elastic.reintegrate_into``)
+  and exits, and the process's real lifetime stops being billed;
+* respawns workers at invocation boundaries and after crashes — a crashed
+  worker restores the newest ``checkpoint.store`` snapshot and replays
+  forward deterministically (the broker's update log serves the history);
+* meters every invocation's measured lifetime through
+  ``core.billing.faas_cost`` at the 100 ms quantum, so a live run emits a
+  real ``FaaSBill``.
+
+State machine per worker slot::
+
+    spawned -> running -> { done | evicted }          (terminal)
+                      \-> invocation-end -> respawn -> running
+                      \-> crashed        -> respawn -> running (replay)
+
+The job completes when every slot is terminal; the supervisor then restores
+the final checkpoint for a held-out eval and returns history + bill.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+from typing import Any, Optional
+
+from repro.core.autotuner import AutoTunerConfig, ScaleInAutoTuner
+from repro.core.billing import FaaSBill, faas_cost
+from repro.runtime import protocol
+from repro.runtime.broker import Broker
+from repro.runtime import workload as workload_lib
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class FaaSJobConfig:
+    """One serverless training job (all fields JSON-serializable)."""
+
+    run_dir: str
+    workload: str = "pmf"
+    workload_cfg: dict = dataclasses.field(default_factory=dict)
+    n_workers: int = 4
+    total_steps: int = 60
+    invocation_steps: int = 1_000_000  # steps per function invocation
+    checkpoint_every: int = 10
+    optimizer: str = "nesterov"
+    lr: float = 0.08
+    isp_v: float = 0.7
+    isp_decay: bool = True
+    autotune: bool = False
+    tuner: Optional[AutoTunerConfig] = None
+    # deterministic test hooks
+    scripted_evict_steps: tuple[int, ...] = ()
+    kill_worker_at_step: Optional[tuple[int, int]] = None  # (worker, step)
+    retain_updates: bool = False
+    # housekeeping
+    poll_interval_s: float = 0.05
+    deadline_s: float = 600.0
+    pull_deadline_s: float = 120.0
+    force_cpu: bool = True
+    seed: int = 0
+
+    def job_dict(self, n_batches: int) -> dict:
+        return {
+            "workload": self.workload,
+            "workload_cfg": dict(self.workload_cfg),
+            "n_workers": self.n_workers,
+            "total_steps": self.total_steps,
+            "invocation_steps": self.invocation_steps,
+            "checkpoint_every": self.checkpoint_every,
+            "optimizer": self.optimizer,
+            "lr": self.lr,
+            "isp_v": self.isp_v,
+            "isp_decay": self.isp_decay,
+            "n_batches": n_batches,
+            "run_dir": self.run_dir,
+            "pull_deadline_s": self.pull_deadline_s,
+            "seed": self.seed,
+        }
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One logical worker (survives respawns; one proc per invocation)."""
+
+    worker: int
+    proc: Optional[subprocess.Popen] = None
+    spawned_at: float = 0.0
+    invocations: int = 0
+    terminal: Optional[str] = None  # 'done' | 'evicted'
+
+    @property
+    def alive(self) -> bool:
+        return self.proc is not None and self.proc.poll() is None
+
+
+class Supervisor:
+    def __init__(self, cfg: FaaSJobConfig):
+        self.cfg = cfg
+        self.wl = workload_lib.build(cfg.workload, cfg.workload_cfg)
+        self.broker: Optional[Broker] = None
+        self.addr: Optional[tuple[str, int]] = None
+        self.slots = [_Slot(worker=w) for w in range(cfg.n_workers)]
+        self.lifetimes: list[float] = []  # one entry per finished invocation
+        self.history: list[dict] = []
+        self.scale_events: list[dict] = []
+        self.respawns: list[dict] = []
+        self.evictions: dict[int, int] = {}
+        self._frontier = 0
+        self._scripted_fired = 0
+        self._killed_once = False
+        self.tuner: Optional[ScaleInAutoTuner] = None
+        if cfg.autotune:
+            self.tuner = ScaleInAutoTuner(
+                cfg.tuner or AutoTunerConfig(), cfg.n_workers
+            )
+
+    # -- process management ---------------------------------------------------
+
+    def _worker_env(self) -> dict:
+        import repro
+
+        # repro may be a namespace package (no __init__.py): use __path__
+        pkg_dir = (
+            os.path.dirname(repro.__file__)
+            if getattr(repro, "__file__", None)
+            else next(iter(repro.__path__))
+        )
+        src = os.path.dirname(os.path.abspath(pkg_dir))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        if self.cfg.force_cpu:
+            env["JAX_PLATFORMS"] = "cpu"
+        return env
+
+    def _spawn(self, slot: _Slot) -> None:
+        assert self.addr is not None
+        logdir = os.path.join(self.cfg.run_dir, "logs")
+        os.makedirs(logdir, exist_ok=True)
+        log = open(
+            os.path.join(
+                logdir, f"w{slot.worker:03d}.inv{slot.invocations:03d}.log"
+            ),
+            "wb",
+        )
+        slot.proc = subprocess.Popen(
+            [
+                sys.executable,
+                "-m",
+                "repro.runtime.worker",
+                "--broker",
+                f"{self.addr[0]}:{self.addr[1]}",
+                "--worker-id",
+                str(slot.worker),
+            ],
+            stdout=log,
+            stderr=subprocess.STDOUT,
+            env=self._worker_env(),
+        )
+        log.close()
+        slot.spawned_at = time.monotonic()
+        slot.invocations += 1
+
+    def _reap(self, slot: _Slot, statuses: dict) -> None:
+        """Classify an exited process and respawn when the slot lives on."""
+        assert slot.proc is not None
+        code = slot.proc.returncode
+        self.lifetimes.append(time.monotonic() - slot.spawned_at)
+        status = statuses.get(str(slot.worker), "")
+        slot.proc = None
+        if status == "bye:done":
+            slot.terminal = "done"
+        elif status == "bye:evicted":
+            slot.terminal = "evicted"
+        elif status == "bye:invocation-end":
+            self._spawn(slot)  # next invocation of the same function
+        else:
+            # no goodbye: the process died (e.g. SIGKILL) — respawn; the
+            # worker restores its newest checkpoint and replays forward
+            from repro.checkpoint import store as ckpt
+
+            restored = ckpt.latest_step(
+                os.path.join(
+                    self.cfg.run_dir, "ckpt", f"w{slot.worker:03d}"
+                )
+            )
+            self.respawns.append(
+                {
+                    "worker": slot.worker,
+                    "exit_code": code,
+                    "restored_step": restored or 0,
+                    "at_frontier": self._frontier,
+                }
+            )
+            self._spawn(slot)
+
+    # -- broker RPC -----------------------------------------------------------
+
+    def _rpc(self, header: dict, payload: bytes = b"") -> tuple[dict, bytes]:
+        assert self.addr is not None
+        return protocol.request(self.addr, header, payload, timeout=30.0)
+
+    def _poll(self) -> dict:
+        resp, _ = self._rpc({"t": "poll"})
+        for row in resp["rows"]:
+            self.history.append(row)
+            self._frontier = max(self._frontier, row["step"])
+            if self.tuner is not None:
+                self.tuner.observe(row["step"], row["loss"], row["dur_s"])
+        self.evictions = {int(k): v for k, v in resp["evictions"].items()}
+        return resp
+
+    def _evict_victim(self, reason: str, s_delta=None) -> bool:
+        """Highest-id live, non-terminal, non-evicted worker leaves."""
+        victims = [
+            s.worker
+            for s in self.slots
+            if s.terminal is None and s.worker not in self.evictions
+        ]
+        if len(victims) <= 1:
+            return False
+        victim = max(victims)
+        resp, _ = self._rpc({"t": "evict", "worker": victim})
+        if not resp.get("granted"):
+            return False  # e.g. past-end: the job ends before it could land
+        # record immediately — a second decision in this same poll iteration
+        # must not re-target the worker we just evicted
+        self.evictions[victim] = resp["evict_step"]
+        self.scale_events.append(
+            {
+                "worker": victim,
+                "evict_step": resp["evict_step"],
+                "at_frontier": self._frontier,
+                "s_delta": s_delta,
+                "reason": reason,
+            }
+        )
+        return True
+
+    # -- main loop ------------------------------------------------------------
+
+    def run(self) -> dict:
+        cfg = self.cfg
+        os.makedirs(cfg.run_dir, exist_ok=True)
+        self.broker = Broker(self.cfg.job_dict(self.wl.n_batches))
+        self.addr = self.broker.start()
+        t_job0 = time.monotonic()
+        dump = None
+        try:
+            for slot in self.slots:
+                self._spawn(slot)
+            deadline = t_job0 + cfg.deadline_s
+            while True:
+                time.sleep(cfg.poll_interval_s)
+                resp = self._poll()
+                statuses = resp["statuses"]
+
+                # fault injection hook (tests): real SIGKILL mid-epoch
+                if (
+                    cfg.kill_worker_at_step is not None
+                    and not self._killed_once
+                ):
+                    w, at = cfg.kill_worker_at_step
+                    slot = self.slots[w]
+                    if self._frontier >= at and slot.alive:
+                        slot.proc.send_signal(signal.SIGKILL)
+                        self._killed_once = True
+
+                for slot in self.slots:
+                    if slot.terminal is None and slot.proc is not None \
+                            and slot.proc.poll() is not None:
+                        # refresh statuses so a just-sent bye is not
+                        # misread as a crash
+                        statuses = self._poll()["statuses"]
+                        self._reap(slot, statuses)
+
+                all_alive = all(
+                    s.alive for s in self.slots if s.terminal is None
+                )
+                if all_alive:
+                    if self._scripted_fired < len(cfg.scripted_evict_steps):
+                        nxt = cfg.scripted_evict_steps[self._scripted_fired]
+                        if self._frontier >= nxt:
+                            if self._evict_victim("scripted"):
+                                self._scripted_fired += 1
+                    if self.tuner is not None and self.history:
+                        decision = self.tuner.decide()
+                        if decision.remove_worker:
+                            self._evict_victim(
+                                decision.reason, decision.s_delta
+                            )
+
+                if all(s.terminal is not None for s in self.slots):
+                    self._poll()
+                    break
+                if time.monotonic() > deadline:
+                    raise RuntimeError(
+                        f"FaaS job deadline ({cfg.deadline_s}s) exceeded at "
+                        f"frontier {self._frontier}; statuses={statuses}; "
+                        f"logs in {os.path.join(cfg.run_dir, 'logs')}"
+                    )
+
+            if cfg.retain_updates:
+                dump = self._dump_updates()
+            resp, _ = self._rpc({"t": "shutdown"})
+            stats = resp.get("stats", {})
+            dup_mismatches = self.broker.core.dup_mismatches
+        finally:
+            for slot in self.slots:
+                if slot.alive:
+                    slot.proc.kill()
+            if self.broker is not None:
+                self.broker.stop()
+
+        wall = time.monotonic() - t_job0
+        bill = faas_cost(self.lifetimes, wall, n_redis=1)
+        return self._result(wall, bill, stats, dump, dup_mismatches)
+
+    # -- results --------------------------------------------------------------
+
+    def _dump_updates(self) -> list[dict]:
+        resp, blob = self._rpc({"t": "dump"})
+        out = []
+        for desc, part in protocol.unpack_parts(resp["parts"], blob):
+            out.append(
+                {
+                    "worker": desc["worker"],
+                    "step": desc["step"],
+                    "update": protocol.decode_tree(
+                        desc["meta"], part, self.wl.params0
+                    ),
+                }
+            )
+        return out
+
+    def _final_eval(self) -> tuple[Optional[float], Optional[int]]:
+        from repro.checkpoint import store as ckpt
+
+        survivors = [s.worker for s in self.slots if s.terminal == "done"]
+        if not survivors:
+            return None, None
+        w = min(survivors)
+        d = os.path.join(self.cfg.run_dir, "ckpt", f"w{w:03d}")
+        step = ckpt.latest_step(d)
+        if step is None:
+            return None, None
+        import jax
+        import jax.numpy as jnp
+
+        from repro import optim as optim_lib
+
+        optimizer = optim_lib.make(self.cfg.optimizer, self.cfg.lr)
+        like = {
+            "params": self.wl.params0,
+            "opt": optimizer.init(self.wl.params0),
+            "residual": jax.tree.map(jnp.zeros_like, self.wl.params0),
+        }
+        tree = ckpt.restore(d, step, like)
+        return self.wl.eval_fn(tree["params"]), step
+
+    def _result(self, wall, bill: FaaSBill, stats, dump, dup_mismatches):
+        final_eval, final_ckpt_step = self._final_eval()
+        hist = self.history
+        durs = [r["dur_s"] for r in hist if r.get("dur_s")]
+        result = {
+            "workload": self.wl.name,
+            "n_workers": self.cfg.n_workers,
+            "steps": self._frontier,
+            "final_pool": sum(1 for s in self.slots if s.terminal == "done"),
+            "final_loss": hist[-1]["loss"] if hist else None,
+            "final_eval": final_eval,
+            "final_ckpt_step": final_ckpt_step,
+            "history": hist,
+            "measured_step_s": (sum(durs) / len(durs)) if durs else None,
+            "invariant_max_err": max(
+                (r["inv_err"] for r in hist), default=0.0
+            ),
+            "wire_bytes_total": sum(r["wire_bytes"] for r in hist),
+            "scale_events": self.scale_events,
+            "respawns": self.respawns,
+            "n_respawns": len(self.respawns),
+            "n_invocations": len(self.lifetimes),
+            "lifetimes_s": list(self.lifetimes),
+            "dup_mismatches": dup_mismatches,
+            "wall_s": wall,
+            "bill": {
+                "worker_seconds": bill.worker_seconds,
+                "wall_seconds": bill.wall_seconds,
+                "worker_cost": bill.worker_cost,
+                "infra_cost": bill.infra_cost,
+                "total": bill.total,
+            },
+            "broker_stats": stats,
+        }
+        if dump is not None:
+            result["updates"] = dump
+        return result
+
+
+def run_job(cfg: FaaSJobConfig) -> dict:
+    """Run one FaaS training job to completion; returns the result dict."""
+    return Supervisor(cfg).run()
+
+
+# the canonical quickstart job — examples/mlless_faas.py runs it and
+# benchmarks/fig6_autotuner.py calibrates the simulator against the SAME
+# configuration, so it lives in exactly one place
+PMF_QUICKSTART_CFG = {
+    "n_users": 200,
+    "n_movies": 300,
+    "n_ratings": 12_000,
+    "rank": 8,
+    "batch_size": 512,
+}
+
+
+def pmf_quickstart_config(
+    run_dir: str, n_workers: int = 4, total_steps: int = 140
+) -> FaaSJobConfig:
+    """PMF on 4 CPU workers with a live knee-driven scale-in (~1 min)."""
+    return FaaSJobConfig(
+        run_dir=run_dir,
+        workload="pmf",
+        workload_cfg=dict(PMF_QUICKSTART_CFG),
+        n_workers=n_workers,
+        total_steps=total_steps,
+        invocation_steps=max(total_steps // 2, 1),  # >= 2 real invocations
+        checkpoint_every=20,
+        optimizer="nesterov",
+        lr=0.3,
+        isp_v=0.7,
+        autotune=True,
+        tuner=AutoTunerConfig(
+            sched_interval_s=0.5,
+            delta_s=0.25,
+            knee_slope_threshold=0.3,
+            min_points_for_fit=8,
+        ),
+        deadline_s=480.0,
+    )
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workload", default="pmf",
+                    choices=workload_lib.WORKLOAD_NAMES)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--invocation-steps", type=int, default=1_000_000)
+    ap.add_argument("--autotune", action="store_true")
+    ap.add_argument("--run-dir", default="/tmp/repro_faas")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    cfg = FaaSJobConfig(
+        run_dir=args.run_dir,
+        workload=args.workload,
+        n_workers=args.workers,
+        total_steps=args.steps,
+        invocation_steps=args.invocation_steps,
+        autotune=args.autotune,
+    )
+    res = run_job(cfg)
+    slim = {k: v for k, v in res.items() if k not in ("history", "updates")}
+    print(json.dumps(slim, indent=1, default=str))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,283 @@
+"""Stateless FaaS worker — one invocation of the MLLess training function.
+
+Spawned as ``python -m repro.runtime.worker --broker HOST:PORT --worker-id K``
+with *no other job state on the command line*: everything (workload name +
+config, ISP threshold, step budget, checkpoint root) comes from the broker's
+hello response, and model/optimizer/residual state is restored from
+``checkpoint.store`` — the invocation-bounded, externally-checkpointed
+worker model of the paper (§5).
+
+Per step t the worker runs the *paper-faithful replica semantics* of
+``core.isp`` (the same math ``core.simulator`` vmaps, here on a real
+process):
+
+1. fetch its minibatch key from the broker, load the batch locally;
+2. ``u_t = optimizer(grads) / P_active(t)`` (averaged-gradient scaling);
+3. ``sig, residual' = filter_update(residual + u_t)`` — the ISP
+   significance split of ``core.isp``, bit-identical semantics;
+4. publish ``sig`` (sparse-encoded) to the broker;
+5. pull the peers' significant updates for t (ISP barrier) and apply
+   ``x += u_t + sum_peers sig`` — own update in full, peers filtered;
+6. on an eviction notice effective at t: publish ``x + residual`` as the
+   flush payload (the leaving worker's model-averaging hand-off) and exit;
+   on a flush from a leaving peer: mean-preserving reintegration via
+   ``dist.elastic.reintegrate_into``.
+
+Crash recovery is replay: a respawned worker restores the newest checkpoint
+and re-executes forward — every input (minibatch key, peer updates, pool
+membership) is served deterministically by the broker, so replayed
+publishes are bit-identical (the broker counts any mismatch) and the pool
+never observes a diverging history.
+
+Exit codes: 0 clean (done / evicted / invocation boundary), 3 broker
+abort, 4 broker unreachable, 5 barrier deadline exceeded.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Any, Optional
+
+PyTree = Any
+
+
+def _rpc(addr, header, payload=b"", timeout=30.0, tries=5):
+    from repro.runtime import protocol
+
+    last: Optional[Exception] = None
+    for i in range(tries):
+        try:
+            return protocol.request(addr, header, payload, timeout=timeout)
+        except (ConnectionError, OSError, TimeoutError) as e:
+            last = e
+            time.sleep(0.05 * (i + 1))
+    raise SystemExit(4) from last
+
+
+class _Membership:
+    """Worker-side view of the eviction table (worker -> effective step)."""
+
+    def __init__(self, n_workers: int):
+        self.P = n_workers
+        self.evictions: dict[int, int] = {}
+
+    def update(self, resp: dict) -> None:
+        for k, v in (resp.get("evictions") or {}).items():
+            self.evictions[int(k)] = int(v)
+
+    def p_active(self, step: int) -> int:
+        return self.P - sum(1 for e in self.evictions.values() if e <= step)
+
+    def my_evict_step(self, worker: int) -> Optional[int]:
+        return self.evictions.get(worker)
+
+
+def run_worker(host: str, port: int, worker_id: int) -> int:
+    # jax and friends are imported lazily so ``--help`` stays instant — the
+    # import cost is the measured FaaS cold-start of each invocation.
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import optim
+    from repro.checkpoint import store as ckpt
+    from repro.core import isp as isp_lib
+    from repro.dist.elastic import reintegrate_into
+    from repro.runtime import protocol, workload as workload_lib
+
+    addr = (host, port)
+    hello, _ = _rpc(addr, {"t": "hello", "worker": worker_id})
+    job = hello["job"]
+    members = _Membership(int(job["n_workers"]))
+    members.update(hello)
+
+    wl = workload_lib.build(job["workload"], job["workload_cfg"])
+    optimizer = optim.make(job["optimizer"], job["lr"])
+    isp = isp_lib.ISPConfig(
+        v=float(job["isp_v"]), decay=bool(job.get("isp_decay", True))
+    )
+    total_steps = int(job["total_steps"])
+    invocation_steps = int(job.get("invocation_steps", 1_000_000))
+    checkpoint_every = int(job.get("checkpoint_every", 10))
+    pull_deadline_s = float(job.get("pull_deadline_s", 120.0))
+    ckpt_dir = os.path.join(job["run_dir"], "ckpt", f"w{worker_id:03d}")
+
+    params = wl.params0
+    opt_state = optimizer.init(params)
+    residual = jax.tree.map(jnp.zeros_like, params)
+    start_step = 1
+    last_saved = 0
+    latest = ckpt.latest_step(ckpt_dir)
+    if latest is not None:
+        tree = ckpt.restore(
+            ckpt_dir,
+            latest,
+            {"params": params, "opt": opt_state, "residual": residual},
+        )
+        params, opt_state, residual = (
+            tree["params"], tree["opt"], tree["residual"],
+        )
+        start_step = latest + 1
+        last_saved = latest
+
+    def compute(params, opt_state, residual, batch, inv_p, t):
+        loss, grads = wl.grad_fn(params, batch)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        u = jax.tree.map(lambda a: (a * inv_p).astype(a.dtype), updates)
+        sig, new_state, masks = isp_lib.filter_update(
+            isp, isp_lib.ISPState(residual=residual, step=t), u, params
+        )
+        res = new_state.residual
+        sent = isp_lib.communicated_fraction(masks)
+        # conservation witness: sent + residual' - (residual + update), the
+        # pool-wide ISP invariant the fault-injection test asserts on
+        errs = jax.tree.map(
+            lambda s, r2, r0, uu: jnp.max(jnp.abs((s + r2) - (r0 + uu))),
+            sig, res, residual, u,
+        )
+        inv_err = jax.tree.reduce(jnp.maximum, errs)
+        return u, sig, res, opt_state, loss, sent, inv_err
+
+    compute = jax.jit(compute)
+    apply_visible = jax.jit(
+        lambda p, u, peers: jax.tree.map(
+            lambda a, b, c: a + b + c.astype(a.dtype), p, u, peers
+        )
+    )
+    reintegrate = jax.jit(reintegrate_into)
+
+    def save_ckpt(step_done: int) -> None:
+        nonlocal last_saved
+        if step_done <= 0 or step_done == last_saved:
+            return
+        ckpt.save(
+            ckpt_dir,
+            step_done,
+            {"params": params, "opt": opt_state, "residual": residual},
+            extra={"worker": worker_id, "next_step": step_done + 1},
+        )
+        last_saved = step_done
+
+    def bye(reason: str) -> None:
+        _rpc(addr, {"t": "bye", "worker": worker_id, "reason": reason})
+
+    t = start_step
+    steps_this_invocation = 0
+    while True:
+        ev = members.my_evict_step(worker_id)
+        # an eviction effective past the job's end is a no-op (the broker
+        # refuses to grant those, but guard anyway): finish as 'done'
+        if ev is not None and ev <= total_steps and t >= ev:
+            # eviction effective at step ev: publish replica + residual (the
+            # paper's leaving-worker hand-off, error-feedback form: no
+            # accumulated update mass is lost) and end this worker's life
+            flushed = jax.tree.map(lambda x, r: x + r, params, residual)
+            meta, payload = protocol.encode_tree(flushed)
+            _rpc(
+                addr,
+                {"t": "flush", "worker": worker_id, "step": ev, "meta": meta},
+                payload,
+            )
+            bye("evicted")
+            return 0
+        if t > total_steps:
+            save_ckpt(t - 1)
+            bye("done")
+            return 0
+        if steps_this_invocation >= invocation_steps:
+            save_ckpt(t - 1)
+            bye("invocation-end")
+            return 0
+
+        t0 = time.perf_counter()
+        resp, _ = _rpc(
+            addr, {"t": "batch", "worker": worker_id, "step": t}
+        )
+        members.update(resp)
+        batch = wl.batch(int(resp["key"]))
+        p_act = members.p_active(t)
+        u, sig, res, opt_state, loss, sent, inv_err = compute(
+            params,
+            opt_state,
+            residual,
+            batch,
+            jnp.asarray(1.0 / p_act, jnp.float32),
+            jnp.asarray(t, jnp.int32),
+        )
+        meta, payload = protocol.encode_tree(sig)
+        ack, _ = _rpc(
+            addr,
+            {
+                "t": "publish",
+                "worker": worker_id,
+                "step": t,
+                "meta": meta,
+                "loss": float(loss),
+                "sent_fraction": float(sent),
+                "inv_err": float(inv_err),
+            },
+            payload,
+        )
+        members.update(ack)
+
+        deadline = time.monotonic() + pull_deadline_s
+        while True:
+            resp, blob = _rpc(
+                addr,
+                {"t": "pull", "worker": worker_id, "step": t,
+                 "timeout_s": 2.0},
+                timeout=10.0,
+            )
+            if resp.get("abort"):
+                return 3
+            members.update(resp)
+            if resp.get("ready"):
+                break
+            if time.monotonic() > deadline:
+                return 5
+
+        peers_sum = jax.tree.map(
+            lambda x: np.zeros(np.shape(x), np.asarray(x).dtype), params
+        )
+        flushes: list[tuple[int, PyTree]] = []
+        for desc, part in protocol.unpack_parts(resp["parts"], blob):
+            tree = protocol.decode_tree(desc["meta"], part, wl.params0)
+            if desc.get("flush"):
+                flushes.append((int(desc["worker"]), tree))
+            else:
+                # fixed (ascending worker id) float32 summation order keeps
+                # the replay path and every peer bit-identical
+                peers_sum = jax.tree.map(lambda a, b: a + b, peers_sum, tree)
+        params = apply_visible(params, u, peers_sum)
+        if flushes:
+            pool_before = members.p_active(t - 1)
+            for _q, flushed in sorted(flushes, key=lambda kv: kv[0]):
+                params = reintegrate(
+                    params, flushed, jnp.asarray(pool_before, jnp.float32)
+                )
+        residual = res
+        dur = time.perf_counter() - t0
+        _rpc(
+            addr,
+            {"t": "report", "worker": worker_id, "step": t,
+             "dur_s": float(dur)},
+        )
+        steps_this_invocation += 1
+        if t % checkpoint_every == 0:
+            save_ckpt(t)
+        t += 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--broker", required=True, help="HOST:PORT")
+    ap.add_argument("--worker-id", type=int, required=True)
+    args = ap.parse_args()
+    host, port = args.broker.rsplit(":", 1)
+    raise SystemExit(run_worker(host, int(port), args.worker_id))
+
+
+if __name__ == "__main__":
+    main()

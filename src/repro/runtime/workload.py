@@ -1,0 +1,155 @@
+"""Named, fully-deterministic workloads for the FaaS runtime.
+
+A stateless worker cannot be handed Python objects — it gets a workload
+*name* plus a JSON config dict from the broker's hello response and must
+rebuild everything (data, initial parameters, grad function, minibatch
+store) bit-identically to every peer and to the supervisor.  That's what
+this registry guarantees: ``build(name, cfg)`` is a pure function of its
+JSON-serializable arguments.
+
+Workloads mirror the paper's two training jobs (§6.1):
+
+* ``pmf`` — probabilistic matrix factorization on a MovieLens-like set
+  (sparse updates; the headline ISP workload);
+* ``lr``  — dense logistic regression on a Criteo-like set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.data import synthetic
+from repro.data.store import MinibatchStore
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Workload:
+    """Everything a worker or supervisor needs about one training job."""
+
+    name: str
+    cfg: dict
+    params0: PyTree
+    grad_fn: Callable[[PyTree, Any], tuple[Any, PyTree]]
+    store: MinibatchStore
+    make_batch: Callable[[list[np.ndarray]], Any]
+    eval_fn: Callable[[PyTree], float]
+
+    @property
+    def n_batches(self) -> int:
+        return self.store.n_batches
+
+    def batch(self, key: int):
+        return self.make_batch(self.store.fetch(key))
+
+
+def _pmf(cfg: dict) -> Workload:
+    from repro.models import pmf
+    import jax
+    import jax.numpy as jnp
+
+    c = {
+        "n_users": 300,
+        "n_movies": 500,
+        "n_ratings": 24_000,
+        "rank": 8,
+        "batch_size": 256,
+        "seed": 0,
+        "eval_size": 2048,
+        **cfg,
+    }
+    ml = synthetic.MovieLensLikeConfig(
+        n_users=c["n_users"],
+        n_movies=c["n_movies"],
+        n_ratings=c["n_ratings"],
+        rank=c["rank"],
+        seed=c["seed"],
+    )
+    users, movies, ratings = synthetic.make_movielens(ml)
+    mcfg = pmf.PMFConfig(
+        n_users=ml.n_users, n_movies=ml.n_movies, rank=ml.rank
+    )
+    params0 = pmf.init(mcfg, jax.random.PRNGKey(c["seed"]))
+    store = MinibatchStore([users, movies, ratings], c["batch_size"])
+    rng = np.random.default_rng(c["seed"] + 17)
+    eidx = rng.choice(
+        len(ratings), min(c["eval_size"], len(ratings)), replace=False
+    )
+    eval_batch = pmf.RatingsBatch(
+        user=jnp.asarray(users[eidx]),
+        movie=jnp.asarray(movies[eidx]),
+        rating=jnp.asarray(ratings[eidx]),
+    )
+
+    def make_batch(arrays: list[np.ndarray]):
+        u, m, r = arrays
+        return pmf.RatingsBatch(
+            user=jnp.asarray(u), movie=jnp.asarray(m), rating=jnp.asarray(r)
+        )
+
+    return Workload(
+        name="pmf",
+        cfg=c,
+        params0=params0,
+        grad_fn=partial(pmf.grad_fn, mcfg),
+        store=store,
+        make_batch=make_batch,
+        eval_fn=lambda p: float(pmf.rmse(p, eval_batch)),
+    )
+
+
+def _lr(cfg: dict) -> Workload:
+    from repro.models import lr
+    import jax
+    import jax.numpy as jnp
+
+    c = {
+        "n_samples": 20_000,
+        "batch_size": 256,
+        "seed": 0,
+        "eval_size": 2048,
+        **cfg,
+    }
+    like = synthetic.CriteoLikeConfig(n_samples=c["n_samples"], seed=c["seed"])
+    x, y = synthetic.make_criteo_dense(like)
+    lcfg = lr.LRConfig(n_features=like.n_numerical, sparse=False)
+    params0 = lr.init(lcfg, jax.random.PRNGKey(c["seed"]))
+    store = MinibatchStore([x, y], c["batch_size"])
+    rng = np.random.default_rng(c["seed"] + 17)
+    eidx = rng.choice(len(y), min(c["eval_size"], len(y)), replace=False)
+    eval_batch = lr.DenseBatch(x=jnp.asarray(x[eidx]), y=jnp.asarray(y[eidx]))
+
+    def make_batch(arrays: list[np.ndarray]):
+        xb, yb = arrays
+        return lr.DenseBatch(x=jnp.asarray(xb), y=jnp.asarray(yb))
+
+    return Workload(
+        name="lr",
+        cfg=c,
+        params0=params0,
+        grad_fn=partial(lr.grad_fn, lcfg),
+        store=store,
+        make_batch=make_batch,
+        eval_fn=lambda p: float(lr.loss_fn(lcfg, p, eval_batch)),
+    )
+
+
+_REGISTRY: dict[str, Callable[[dict], Workload]] = {
+    "pmf": _pmf,
+    "lr": _lr,
+}
+
+WORKLOAD_NAMES = tuple(sorted(_REGISTRY))
+
+
+def build(name: str, cfg: Optional[dict] = None) -> Workload:
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown workload {name!r}; registered: {WORKLOAD_NAMES}"
+        )
+    return _REGISTRY[name](dict(cfg or {}))

@@ -1,0 +1,112 @@
+"""checkpoint.store atomicity under concurrent writers and readers.
+
+The FaaS runtime has several worker *processes* saving and restoring
+snapshots concurrently (and a SIGKILL can land mid-save), so the store
+promises: a tag is always one writer's complete output — never a torn mix —
+and a reader racing a replace retries the brief not-found window instead of
+observing partial state.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+
+pytestmark = pytest.mark.skipif(
+    "fork" not in mp.get_all_start_methods(),
+    reason="needs fork to share the imported test state cheaply",
+)
+
+
+def _tree(fill: float) -> dict:
+    return {
+        "params": np.full((32, 8), fill, np.float32),
+        "opt": np.full((8,), fill * 2, np.float32),
+    }
+
+
+def _writer(directory: str, step: int, fill: float, n_saves: int) -> None:
+    for _ in range(n_saves):
+        store.save(directory, step, _tree(fill), extra={"fill": fill})
+
+
+def _assert_untorn(directory: str, step: int, fills: tuple[float, ...]) -> None:
+    """One restore must observe ONE writer's output end to end (all leaves
+    from the same save — the npz-embedded manifest makes the read a single
+    file open, so this holds even while a writer replaces the tag)."""
+    got = store.restore(directory, step, _tree(0.0))
+    fill = float(got["params"][0, 0])
+    assert fill in fills
+    np.testing.assert_array_equal(got["params"], _tree(fill)["params"])
+    np.testing.assert_array_equal(got["opt"], _tree(fill)["opt"])
+
+
+def test_two_processes_saving_the_same_tag_never_tear(tmp_path):
+    d = str(tmp_path / "ck")
+    ctx = mp.get_context("fork")
+    procs = [
+        ctx.Process(target=_writer, args=(d, 7, fill, 20))
+        for fill in (1.0, 2.0)
+    ]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(60)
+        assert p.exitcode == 0
+    _assert_untorn(d, 7, (1.0, 2.0))
+    # quiescent: manifest.json agrees with the arrays (same winning writer)
+    fill = float(store.restore(d, 7, _tree(0.0))["params"][0, 0])
+    assert store.manifest_extra(d, 7)["fill"] == fill
+    assert store.latest_step(d) == 7
+    # no staging/aside litter survives a clean race
+    leftovers = [x for x in os.listdir(d) if not x == "step_0000000007"]
+    assert leftovers == []
+
+
+def test_restore_while_writer_replaces(tmp_path):
+    d = str(tmp_path / "ck")
+    store.save(d, 3, _tree(1.0), extra={"fill": 1.0})
+    ctx = mp.get_context("fork")
+    w = ctx.Process(target=_writer, args=(d, 3, 2.0, 40))
+    w.start()
+    try:
+        for _ in range(60):  # hammer restores during the replaces
+            _assert_untorn(d, 3, (1.0, 2.0))
+    finally:
+        w.join(60)
+    assert w.exitcode == 0
+    _assert_untorn(d, 3, (2.0,))  # last writer wins once quiescent
+
+
+def test_latest_step_ignores_staging_and_aside_dirs(tmp_path):
+    d = str(tmp_path / "ck")
+    store.save(d, 5, _tree(1.0))
+    os.makedirs(os.path.join(d, "step_0000000009.tmp-123-abc"))
+    os.makedirs(os.path.join(d, "step_0000000011.old-deadbeef"))
+    assert store.latest_step(d) == 5
+
+
+def test_crash_mid_save_leaves_no_visible_checkpoint(tmp_path):
+    """A writer SIGKILL'd mid-save (simulated by a dangling staging dir)
+    must not make the tag visible or restorable."""
+    d = str(tmp_path / "ck")
+    os.makedirs(os.path.join(d, "step_0000000004.tmp-999-dead"))
+    with open(
+        os.path.join(d, "step_0000000004.tmp-999-dead", "manifest.json"), "w"
+    ) as f:
+        f.write("{")  # torn json, as a crash would leave
+    assert store.latest_step(d) is None
+
+
+def test_replace_same_step_updates_content(tmp_path):
+    # the runtime re-saves a tag after eviction transitions; replace must
+    # be atomic AND take effect
+    d = str(tmp_path / "ck")
+    store.save(d, 2, _tree(1.0), extra={"fill": 1.0})
+    store.save(d, 2, _tree(3.0), extra={"fill": 3.0})
+    _assert_untorn(d, 2, (3.0,))

@@ -1,0 +1,68 @@
+"""Fault injection: SIGKILL a live worker process mid-epoch.
+
+The supervisor must detect the death, respawn the worker from its newest
+``checkpoint.store`` snapshot, and the respawned process must replay
+forward deterministically (bit-identical re-publishes; the broker counts
+any mismatch) until it catches the pool — with the ISP conservation
+invariant ``sent + residual' == residual + update`` holding pool-wide
+through the crash and recovery.
+"""
+
+from __future__ import annotations
+
+from repro.runtime import FaaSJobConfig, run_job
+
+WCFG = {
+    "n_users": 120,
+    "n_movies": 150,
+    "n_ratings": 6000,
+    "rank": 4,
+    "batch_size": 64,
+}
+P = 3
+STEPS = 14
+KILL_WORKER = 2
+KILL_AT = 6  # after the step-4 checkpoint exists
+CKPT_EVERY = 4
+
+
+def test_sigkill_mid_epoch_respawns_from_checkpoint(tmp_path):
+    res = run_job(
+        FaaSJobConfig(
+            run_dir=str(tmp_path / "job"),
+            workload="pmf",
+            workload_cfg=WCFG,
+            n_workers=P,
+            total_steps=STEPS,
+            checkpoint_every=CKPT_EVERY,
+            optimizer="nesterov",
+            lr=0.08,
+            isp_v=0.5,
+            kill_worker_at_step=(KILL_WORKER, KILL_AT),
+            deadline_s=240.0,
+        )
+    )
+    # the kill really happened and was recovered
+    assert res["n_respawns"] >= 1
+    ev = res["respawns"][0]
+    assert ev["worker"] == KILL_WORKER
+    assert ev["exit_code"] == -9  # SIGKILL
+    # respawned from the last checkpoint, not from scratch and not from
+    # beyond the crash point
+    assert 0 < ev["restored_step"] <= ev["at_frontier"]
+    assert ev["restored_step"] % CKPT_EVERY == 0
+
+    # the job still completed every step with the full pool
+    assert res["steps"] == STEPS
+    assert res["final_pool"] == P
+    assert len(res["history"]) == STEPS
+
+    # deterministic replay: any step the dead worker had already published
+    # must be re-published bit-identically
+    assert res["dup_mismatches"] == 0
+
+    # ISP conservation invariant pool-wide, through crash + recovery
+    assert res["invariant_max_err"] == 0.0
+
+    # progress was not lost
+    assert res["history"][-1]["loss"] < res["history"][0]["loss"]

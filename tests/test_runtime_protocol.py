@@ -1,0 +1,234 @@
+"""Wire protocol + broker unit tests (repro.runtime.protocol / .broker).
+
+Covers the framing/encoding layer the multi-process runtime stands on, and
+the broker's barrier/membership/accounting semantics via real sockets (the
+broker thread is the production server; only the workers are stubbed).
+"""
+
+from __future__ import annotations
+
+import socket
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import protocol
+from repro.runtime.broker import Broker
+
+
+# -- framing ------------------------------------------------------------------
+
+
+def test_framing_roundtrip_over_socketpair():
+    a, b = socket.socketpair()
+    try:
+        header = {"t": "publish", "worker": 3, "nested": {"x": [1, 2]}}
+        payload = bytes(range(256)) * 17
+        n = protocol.send_msg(a, header, payload)
+        got_h, got_p = protocol.recv_msg(b)
+        assert got_h == header
+        assert got_p == payload
+        assert n == 8 + len(payload) + len(
+            __import__("json").dumps(header, separators=(",", ":"))
+        )
+    finally:
+        a.close()
+        b.close()
+
+
+def test_framing_empty_payload():
+    a, b = socket.socketpair()
+    try:
+        protocol.send_msg(a, {"t": "poll"})
+        h, p = protocol.recv_msg(b)
+        assert h == {"t": "poll"} and p == b""
+    finally:
+        a.close()
+        b.close()
+
+
+# -- pytree encoding ----------------------------------------------------------
+
+
+def _tree():
+    return {
+        "U": jnp.zeros((16, 4), jnp.float32),
+        "M": jnp.ones((4, 8), jnp.float32),
+    }
+
+
+def test_encode_decode_dense_and_sparse():
+    tree = _tree()
+    # mostly-zero leaf -> sparse; dense leaf stays dense
+    tree["U"] = tree["U"].at[3, 2].set(1.5).at[7, 0].set(-2.0)
+    meta, payload = protocol.encode_tree(tree)
+    by_key = {m["k"]: m for m in meta}
+    assert by_key["M"]["enc"] == "dense"
+    assert by_key["U"]["enc"] == "sparse" and by_key["U"]["nnz"] == 2
+    out = protocol.decode_tree(meta, payload, tree)
+    for a, b in zip(
+        np.asarray(tree["U"]), np.asarray(out["U"])
+    ):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(np.asarray(tree["M"]), out["M"])
+    # sparse wire bytes: nnz * (4B index + 4B fp32 value)
+    assert by_key["U"]["nbytes"] == 2 * 8
+    assert protocol.wire_bytes(meta) == 2 * 8 + 4 * 8 * 4
+
+
+def test_decode_rejects_wrong_template():
+    meta, payload = protocol.encode_tree(_tree())
+    with pytest.raises(ValueError):
+        protocol.decode_tree(meta, payload, {"only": jnp.zeros(3)})
+
+
+def test_pack_unpack_parts():
+    parts = [({"worker": 0}, b"abc"), ({"worker": 1}, b"defgh")]
+    descs, blob = protocol.pack_parts(parts)
+    out = protocol.unpack_parts(descs, blob)
+    assert [p[1] for p in out] == [b"abc", b"defgh"]
+    assert [p[0]["worker"] for p in out] == [0, 1]
+
+
+# -- broker over real sockets -------------------------------------------------
+
+
+JOB = {
+    "workload": "pmf",
+    "workload_cfg": {},
+    "n_workers": 2,
+    "total_steps": 10,
+    "n_batches": 5,
+}
+
+
+@pytest.fixture()
+def broker():
+    b = Broker(dict(JOB))
+    b.start()
+    yield b
+    b.stop()
+
+
+def _rpc(broker, header, payload=b""):
+    return protocol.request(broker.addr, header, payload, timeout=10.0)
+
+
+def test_broker_hello_and_batch_keys(broker):
+    resp, _ = _rpc(broker, {"t": "hello", "worker": 0})
+    assert resp["ok"] and resp["job"]["n_workers"] == 2
+    # deterministic round-robin minibatch keys: (step-1)*P + worker mod n
+    keys = [
+        _rpc(broker, {"t": "batch", "worker": w, "step": s})[0]["key"]
+        for s in (1, 2) for w in (0, 1)
+    ]
+    assert keys == [0, 1, 2, 3]
+
+
+def test_broker_barrier_blocks_until_all_publish(broker):
+    meta, payload = protocol.encode_tree({"x": jnp.ones(4)})
+    _rpc(
+        broker,
+        {"t": "publish", "worker": 0, "step": 1, "meta": meta,
+         "loss": 1.0, "sent_fraction": 1.0, "inv_err": 0.0},
+        payload,
+    )
+    resp, _ = _rpc(
+        broker, {"t": "pull", "worker": 0, "step": 1, "timeout_s": 0.1}
+    )
+    assert resp["ready"] is False  # worker 1 hasn't published
+    done = {}
+
+    def late_publish():
+        _rpc(
+            broker,
+            {"t": "publish", "worker": 1, "step": 1, "meta": meta,
+             "loss": 2.0, "sent_fraction": 1.0, "inv_err": 0.0},
+            payload,
+        )
+        done["published"] = True
+
+    t = threading.Thread(target=late_publish)
+    t.start()
+    resp, blob = _rpc(
+        broker, {"t": "pull", "worker": 0, "step": 1, "timeout_s": 5.0}
+    )
+    t.join()
+    assert resp["ready"] is True
+    parts = protocol.unpack_parts(resp["parts"], blob)
+    assert [p[0]["worker"] for p in parts] == [1]
+    got = protocol.decode_tree(
+        parts[0][0]["meta"], parts[0][1], {"x": jnp.zeros(4)}
+    )
+    np.testing.assert_array_equal(got["x"], np.ones(4))
+
+
+def test_broker_duplicate_publish_is_idempotent(broker):
+    meta, payload = protocol.encode_tree({"x": jnp.arange(4.0)})
+    h = {"t": "publish", "worker": 0, "step": 2, "meta": meta,
+         "loss": 1.0, "sent_fraction": 1.0, "inv_err": 0.0}
+    r1, _ = _rpc(broker, h, payload)
+    r2, _ = _rpc(broker, h, payload)  # bit-identical replay
+    assert (r1["dup"], r2["dup"]) == (False, True)
+    assert broker.core.dup_mismatches == 0
+    # a diverging replay is counted (the determinism tripwire)
+    meta2, payload2 = protocol.encode_tree({"x": jnp.arange(4.0) + 1})
+    _rpc(broker, {**h, "meta": meta2}, payload2)
+    assert broker.core.dup_mismatches == 1
+
+
+def test_broker_evict_step_is_safely_in_the_future(broker):
+    meta, payload = protocol.encode_tree({"x": jnp.ones(2)})
+    for w in (0, 1):
+        _rpc(
+            broker,
+            {"t": "publish", "worker": w, "step": 3, "meta": meta,
+             "loss": 1.0, "sent_fraction": 1.0, "inv_err": 0.0},
+            payload,
+        )
+    resp, _ = _rpc(broker, {"t": "evict", "worker": 1})
+    assert resp["granted"] and resp["evict_step"] == 5  # max_published + 2
+    assert broker.core.active_at(4) == [0, 1]
+    assert broker.core.active_at(5) == [0]
+    # idempotent
+    again, _ = _rpc(broker, {"t": "evict", "worker": 1})
+    assert again["granted"] and again["evict_step"] == 5
+    # a second eviction granted back-to-back gets a DISTINCT effective step:
+    # one leaver per step keeps the survivors' sequential mean-preserving
+    # pulls exact
+    other, _ = _rpc(broker, {"t": "evict", "worker": 0})
+    assert other["granted"] and other["evict_step"] == 6
+
+
+def test_broker_refuses_eviction_past_job_end(broker):
+    meta, payload = protocol.encode_tree({"x": jnp.ones(2)})
+    for w in (0, 1):
+        _rpc(
+            broker,
+            {"t": "publish", "worker": w, "step": 9, "meta": meta,
+             "loss": 1.0, "sent_fraction": 1.0, "inv_err": 0.0},
+            payload,
+        )
+    # effective step would be 11 > total_steps=10: the pool finishes before
+    # the eviction could land, so granting it would strand the flush
+    resp, _ = _rpc(broker, {"t": "evict", "worker": 1})
+    assert resp["granted"] is False and resp["reason"] == "past-end"
+    assert broker.core.evictions == {}
+
+
+def test_broker_accounts_bytes_per_message_type(broker):
+    meta, payload = protocol.encode_tree({"x": jnp.ones(8)})
+    _rpc(
+        broker,
+        {"t": "publish", "worker": 0, "step": 1, "meta": meta,
+         "loss": 0.0, "sent_fraction": 1.0, "inv_err": 0.0},
+        payload,
+    )
+    _rpc(broker, {"t": "batch", "worker": 0, "step": 1})
+    stats, _ = _rpc(broker, {"t": "stats"})
+    s = stats["stats"]
+    assert s["publish"]["count"] == 1
+    assert s["publish"]["bytes_in"] >= len(payload)
+    assert s["batch"]["count"] == 1 and s["batch"]["bytes_out"] > 0

@@ -37,6 +37,11 @@ B = 2048
 # job the example runs
 LIVE_P = 4
 LIVE_STEPS = 140
+# solo-measured runtime-init constant of the local substrate (python +
+# jax import + restore, uncontended) — the FaaS cold start each invocation
+# bills and each invocation round stalls the pool for.  A modelling
+# constant like CommModel's RTTs, NOT fit to the live run.
+COLD_START_S = 2.0
 
 
 def _run(kind: str, with_tuner: bool) -> dict:
@@ -78,11 +83,31 @@ def _run_live() -> dict:
         n_workers=LIVE_P,
         total_steps=LIVE_STEPS,
     )
+    job.retain_updates = True  # for the per-scheme wire-bytes sweep below
     wl = build_workload(job.workload, job.workload_cfg)
     live = run_job(job)
 
+    # -- per-scheme wire bytes over the ACTUAL published updates of the live
+    # run: simulated == measured by construction (repro.wire, §10), so
+    # re-accounting every stored update under each codec gives exactly the
+    # bytes the broker would have measured had the job shipped that scheme
+    from repro import wire
+
+    wire_bytes_by_scheme = {
+        scheme: float(
+            sum(
+                wire.predict_tree_nbytes(u["update"], scheme=scheme)
+                for u in live["updates"]
+            )
+        )
+        for scheme in ("dense", "sparse", "bitmap", "auto")
+    }
+
     # -- simulated: identical math (same Workload object), modelled platform
     rank = wl.cfg["rank"]
+    # invocation rounds of the live job — billed per invocation AND added
+    # to the predicted wall (each round stalls the pool at the barrier)
+    inv_rounds = max(-(-job.total_steps // job.invocation_steps), 1)
     sim = ServerlessSimulator(
         SimulatorConfig(
             n_workers=LIVE_P,
@@ -91,6 +116,11 @@ def _run_live() -> dict:
                 model=cons.Model.ISP, isp=ISPConfig(v=job.isp_v)
             ),
             sparse_model=True,
+            # predicted bytes read the SAME repro.wire codec formula the
+            # live workers' encoder asserts against (DESIGN.md §10)
+            wire_scheme=job.wire_scheme,
+            cold_start_s=COLD_START_S,
+            invocations_per_worker=inv_rounds,
         ),
         grad_fn=wl.grad_fn,
         optimizer=optim.make(job.optimizer, job.lr),
@@ -109,7 +139,13 @@ def _run_live() -> dict:
         tuner=tuner(LIVE_P, interval=2.0),
     )
 
-    predicted_step = simres.total_wall_s / max(len(simres.records), 1)
+    # symmetric step-time comparison: the live mean includes the pool-wide
+    # barrier stalls of invocation-boundary cold starts (a respawning peer
+    # blocks everyone), so the predicted mean must include the modelled
+    # stall rounds too — same cold-start constant the bill charges
+    predicted_step = (
+        simres.total_wall_s + COLD_START_S * inv_rounds
+    ) / max(len(simres.records), 1)
     payload = {
         "workload": dict(wl.cfg),
         "n_workers": LIVE_P,
@@ -124,8 +160,13 @@ def _run_live() -> dict:
             "final_pool": live["final_pool"],
             "n_scale_events": len(live["scale_events"]),
             "n_invocations": live["n_invocations"],
+            "wire_scheme": live["wire_scheme"],
             "wire_bytes_total": live["wire_bytes_total"],
+            "wire_bytes_by_scheme": wire_bytes_by_scheme,
             "invariant_max_err": live["invariant_max_err"],
+            # per-phase data-path breakdown (mean seconds per step), so a
+            # future regression is attributable to encode/wire/decode/compute
+            "phase_s_mean": live["phase_s_mean"],
             # measured loss/pool trajectory — fig7/fig8-style time-to-loss
             # and cost-to-loss curves from a LIVE run instead of the model
             "history": [
@@ -137,6 +178,8 @@ def _run_live() -> dict:
         "simulated": {
             "predicted_step_s_mean": predicted_step,
             "modelled_wall_s": simres.total_wall_s,
+            "cold_start_s": COLD_START_S,
+            "invocation_rounds": inv_rounds,
             "faas_cost_usd": simres.total_cost,
             "final_loss": simres.final_loss,
             "final_workers": simres.summary["final_workers"],
@@ -195,4 +238,10 @@ def report(out: dict) -> list[str]:
             f"fig6,runtime_live_cost,{rt['live']['faas_cost_usd']*1e6:.0f},"
             f"cost_ratio={rt['ratios']['cost_measured_over_predicted']:.2f}x"
         )
+        ph = rt["live"].get("phase_s_mean") or {}
+        if ph:
+            breakdown = "/".join(f"{k}={v*1e3:.1f}ms" for k, v in ph.items())
+            lines.append(f"fig6,runtime_live_phases,0,{breakdown}")
+        for scheme, b in (rt["live"].get("wire_bytes_by_scheme") or {}).items():
+            lines.append(f"fig6,wire_bytes_{scheme},{b:.0f},bytes={b:.0f}")
     return lines

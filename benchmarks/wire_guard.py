@@ -1,0 +1,165 @@
+"""CI wire-bytes regression guard (DESIGN.md §10.5).
+
+Runs the PMF smoke workload once on the LIVE FaaS runtime and once through
+the simulator's cost model, then compares against the checked-in baseline
+(``benchmarks/wire_baseline.json``):
+
+* ``wire_bytes_total`` — bit-deterministic at a fixed seed with the
+  auto-tuner off (same updates -> same nnz -> same codec bytes), so ANY
+  increase >10% means an encoding regression, not noise;
+* ``cost_measured_over_predicted`` — the live/model cost calibration; a
+  >10% regression over the baseline (which carries documented headroom for
+  host variance) means the live data path got structurally slower.
+
+Exit codes: 0 pass, 1 regression, 2 could not run.
+
+    PYTHONPATH=src python benchmarks/wire_guard.py            # check
+    PYTHONPATH=src python benchmarks/wire_guard.py --update   # re-baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+BASELINE = os.path.join(os.path.dirname(__file__), "wire_baseline.json")
+TOLERANCE = 0.10  # the >10% rule
+
+# deterministic smoke job: no auto-tuner (no scale events -> the update
+# stream, and therefore the wire bytes, are a pure function of the seed),
+# single invocation per worker (no respawn stalls in the cost number)
+SMOKE_WCFG = {
+    "n_users": 120,
+    "n_movies": 150,
+    "n_ratings": 6000,
+    "rank": 4,
+    "batch_size": 64,
+}
+SMOKE_P = 2
+SMOKE_STEPS = 12
+COLD_START_S = 2.0  # same runtime-init constant as benchmarks/fig6
+
+
+def run_smoke() -> dict:
+    from functools import partial
+
+    from repro import optim
+    from repro.core import consistency as cons
+    from repro.core.isp import ISPConfig
+    from repro.core.simulator import (
+        Platform, ServerlessSimulator, SimulatorConfig,
+    )
+    from repro.runtime import FaaSJobConfig, build_workload, run_job
+
+    job = FaaSJobConfig(
+        run_dir=tempfile.mkdtemp(prefix="wire_guard_"),
+        workload="pmf",
+        workload_cfg=dict(SMOKE_WCFG),
+        n_workers=SMOKE_P,
+        total_steps=SMOKE_STEPS,
+        checkpoint_every=100,
+        optimizer="nesterov",
+        lr=0.08,
+        isp_v=0.7,
+        autotune=False,
+        deadline_s=240.0,
+    )
+    wl = build_workload(job.workload, job.workload_cfg)
+    live = run_job(job)
+
+    rank = wl.cfg["rank"]
+    sim = ServerlessSimulator(
+        SimulatorConfig(
+            n_workers=SMOKE_P,
+            platform=Platform.MLLESS,
+            consistency=cons.ConsistencyConfig(
+                model=cons.Model.ISP, isp=ISPConfig(v=job.isp_v)
+            ),
+            sparse_model=True,
+            wire_scheme=job.wire_scheme,
+            cold_start_s=COLD_START_S,
+            invocations_per_worker=1,
+        ),
+        grad_fn=wl.grad_fn,
+        optimizer=optim.make(job.optimizer, job.lr),
+        params=wl.params0,
+        flops_per_sample=6 * rank * 3,
+        update_nnz_fn=partial(
+            lambda r, n, bsz: 2 * r * min(bsz, n), rank, wl.cfg["n_users"]
+        ),
+    )
+
+    def batch_fn(step: int, n_workers: int):
+        return wl.make_batch(wl.store.fetch_stacked(step, n_workers))
+
+    simres = sim.run(batch_fn, wl.cfg["batch_size"], SMOKE_STEPS)
+    return {
+        "wire_bytes_total": float(live["wire_bytes_total"]),
+        "cost_measured_over_predicted": (
+            live["bill"]["total"] / max(simres.total_cost, 1e-12)
+        ),
+        "measured_step_s": live["measured_step_s"],
+        "phase_s_mean": live["phase_s_mean"],
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from this run")
+    ap.add_argument("--headroom", type=float, default=2.0,
+                    help="host-variance headroom recorded on the cost "
+                    "ratio when updating the baseline (wire bytes are "
+                    "deterministic and get none). The ratio scales with "
+                    "host speed — re-record with --update on the runner "
+                    "class that gates merges")
+    args = ap.parse_args()
+
+    try:
+        cur = run_smoke()
+    except Exception as e:  # noqa: BLE001 - CI wants a clean signal
+        print(f"wire_guard: smoke run failed: {e}", file=sys.stderr)
+        return 2
+
+    print(json.dumps(cur, indent=1))
+    if args.update or not os.path.exists(BASELINE):
+        base = {
+            "wire_bytes_total": cur["wire_bytes_total"],
+            "cost_measured_over_predicted": (
+                cur["cost_measured_over_predicted"] * args.headroom
+            ),
+            "note": (
+                "wire_bytes_total is exact (deterministic seed, no "
+                "auto-tuner); the cost ratio carries the --headroom "
+                "factor over the recording host's run"
+            ),
+        }
+        with open(BASELINE, "w") as f:
+            json.dump(base, f, indent=1)
+        print(f"wire_guard: baseline written to {BASELINE}")
+        return 0
+
+    with open(BASELINE) as f:
+        base = json.load(f)
+    ok = True
+    for key in ("wire_bytes_total", "cost_measured_over_predicted"):
+        limit = base[key] * (1.0 + TOLERANCE)
+        if cur[key] > limit:
+            print(
+                f"wire_guard: REGRESSION in {key}: "
+                f"{cur[key]:.6g} > {base[key]:.6g} * {1 + TOLERANCE}\n"
+                "wire_guard: if this host class legitimately differs from "
+                "the baseline's, re-record with --update",
+                file=sys.stderr,
+            )
+            ok = False
+        else:
+            print(f"wire_guard: {key} ok ({cur[key]:.6g} <= {limit:.6g})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -89,6 +89,19 @@ def perf_per_dollar(exec_time_s: float, price_usd: float) -> float:
 
 
 # ---- communication cost model (simulator) -----------------------------------
+#
+# Byte SIZES are not modelled here: they come from the shared wire codec
+# (``repro.wire.codec.leaf_nbytes``) — the same formula the live runtime's
+# encoder asserts its output against — so the cost model can never charge
+# for bytes the runtime wouldn't ship (DESIGN.md §10).
+
+
+def dense_update_bytes(n_params: int, itemsize: int = 4) -> int:
+    """Bytes of a dense full-update exchange (the BSP / all-reduce unit),
+    read from the shared wire codec."""
+    from repro.wire import codec as wire_codec
+
+    return int(wire_codec.leaf_nbytes("dense", n_params, n_params, itemsize))
 
 
 @dataclasses.dataclass(frozen=True)

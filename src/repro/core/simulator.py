@@ -37,6 +37,7 @@ from repro.core import billing as billing_lib
 from repro.core import consistency as cons_lib
 from repro.core import isp as isp_lib
 from repro.optim import Optimizer, apply_updates
+from repro.wire import codec as wire_codec
 
 PyTree = Any
 
@@ -64,6 +65,18 @@ class SimulatorConfig:
     seed: int = 0
     # sparse models update only touched coordinates; serverful exchanges dense
     sparse_model: bool = False
+    # repro.wire codec the modelled platform ships updates with — the SAME
+    # sizing formula the live runtime's encoder asserts against, so the
+    # predicted bytes are the measured bytes at equal nnz (DESIGN.md §10)
+    wire_scheme: str = "sparse"
+    # FaaS invocation cold start (runtime init: interpreter + framework
+    # import + state restore), billed per invocation and stalling the pool
+    # once per invocation round — a synchronous pool blocks at the ISP
+    # barrier while a respawned worker initializes.  0.0 = legacy model
+    # (cold starts ignored); the live calibration (fig6 --live) sets the
+    # solo-measured init constant of the local substrate.
+    cold_start_s: float = 0.0
+    invocations_per_worker: int = 1
     eval_every: int = 1
 
 
@@ -246,18 +259,40 @@ class ServerlessSimulator:
     # -- update sizing ---------------------------------------------------------
 
     def _bytes_out(self, comm_frac: float, batch_size: int) -> float:
-        """Per-worker bytes pushed this step under the platform's encoding."""
+        """Per-worker bytes pushed this step under the platform's encoding.
+
+        Reads the byte size from the shared wire codec
+        (``repro.wire.codec.leaf_nbytes``) — the function the live
+        runtime's encoder asserts its output length against — instead of
+        a hand-rolled formula that could drift from what the runtime
+        actually ships.
+
+        Granularity caveat: the simulator sizes the WHOLE model as one
+        fp32 leaf with an aggregate nnz.  For a fixed ``sparse`` scheme
+        on sub-2**31-param models this equals the per-leaf sum exactly;
+        ``bitmap`` is exact up to per-leaf mask rounding (< 1 byte per
+        leaf) and ``auto`` is a lower bound (the live encoder picks the
+        cheapest codec PER LEAF).  The exact per-leaf invariant lives in
+        ``repro.wire.predict_tree_nbytes`` and is what the cross-check
+        tests assert.
+        """
         cfg = self.config
         if cfg.platform is Platform.SERVERFUL:
             # dense ring all-reduce of the full gradient
-            return self.n_params * 4.0
-        nnz = self.n_params
+            return float(billing_lib.dense_update_bytes(self.n_params))
+        nnz = float(self.n_params)
         if cfg.sparse_model and self.update_nnz_fn is not None:
             nnz = float(self.update_nnz_fn(batch_size))
-        # sparse encoding: 4B value + 4B index
         if cfg.consistency.model is cons_lib.Model.ISP:
             nnz = nnz * max(comm_frac, 0.0)
-        return nnz * 8.0
+        if cfg.wire_scheme == wire_codec.AUTO:
+            return float(min(
+                wire_codec.leaf_nbytes(s, self.n_params, nnz)
+                for s in wire_codec.SCHEMES
+            ))
+        return float(
+            wire_codec.leaf_nbytes(cfg.wire_scheme, self.n_params, nnz)
+        )
 
     # -- driver -----------------------------------------------------------------
 
@@ -285,6 +320,13 @@ class ServerlessSimulator:
         records: list[StepRecord] = []
         converged_at = None
         converged_step = None
+        # cold-start accounting: invocation boundaries fall every
+        # steps_per_inv steps, and a worker only bills the cold starts of
+        # invocations it actually began (evicted workers stop)
+        steps_per_inv = max(
+            -(-max_steps // max(cfg.invocations_per_worker, 1)), 1
+        )
+        active_steps = np.zeros(P, dtype=np.int64)
 
         for step in range(1, max_steps + 1):
             batch = batch_fn(step, P)
@@ -310,6 +352,7 @@ class ServerlessSimulator:
             wall, busy = self._step_times(batch_size, bytes_out, p_active)
             self._wall += wall
             self._lifetimes[self.active] += busy
+            active_steps[self.active] += 1
 
             eval_loss = loss
             if eval_fn is not None and step % cfg.eval_every == 0:
@@ -332,13 +375,26 @@ class ServerlessSimulator:
                 converged_step = step
                 break
 
-        # billing
+        # billing (cold starts: each invocation a worker actually began
+        # bills its runtime init, and each invocation round the pool ran
+        # through stalls the synchronous barrier once — the per-step time
+        # model above stays pure step time)
+        inv_per_worker = np.maximum(
+            np.ceil(active_steps / steps_per_inv), active_steps > 0
+        )
+        rounds_executed = int(-(-len(records) // steps_per_inv))
+        bill_wall = self._wall + cfg.cold_start_s * rounds_executed
         if cfg.platform is Platform.SERVERFUL:
             bill = None
             iaas = billing_lib.iaas_cost(P, self._wall)
         else:
             bill = billing_lib.faas_cost(
-                list(self._lifetimes), self._wall, cfg.n_redis
+                [
+                    t + cfg.cold_start_s * float(k)
+                    for t, k in zip(self._lifetimes, inv_per_worker)
+                ],
+                bill_wall,
+                cfg.n_redis,
             )
             iaas = None
 

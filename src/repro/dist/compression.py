@@ -9,7 +9,7 @@ under ``vmap`` on one chip, under GSPMD on a real multi-pod mesh, and in
 unit tests with ``n_pods == 1`` (where Corollary 1 makes it BSP-exact at
 v = 0).
 
-Wire encodings (``CompressionConfig.scheme``):
+Exchange schemes (``CompressionConfig.scheme``):
 
 * ``dense``  — the filtered update is exchanged as a full dense tensor
   (all-reduce over 'pod'). Exact filter semantics, no wire saving — the
@@ -17,12 +17,19 @@ Wire encodings (``CompressionConfig.scheme``):
   dense collective. This is the correctness baseline.
 * ``topk``   — per pod, per ``block``-sized block, keep the ``budget``
   fraction of entries with the largest magnitude; everything else returns
-  to the residual (error feedback — no update mass is ever lost). Wire per
-  step ~ ``2 * budget * n_params * 8B`` (value + index pairs).
+  to the residual (error feedback — no update mass is ever lost).
 * ``bitmap`` — exchange the significant entries as (bitmask, packed
-  values): numerically identical to ``dense`` (the same entries move), but
-  the wire cost model charges ``n/8`` mask bytes plus 4B per significant
-  value — the paper's Redis sparse encoding, collective form.
+  values): numerically identical to ``dense`` (the same entries move),
+  only the wire encoding differs — the paper's Redis sparse encoding,
+  collective form.
+
+Byte accounting is NOT hand-rolled here: each scheme maps to a
+``repro.wire`` codec (dense→dense, topk→sparse, bitmap→bitmap; override
+with ``CompressionConfig.wire``) and the per-step ``wire_bytes`` stat is
+computed from ``repro.wire.codec.leaf_nbytes`` — the same formula the
+live FaaS runtime's encoder asserts against, so the bytes this module
+reports to the simulator/auto-tuner equal the bytes the runtime would
+measure, by construction (DESIGN.md §10).
 
 The significance split itself reuses ``core.isp.significance_split`` (jnp
 reference) or the fused Pallas kernel ``kernels.significance`` (the hot
@@ -39,10 +46,13 @@ import jax.numpy as jnp
 
 from repro.core.isp import significance_split
 from repro.kernels.significance import significance_filter
+from repro.wire import codec as wire_codec
 
 PyTree = Any
 
 _SCHEMES = ("dense", "topk", "bitmap")
+# exchange scheme -> default repro.wire encoding of what crosses the pod axis
+_WIRE_OF = {"dense": "dense", "topk": "sparse", "bitmap": "bitmap"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,10 +60,12 @@ class CompressionConfig:
     """Static exchange configuration (hashable: closed over by jit).
 
     Attributes:
-      scheme: wire encoding — 'dense', 'topk', or 'bitmap' (see module doc).
+      scheme: exchange scheme — 'dense', 'topk', or 'bitmap' (module doc).
       budget: topk only — fraction of entries kept per block (0 < b <= 1).
       block: topk only — block size for the block-local top-k (TPU-friendly
         multiples of 128; the compaction granularity of the exchange).
+      wire: ``repro.wire`` codec the byte accounting charges for
+        ('dense'|'sparse'|'bitmap'); None derives it from ``scheme``.
       fused: route the significance split through the Pallas kernel
         (``kernels.significance``) instead of the jnp reference.
       interpret: run the Pallas kernel in interpret mode (CPU validation).
@@ -62,6 +74,7 @@ class CompressionConfig:
     scheme: str = "dense"
     budget: float = 0.01
     block: int = 128
+    wire: Optional[str] = None
     fused: bool = False
     interpret: bool = False
 
@@ -70,10 +83,19 @@ class CompressionConfig:
             raise ValueError(
                 f"scheme must be one of {_SCHEMES}, got {self.scheme!r}"
             )
+        if self.wire is not None and self.wire not in wire_codec.SCHEMES:
+            raise ValueError(
+                f"wire must be one of {wire_codec.SCHEMES}, got {self.wire!r}"
+            )
         if not 0.0 < self.budget <= 1.0:
             raise ValueError(f"budget must be in (0, 1], got {self.budget}")
         if self.block < 1:
             raise ValueError(f"block must be >= 1, got {self.block}")
+
+    @property
+    def wire_scheme(self) -> str:
+        """The ``repro.wire`` codec this exchange is accounted as."""
+        return self.wire or _WIRE_OF[self.scheme]
 
     def k_per_block(self, block: Optional[int] = None) -> int:
         """Entries kept per block under the topk budget (always >= 1)."""
@@ -197,14 +219,16 @@ def isp_compressed_step(
       invariant ``sent_p + new_residual_p == residual_p + update_p`` holds
       per pod for every leaf — error feedback conserves update mass under
       every scheme. ``stats`` carries ``sent_fraction`` (communicated
-      entries / total entries) and ``wire_bytes`` under the scheme's
-      encoding model.
+      entries / total entries) and ``wire_bytes`` under
+      ``cfg.wire_scheme``'s ``repro.wire`` encoding — per pod, per leaf,
+      the exact bytes the live runtime's encoder would produce.
     """
     treedef = jax.tree.structure(params)
     u_leaves = treedef.flatten_up_to(updates_pod)
     x_leaves = jax.tree.leaves(params)
     r_leaves = treedef.flatten_up_to(residual_pod)
 
+    wire_scheme = cfg.wire_scheme
     combined, new_res = [], []
     n_sent = jnp.asarray(0.0, jnp.float32)
     n_total = 0
@@ -226,12 +250,18 @@ def isp_compressed_step(
         hits = jnp.sum((sent != 0).astype(jnp.float32))
         n_sent = n_sent + hits
         n_total += sent.size
-        if cfg.scheme == "dense":
-            wire = wire + jnp.asarray(float(sent.size) * 4.0, jnp.float32)
-        elif cfg.scheme == "topk":
-            wire = wire + hits * 8.0  # fp32 value + int32 index
-        else:  # bitmap: 1 bit/entry mask + 4B per significant value
-            wire = wire + jnp.asarray(sent.size / 8.0, jnp.float32) + hits * 4.0
+        # shared-codec accounting (works on traced scalars): each pod ships
+        # one encoded leaf, so the step costs P * fixed-part (dense bytes /
+        # bitmap mask) plus the marginal per-entry bytes times total hits
+        n_pods, leaf_n = sent.shape[0], int(sent.size // sent.shape[0])
+        itemsize = x.dtype.itemsize
+        fixed = wire_codec.leaf_nbytes(wire_scheme, leaf_n, 0, itemsize)
+        marginal = (
+            wire_codec.leaf_nbytes(wire_scheme, leaf_n, 1, itemsize) - fixed
+        )
+        wire = wire + jnp.asarray(
+            float(n_pods * fixed), jnp.float32
+        ) + hits * float(marginal)
 
     stats = {
         "sent_fraction": n_sent / jnp.maximum(float(n_total), 1.0),

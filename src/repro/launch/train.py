@@ -308,10 +308,18 @@ def train(args) -> dict:
     mode = MODES[args.mode]
     pod_mode = mode.pod
     isp = ISPConfig(v=args.isp_v) if args.mode.startswith("isp") else None
+    # --wire-scheme overrides the byte-accounting codec (else it derives
+    # from the exchange scheme); repro.wire either way. 'auto' is per-leaf
+    # data-dependent — not resolvable inside jit — so the traced pod
+    # accounting keeps the derived codec.
+    wire_override = getattr(args, "wire_scheme", None)
+    if wire_override == "auto":
+        wire_override = None
     comp = (
         CompressionConfig(
             scheme=getattr(args, "scheme", "dense"),
             budget=getattr(args, "budget", 0.01),
+            wire=wire_override,
         )
         if pod_mode
         else None
@@ -468,6 +476,8 @@ def train_faas(args) -> dict:
         optimizer=args.optimizer,
         lr=args.lr,
         isp_v=args.isp_v,
+        wire_scheme=args.wire_scheme or "auto",
+        wire_quant=args.wire_quant,
         autotune=args.autotune,
         tuner=AutoTunerConfig(
             sched_interval_s=args.sched_interval,
@@ -500,9 +510,18 @@ def main() -> None:
     ap.add_argument("--isp-v", type=float, default=0.7)
     ap.add_argument("--scheme", choices=("dense", "topk", "bitmap"),
                     default="dense",
-                    help="isp-pod wire encoding (dist.compression)")
+                    help="isp-pod exchange scheme (dist.compression)")
     ap.add_argument("--budget", type=float, default=0.01,
                     help="topk fraction kept per block")
+    ap.add_argument("--wire-scheme", default=None,
+                    choices=("auto", "dense", "sparse", "bitmap"),
+                    help="repro.wire update codec, both runtimes: the faas "
+                    "workers' encoder AND the isp-pod byte accounting "
+                    "(default: auto for faas, derived from --scheme inproc)")
+    ap.add_argument("--wire-quant", default="none",
+                    choices=("none", "fp16", "bf16"),
+                    help="faas: value quantization with error-feedback "
+                    "residual (repro.wire)")
     ap.add_argument("--optimizer", default="adam",
                     choices=("adam", "sgd", "nesterov"))
     ap.add_argument("--lr", type=float, default=3e-4)

@@ -9,7 +9,7 @@ meters real per-worker lifetimes at the FaaS billing quantum.
     broker      — update store + pub/sub + minibatch keys + byte accounting
     worker      — stateless ISP worker entrypoint (subprocess)
     supervisor  — spawn/evict/respawn controller, billing, results
-    protocol    — socket framing + sparse pytree wire encoding
+    protocol    — thin veneer over repro.wire (codec + framing, §10)
     workload    — named deterministic workloads (pmf, lr)
 """
 

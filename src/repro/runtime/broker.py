@@ -1,8 +1,10 @@
 """Update broker — the RabbitMQ/Redis stand-in of the FaaS runtime.
 
 One process (or one thread of the supervisor) owns all shared state of a
-training job; workers talk to it over local TCP sockets using
-``runtime.protocol`` framing.  Responsibilities, mirroring MLLess's
+training job; workers talk to it over *persistent* local TCP connections
+(``repro.wire.framing``) — one connection per worker invocation, one
+handler thread per connection, any number of framed request/response
+round trips (DESIGN.md §10.3).  Responsibilities, mirroring MLLess's
 messaging VM + KV store (paper §5):
 
 * **update store / pub-sub**: workers publish their significance-filtered
@@ -111,9 +113,13 @@ class BrokerCore:
             resp = {"ok": True, "job": self.job, **self._membership()}
         return resp, b""
 
+    def batch_key(self, step: int, worker: int) -> int:
+        """Deterministic round-robin minibatch key for (step, worker)."""
+        return ((step - 1) * self.P + worker) % self.n_batches
+
     def _op_batch(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
         step, worker = int(h["step"]), int(h["worker"])
-        key = ((step - 1) * self.P + worker) % self.n_batches
+        key = self.batch_key(step, worker)
         with self._lock:
             return {"ok": True, "key": key, **self._membership()}, b""
 
@@ -190,6 +196,10 @@ class BrokerCore:
                 "ok": True,
                 "ready": True,
                 "parts": descs,
+                # coalesced pull: piggyback the NEXT step's minibatch key so
+                # the steady-state worker loop is exactly two round trips per
+                # ISP barrier (publish + pull) instead of four one-shot RPCs
+                "key_next": self.batch_key(step + 1, worker),
                 **self._membership(),
             }
         return resp, payload
@@ -197,9 +207,12 @@ class BrokerCore:
     def _op_report(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
         step, worker = int(h["step"]), int(h["worker"])
         with self._lock:
-            self.telemetry.setdefault((step, worker), {})["dur_s"] = float(
-                h["dur_s"]
-            )
+            cell = self.telemetry.setdefault((step, worker), {})
+            cell["dur_s"] = float(h["dur_s"])
+            if "phase" in h:  # per-phase data-path breakdown (DESIGN.md §10)
+                cell["phase"] = {
+                    k: float(v) for k, v in h["phase"].items()
+                }
         return {"ok": True}, b""
 
     def _op_bye(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
@@ -234,31 +247,42 @@ class BrokerCore:
         return {"ok": True, "granted": True, "evict_step": step}, b""
 
     def _op_poll(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
+        # with a client-supplied cursor ('since') the poll is IDEMPOTENT —
+        # a lost response replayed over a reconnecting wire.Connection
+        # returns the same rows instead of dropping them; the server-side
+        # cursor only backs cursor-less (legacy/debug) callers
+        stateless = "since" in h
         with self._lock:
             rows = []
-            step = self._poll_cursor
+            step = int(h["since"]) if stateless else self._poll_cursor
             while step <= self.total_steps and self._telemetry_complete(step):
                 active = self.active_at(step)
                 cells = [self.telemetry[(step, w)] for w in active]
-                rows.append(
-                    {
-                        "step": step,
-                        "loss": _mean([c["loss"] for c in cells]),
-                        "dur_s": _mean([c["dur_s"] for c in cells]),
-                        "sent_fraction": _mean(
-                            [c["sent_fraction"] for c in cells]
-                        ),
-                        "inv_err": max(
-                            float(c["inv_err"] or 0.0) for c in cells
-                        ),
-                        "wire_bytes": float(
-                            sum(c["wire_bytes"] for c in cells)
-                        ),
-                        "p_active": len(active),
+                row = {
+                    "step": step,
+                    "loss": _mean([c["loss"] for c in cells]),
+                    "dur_s": _mean([c["dur_s"] for c in cells]),
+                    "sent_fraction": _mean(
+                        [c["sent_fraction"] for c in cells]
+                    ),
+                    "inv_err": max(
+                        float(c["inv_err"] or 0.0) for c in cells
+                    ),
+                    "wire_bytes": float(
+                        sum(c["wire_bytes"] for c in cells)
+                    ),
+                    "p_active": len(active),
+                }
+                phases = [c["phase"] for c in cells if "phase" in c]
+                if phases:
+                    row["phase"] = {
+                        k: _mean([p.get(k) for p in phases])
+                        for k in phases[0]
                     }
-                )
+                rows.append(row)
                 step += 1
-            self._poll_cursor = step
+            if not stateless:
+                self._poll_cursor = step
             resp = {
                 "ok": True,
                 "rows": rows,
@@ -313,17 +337,22 @@ def _mean(xs) -> Optional[float]:
 
 
 class _Handler(socketserver.BaseRequestHandler):
-    def handle(self) -> None:  # one request per connection
+    def handle(self) -> None:  # one persistent connection, many requests
         core: BrokerCore = self.server.core  # type: ignore[attr-defined]
         try:
             self.request.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            header, payload = protocol.recv_msg(self.request)
-            resp, blob = core.handle(header, payload)
-            out = protocol.send_msg(self.request, resp, blob)
-            hdr_len = len(json.dumps(header, separators=(",", ":")))
-            core.account(header.get("t", "?"), 8 + hdr_len + len(payload), out)
+            while True:
+                header, payload = protocol.recv_msg(self.request)
+                resp, blob = core.handle(header, payload)
+                out = protocol.send_msg(self.request, resp, blob)
+                hdr_len = len(json.dumps(header, separators=(",", ":")))
+                core.account(
+                    header.get("t", "?"), 8 + hdr_len + len(payload), out
+                )
+                if core.shutting_down:
+                    break
         except (ConnectionError, ValueError, OSError):
-            pass  # client vanished mid-request; nothing to clean up
+            pass  # client vanished mid-stream; nothing to clean up
 
 
 class _Server(socketserver.ThreadingTCPServer):

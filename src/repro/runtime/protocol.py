@@ -1,209 +1,45 @@
-"""Wire protocol of the FaaS runtime — framing, sparse pytree encoding, RPC.
+"""Wire protocol of the FaaS runtime — a thin veneer over ``repro.wire``.
 
-The broker (``runtime.broker``) plays the RabbitMQ/Redis role of MLLess:
-workers exchange significance-filtered updates *indirectly* through it, one
-short-lived TCP request per message (the stateless-client access pattern of
-the paper's workers).  Every message is::
+Everything that used to be hand-rolled here (framing, sparse pytree
+encoding, byte accounting) now lives in the shared codec layer
+(DESIGN.md §10): ``dist.compression``, the simulator's cost model and
+this runtime all encode and account through the SAME functions, so
+simulated bytes == measured bytes by construction.
 
-    uint32 header_len | uint32 payload_len | header JSON (utf-8) | payload
+What remains runtime-specific is only vocabulary: the broker
+(``runtime.broker``) plays the RabbitMQ/Redis role of MLLess; workers
+exchange significance-filtered updates *indirectly* through it over
+persistent per-worker connections (``repro.wire.framing.Connection``),
+one request/response round trip per message.  The broker never decodes
+payloads — it is a dumb byte store with per-message byte accounting,
+exactly like the KV store in the paper — only workers encode/decode.
 
-The header is a small JSON dict (message type, worker id, step, telemetry);
-the payload carries tensors.  The broker never decodes payloads — it is a
-dumb byte store with per-message byte accounting, exactly like the KV store
-in the paper — only workers encode/decode.
-
-Tensor encoding (``encode_tree`` / ``decode_tree``): per leaf, whichever of
-
-* ``dense``  — raw array bytes, ``size * itemsize``;
-* ``sparse`` — int32 flat indices + values, ``nnz * (4 + itemsize)``
-
-is smaller.  Significance-filtered updates are mostly zeros, so the sparse
-form realizes the paper's "sparse serialization" wire saving; dense flush
-payloads (full replicas on eviction) fall back to the dense form.
+Tensor payloads per leaf use the codec registry: ``dense`` raw bytes,
+``sparse`` flat-index+value pairs (int64 indices above 2**31 elements),
+``bitmap`` packed mask + values, ``auto`` picking the smallest; values
+optionally quantized to fp16/bf16 with an fp32 error-feedback residual.
 """
 
 from __future__ import annotations
 
-import json
-import socket
-import struct
-from typing import Any, Optional
+from repro.wire.codec import (  # noqa: F401
+    decode_leaf,
+    decode_tree,
+    encode_leaf,
+    encode_tree,
+    encode_tree_parts,
+    tree_keys,
+    tree_nbytes,
+)
+from repro.wire.framing import (  # noqa: F401
+    MAX_MSG_BYTES,
+    Connection,
+    pack_parts,
+    recv_msg,
+    request,
+    send_msg,
+    unpack_parts,
+)
 
-import numpy as np
-
-PyTree = Any
-
-_HDR = struct.Struct("<II")
-MAX_MSG_BYTES = 1 << 31  # sanity bound on a single message
-
-
-# -- framing ------------------------------------------------------------------
-
-
-def send_msg(sock: socket.socket, header: dict, payload: bytes = b"") -> int:
-    """Write one framed message; returns total bytes on the wire."""
-    raw = json.dumps(header, separators=(",", ":")).encode("utf-8")
-    sock.sendall(_HDR.pack(len(raw), len(payload)))
-    sock.sendall(raw)
-    if payload:
-        sock.sendall(payload)
-    return _HDR.size + len(raw) + len(payload)
-
-
-def _recv_exact(sock: socket.socket, n: int) -> bytes:
-    buf = bytearray()
-    while len(buf) < n:
-        chunk = sock.recv(min(n - len(buf), 1 << 20))
-        if not chunk:
-            raise ConnectionError("peer closed mid-message")
-        buf.extend(chunk)
-    return bytes(buf)
-
-
-def recv_msg(sock: socket.socket) -> tuple[dict, bytes]:
-    """Read one framed message → (header, payload)."""
-    hlen, plen = _HDR.unpack(_recv_exact(sock, _HDR.size))
-    if hlen > MAX_MSG_BYTES or plen > MAX_MSG_BYTES:
-        raise ValueError(f"oversized message header ({hlen}, {plen})")
-    header = json.loads(_recv_exact(sock, hlen).decode("utf-8"))
-    payload = _recv_exact(sock, plen) if plen else b""
-    return header, payload
-
-
-def request(
-    addr: tuple[str, int],
-    header: dict,
-    payload: bytes = b"",
-    timeout: float = 30.0,
-) -> tuple[dict, bytes]:
-    """One RPC round trip: connect, send, receive, close."""
-    with socket.create_connection(addr, timeout=timeout) as sock:
-        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        send_msg(sock, header, payload)
-        return recv_msg(sock)
-
-
-# -- pytree <-> bytes ---------------------------------------------------------
-
-
-def tree_keys(tree: PyTree) -> list[str]:
-    """Stable '/'-joined path keys — ``checkpoint.store.path_key``'s scheme
-    (imported, not copied, so wire metadata and checkpoint manifests can
-    never drift apart)."""
-    import jax
-
-    from repro.checkpoint.store import path_key
-
-    return [
-        path_key(path)
-        for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
-    ]
-
-
-def encode_tree(tree: PyTree, sparse: bool = True) -> tuple[list[dict], bytes]:
-    """Encode a pytree of arrays → (per-leaf meta list, payload bytes).
-
-    Leaf order is the pytree flatten order, so the decoder only needs a
-    structurally-identical template.  ``meta`` per leaf: key, shape, dtype,
-    enc ('dense'|'sparse'), nnz, nbytes.
-    """
-    keys = tree_keys(tree)
-    import jax
-
-    leaves = jax.tree_util.tree_leaves(tree)
-    meta: list[dict] = []
-    parts: list[bytes] = []
-    for key, leaf in zip(keys, leaves):
-        arr = np.asarray(leaf)
-        flat = arr.reshape(-1)
-        nz = np.flatnonzero(flat)
-        nnz = int(nz.size)
-        dense_b = flat.size * arr.itemsize
-        sparse_b = nnz * (4 + arr.itemsize)
-        if sparse and sparse_b < dense_b:
-            idx = nz.astype(np.int32)
-            vals = flat[nz]
-            blob = idx.tobytes() + np.ascontiguousarray(vals).tobytes()
-            enc = "sparse"
-        else:
-            blob = np.ascontiguousarray(arr).tobytes()
-            enc = "dense"
-        meta.append(
-            {
-                "k": key,
-                "shape": list(arr.shape),
-                "dtype": str(arr.dtype),
-                "enc": enc,
-                "nnz": nnz,
-                "nbytes": len(blob),
-            }
-        )
-        parts.append(blob)
-    return meta, b"".join(parts)
-
-
-def decode_tree(meta: list[dict], payload: bytes, like: PyTree) -> PyTree:
-    """Decode bytes back into numpy leaves shaped like ``like``."""
-    import jax
-
-    like_leaves, treedef = jax.tree_util.tree_flatten(like)
-    if len(like_leaves) != len(meta):
-        raise ValueError(
-            f"template has {len(like_leaves)} leaves, message {len(meta)}"
-        )
-    out = []
-    off = 0
-    for m in meta:
-        shape = tuple(m["shape"])
-        dtype = np.dtype(m["dtype"])
-        blob = payload[off : off + m["nbytes"]]
-        off += m["nbytes"]
-        if m["enc"] == "sparse":
-            nnz = m["nnz"]
-            idx = np.frombuffer(blob, dtype=np.int32, count=nnz)
-            vals = np.frombuffer(blob, dtype=dtype, offset=nnz * 4, count=nnz)
-            arr = np.zeros(int(np.prod(shape)) if shape else 1, dtype=dtype)
-            arr[idx] = vals
-            arr = arr.reshape(shape)
-        else:
-            arr = np.frombuffer(blob, dtype=dtype).reshape(shape)
-        out.append(arr)
-    if off != len(payload):
-        raise ValueError(f"trailing bytes in payload: {len(payload) - off}")
-    return jax.tree_util.tree_unflatten(treedef, out)
-
-
-def wire_bytes(meta: list[dict]) -> int:
-    """Payload bytes a meta list accounts for (the broker's unit of record)."""
-    return int(sum(m["nbytes"] for m in meta))
-
-
-# -- multi-part payloads (pull responses) -------------------------------------
-
-
-def pack_parts(parts: list[tuple[dict, bytes]]) -> tuple[list[dict], bytes]:
-    """Concatenate several (meta-dict, payload) pairs into one message.
-
-    Each part's descriptor gains an ``nbytes`` so the peer can slice the
-    concatenated payload back apart.
-    """
-    descs = []
-    blobs = []
-    for desc, blob in parts:
-        d = dict(desc)
-        d["nbytes"] = len(blob)
-        descs.append(d)
-        blobs.append(blob)
-    return descs, b"".join(blobs)
-
-
-def unpack_parts(descs: list[dict], payload: bytes) -> list[tuple[dict, bytes]]:
-    out = []
-    off = 0
-    for d in descs:
-        n = d["nbytes"]
-        out.append((d, payload[off : off + n]))
-        off += n
-    if off != len(payload):
-        raise ValueError(f"trailing bytes in multi-part payload: {len(payload) - off}")
-    return out
+# the broker's unit of record: payload bytes a meta list accounts for
+wire_bytes = tree_nbytes

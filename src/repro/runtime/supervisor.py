@@ -63,6 +63,10 @@ class FaaSJobConfig:
     lr: float = 0.08
     isp_v: float = 0.7
     isp_decay: bool = True
+    # update wire encoding (repro.wire): 'auto'|'dense'|'sparse'|'bitmap',
+    # optional 'fp16'|'bf16' value quantization with error-feedback residual
+    wire_scheme: str = "auto"
+    wire_quant: str = "none"
     autotune: bool = False
     tuner: Optional[AutoTunerConfig] = None
     # deterministic test hooks
@@ -88,6 +92,8 @@ class FaaSJobConfig:
             "lr": self.lr,
             "isp_v": self.isp_v,
             "isp_decay": self.isp_decay,
+            "wire_scheme": self.wire_scheme,
+            "wire_quant": self.wire_quant,
             "n_batches": n_batches,
             "run_dir": self.run_dir,
             "pull_deadline_s": self.pull_deadline_s,
@@ -116,6 +122,7 @@ class Supervisor:
         self.wl = workload_lib.build(cfg.workload, cfg.workload_cfg)
         self.broker: Optional[Broker] = None
         self.addr: Optional[tuple[str, int]] = None
+        self._conn: Optional[protocol.Connection] = None
         self.slots = [_Slot(worker=w) for w in range(cfg.n_workers)]
         self.lifetimes: list[float] = []  # one entry per finished invocation
         self.history: list[dict] = []
@@ -123,6 +130,7 @@ class Supervisor:
         self.respawns: list[dict] = []
         self.evictions: dict[int, int] = {}
         self._frontier = 0
+        self._poll_since = 1  # next telemetry step this supervisor hasn't seen
         self._scripted_fired = 0
         self._killed_once = False
         self.tuner: Optional[ScaleInAutoTuner] = None
@@ -147,6 +155,14 @@ class Supervisor:
         env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
         if self.cfg.force_cpu:
             env["JAX_PLATFORMS"] = "cpu"
+        # each worker is the paper's 1 vCPU function: cap per-process math
+        # threads so N workers on an M-core host don't thrash each other
+        # (oversubscribed intra-op parallelism was the dominant measured
+        # compute overhead on small hosts — see BENCH_runtime.json phases)
+        env.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false "
+                       "intra_op_parallelism_threads=1")
+        env.setdefault("OMP_NUM_THREADS", "1")
+        env.setdefault("OPENBLAS_NUM_THREADS", "1")
         return env
 
     def _spawn(self, slot: _Slot) -> None:
@@ -214,12 +230,18 @@ class Supervisor:
 
     def _rpc(self, header: dict, payload: bytes = b"") -> tuple[dict, bytes]:
         assert self.addr is not None
-        return protocol.request(self.addr, header, payload, timeout=30.0)
+        if self._conn is None:
+            self._conn = protocol.Connection(self.addr, timeout=30.0)
+        return self._conn.request(header, payload)
 
     def _poll(self) -> dict:
-        resp, _ = self._rpc({"t": "poll"})
+        # supervisor-owned cursor keeps the poll idempotent: if the
+        # connection retries a poll whose response was lost, the broker
+        # re-serves the same rows instead of dropping them
+        resp, _ = self._rpc({"t": "poll", "since": self._poll_since})
         for row in resp["rows"]:
             self.history.append(row)
+            self._poll_since = row["step"] + 1
             self._frontier = max(self._frontier, row["step"])
             if self.tuner is not None:
                 self.tuner.observe(row["step"], row["loss"], row["dur_s"])
@@ -325,6 +347,9 @@ class Supervisor:
             for slot in self.slots:
                 if slot.alive:
                     slot.proc.kill()
+            if self._conn is not None:
+                self._conn.close()
+                self._conn = None
             if self.broker is not None:
                 self.broker.stop()
 
@@ -378,6 +403,16 @@ class Supervisor:
         final_eval, final_ckpt_step = self._final_eval()
         hist = self.history
         durs = [r["dur_s"] for r in hist if r.get("dur_s")]
+        phases = [r["phase"] for r in hist if r.get("phase")]
+        phase_s_mean = (
+            {
+                k: sum(p[k] for p in phases if p.get(k) is not None)
+                / max(sum(1 for p in phases if p.get(k) is not None), 1)
+                for k in phases[0]
+            }
+            if phases
+            else {}
+        )
         result = {
             "workload": self.wl.name,
             "n_workers": self.cfg.n_workers,
@@ -388,6 +423,9 @@ class Supervisor:
             "final_ckpt_step": final_ckpt_step,
             "history": hist,
             "measured_step_s": (sum(durs) / len(durs)) if durs else None,
+            "phase_s_mean": phase_s_mean,
+            "wire_scheme": self.cfg.wire_scheme,
+            "wire_quant": self.cfg.wire_quant,
             "invariant_max_err": max(
                 (r["inv_err"] for r in hist), default=0.0
             ),

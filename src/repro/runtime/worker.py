@@ -11,17 +11,26 @@ Per step t the worker runs the *paper-faithful replica semantics* of
 ``core.isp`` (the same math ``core.simulator`` vmaps, here on a real
 process):
 
-1. fetch its minibatch key from the broker, load the batch locally;
+1. fetch its minibatch key (piggybacked on the previous pull; a ``batch``
+   round trip only on the first step of an invocation) and load the
+   batch locally;
 2. ``u_t = optimizer(grads) / P_active(t)`` (averaged-gradient scaling);
 3. ``sig, residual' = filter_update(residual + u_t)`` — the ISP
    significance split of ``core.isp``, bit-identical semantics;
-4. publish ``sig`` (sparse-encoded) to the broker;
-5. pull the peers' significant updates for t (ISP barrier) and apply
+4. publish ``sig`` through the shared wire codec (``repro.wire``; scheme
+   and optional fp16/bf16 value quantization from the job config, any
+   quantization error fed back into the residual);
+5. pull the peers' significant updates for t (ISP barrier, ONE coalesced
+   round trip on the persistent connection) and apply
    ``x += u_t + sum_peers sig`` — own update in full, peers filtered;
 6. on an eviction notice effective at t: publish ``x + residual`` as the
    flush payload (the leaving worker's model-averaging hand-off) and exit;
    on a flush from a leaving peer: mean-preserving reintegration via
    ``dist.elastic.reintegrate_into``.
+
+Every step reports a per-phase wall-clock breakdown (fetch / compute /
+encode / wire / decode) so data-path regressions are attributable
+(surfaced in ``BENCH_runtime.json``).
 
 Crash recovery is replay: a respawned worker restores the newest checkpoint
 and re-executes forward — every input (minibatch key, peer updates, pool
@@ -43,17 +52,20 @@ from typing import Any, Optional
 PyTree = Any
 
 
-def _rpc(addr, header, payload=b"", timeout=30.0, tries=5):
-    from repro.runtime import protocol
+def _make_rpc(conn):
+    """Retrying RPC over one persistent broker connection."""
 
-    last: Optional[Exception] = None
-    for i in range(tries):
-        try:
-            return protocol.request(addr, header, payload, timeout=timeout)
-        except (ConnectionError, OSError, TimeoutError) as e:
-            last = e
-            time.sleep(0.05 * (i + 1))
-    raise SystemExit(4) from last
+    def _rpc(header, payload=b"", timeout=30.0, tries=5):
+        last: Optional[Exception] = None
+        for i in range(tries):
+            try:
+                return conn.request(header, payload, timeout=timeout)
+            except (ConnectionError, OSError, TimeoutError) as e:
+                last = e
+                time.sleep(0.05 * (i + 1))
+        raise SystemExit(4) from last
+
+    return _rpc
 
 
 class _Membership:
@@ -87,11 +99,29 @@ def run_worker(host: str, port: int, worker_id: int) -> int:
     from repro.dist.elastic import reintegrate_into
     from repro.runtime import protocol, workload as workload_lib
 
-    addr = (host, port)
-    hello, _ = _rpc(addr, {"t": "hello", "worker": worker_id})
+    # ONE persistent broker connection for the whole invocation — the
+    # coalesced data path (DESIGN.md §10.3) instead of a TCP connect per
+    # message
+    conn = protocol.Connection((host, port), timeout=30.0)
+    _rpc = _make_rpc(conn)
+    hello, _ = _rpc({"t": "hello", "worker": worker_id})
     job = hello["job"]
     members = _Membership(int(job["n_workers"]))
     members.update(hello)
+
+    # persistent jit cache under the run dir: later invocations (respawns,
+    # invocation boundaries, every worker after the first) load compiled
+    # step functions instead of re-paying the ~1 s XLA cold start — the
+    # standard warm-container trick for FaaS runtimes (cuts the measured
+    # cold-start share of BENCH_runtime.json's step-time mean)
+    try:
+        jax.config.update(
+            "jax_compilation_cache_dir",
+            os.path.join(job["run_dir"], "jit_cache"),
+        )
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    except Exception:
+        pass  # older jax: cold starts stay, correctness unaffected
 
     wl = workload_lib.build(job["workload"], job["workload_cfg"])
     optimizer = optim.make(job["optimizer"], job["lr"])
@@ -102,6 +132,8 @@ def run_worker(host: str, port: int, worker_id: int) -> int:
     invocation_steps = int(job.get("invocation_steps", 1_000_000))
     checkpoint_every = int(job.get("checkpoint_every", 10))
     pull_deadline_s = float(job.get("pull_deadline_s", 120.0))
+    wire_scheme = str(job.get("wire_scheme", "auto"))
+    wire_quant = str(job.get("wire_quant", "none"))
     ckpt_dir = os.path.join(job["run_dir"], "ckpt", f"w{worker_id:03d}")
 
     params = wl.params0
@@ -161,10 +193,12 @@ def run_worker(host: str, port: int, worker_id: int) -> int:
         last_saved = step_done
 
     def bye(reason: str) -> None:
-        _rpc(addr, {"t": "bye", "worker": worker_id, "reason": reason})
+        _rpc({"t": "bye", "worker": worker_id, "reason": reason})
+        conn.close()
 
     t = start_step
     steps_this_invocation = 0
+    key_next: Optional[int] = None  # piggybacked by the previous pull
     while True:
         ev = members.my_evict_step(worker_id)
         # an eviction effective past the job's end is a no-op (the broker
@@ -172,13 +206,14 @@ def run_worker(host: str, port: int, worker_id: int) -> int:
         if ev is not None and ev <= total_steps and t >= ev:
             # eviction effective at step ev: publish replica + residual (the
             # paper's leaving-worker hand-off, error-feedback form: no
-            # accumulated update mass is lost) and end this worker's life
+            # accumulated update mass is lost) and end this worker's life.
+            # Flushes are full replicas — always 'auto' (dense wins), never
+            # quantized: the hand-off must be exact.
             flushed = jax.tree.map(lambda x, r: x + r, params, residual)
-            meta, payload = protocol.encode_tree(flushed)
+            meta, parts, _ = protocol.encode_tree_parts(flushed)
             _rpc(
-                addr,
                 {"t": "flush", "worker": worker_id, "step": ev, "meta": meta},
-                payload,
+                parts,
             )
             bye("evicted")
             return 0
@@ -191,24 +226,45 @@ def run_worker(host: str, port: int, worker_id: int) -> int:
             bye("invocation-end")
             return 0
 
-        t0 = time.perf_counter()
-        resp, _ = _rpc(
-            addr, {"t": "batch", "worker": worker_id, "step": t}
-        )
-        members.update(resp)
-        batch = wl.batch(int(resp["key"]))
+        tp = time.perf_counter
+        t0 = tp()
+        # -- fetch: minibatch key (piggybacked except on the first step of
+        #    an invocation) + local batch materialization
+        if key_next is None:
+            resp, _ = _rpc({"t": "batch", "worker": worker_id, "step": t})
+            members.update(resp)
+            key = int(resp["key"])
+        else:
+            key = key_next
+        batch = wl.batch(key)
+        t_fetch = tp()
+        # -- compute: grads -> optimizer -> ISP split (block for honest
+        #    phase attribution; jax dispatch is asynchronous)
         p_act = members.p_active(t)
-        u, sig, res, opt_state, loss, sent, inv_err = compute(
-            params,
-            opt_state,
-            residual,
-            batch,
-            jnp.asarray(1.0 / p_act, jnp.float32),
-            jnp.asarray(t, jnp.int32),
+        u, sig, res, opt_state, loss, sent, inv_err = jax.block_until_ready(
+            compute(
+                params,
+                opt_state,
+                residual,
+                batch,
+                jnp.asarray(1.0 / p_act, jnp.float32),
+                jnp.asarray(t, jnp.int32),
+            )
         )
-        meta, payload = protocol.encode_tree(sig)
+        t_compute = tp()
+        # -- encode: shared wire codec; quantization error (if any) is
+        #    error-feedback — it joins the residual, conserving update mass
+        meta, parts, qerr = protocol.encode_tree_parts(
+            sig, scheme=wire_scheme, quant=wire_quant,
+            with_residual=(wire_quant != "none"),
+        )
+        if qerr is not None:
+            res = jax.tree.map(
+                lambda r, e: r + e.astype(r.dtype), res, qerr
+            )
+        t_encode = tp()
+        # -- wire: publish + ONE coalesced blocking pull per ISP barrier
         ack, _ = _rpc(
-            addr,
             {
                 "t": "publish",
                 "worker": worker_id,
@@ -218,14 +274,13 @@ def run_worker(host: str, port: int, worker_id: int) -> int:
                 "sent_fraction": float(sent),
                 "inv_err": float(inv_err),
             },
-            payload,
+            parts,
         )
         members.update(ack)
 
         deadline = time.monotonic() + pull_deadline_s
         while True:
             resp, blob = _rpc(
-                addr,
                 {"t": "pull", "worker": worker_id, "step": t,
                  "timeout_s": 2.0},
                 timeout=10.0,
@@ -237,7 +292,9 @@ def run_worker(host: str, port: int, worker_id: int) -> int:
                 break
             if time.monotonic() > deadline:
                 return 5
-
+        key_next = resp.get("key_next")
+        t_wire = tp()
+        # -- decode: peers' updates + eviction flushes back into pytrees
         peers_sum = jax.tree.map(
             lambda x: np.zeros(np.shape(x), np.asarray(x).dtype), params
         )
@@ -250,6 +307,8 @@ def run_worker(host: str, port: int, worker_id: int) -> int:
                 # fixed (ascending worker id) float32 summation order keeps
                 # the replay path and every peer bit-identical
                 peers_sum = jax.tree.map(lambda a, b: a + b, peers_sum, tree)
+        t_decode = tp()
+        # -- apply (counted as compute): own update + peers + reintegration
         params = apply_visible(params, u, peers_sum)
         if flushes:
             pool_before = members.p_active(t - 1)
@@ -257,12 +316,21 @@ def run_worker(host: str, port: int, worker_id: int) -> int:
                 params = reintegrate(
                     params, flushed, jnp.asarray(pool_before, jnp.float32)
                 )
+        params = jax.block_until_ready(params)
         residual = res
-        dur = time.perf_counter() - t0
+        t_apply = tp()
         _rpc(
-            addr,
-            {"t": "report", "worker": worker_id, "step": t,
-             "dur_s": float(dur)},
+            {
+                "t": "report", "worker": worker_id, "step": t,
+                "dur_s": float(t_apply - t0),
+                "phase": {
+                    "fetch": t_fetch - t0,
+                    "compute": (t_compute - t_fetch) + (t_apply - t_decode),
+                    "encode": t_encode - t_compute,
+                    "wire": t_wire - t_encode,
+                    "decode": t_decode - t_wire,
+                },
+            },
         )
         steps_this_invocation += 1
         if t % checkpoint_every == 0:

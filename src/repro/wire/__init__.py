@@ -1,0 +1,42 @@
+"""repro.wire — the single update-encoding codec layer (DESIGN.md §10).
+
+One codec registry (dense / sparse-index / bitmap, optional fp16/bf16
+value quantization with fp32 error-feedback residual), zero-copy
+memoryview framing, persistent connections, and exact per-leaf byte
+accounting.  ``dist.compression``, ``runtime.protocol`` and the
+simulator's cost model (``core.simulator`` / ``core.billing``) all read
+bytes through here, so simulated bytes == measured bytes by construction.
+
+    codec   — leaf/tree encode/decode, sizing formulas, quantization
+    framing — length-prefixed messages, vectored send, Connection
+"""
+
+from repro.wire.codec import (  # noqa: F401
+    AUTO,
+    INT32_MAX,
+    QUANTS,
+    SCHEMES,
+    best_scheme,
+    decode_leaf,
+    decode_tree,
+    encode_leaf,
+    encode_tree,
+    encode_tree_parts,
+    index_dtype,
+    index_itemsize,
+    leaf_nbytes,
+    mask_nbytes,
+    predict_tree_nbytes,
+    quant_dtype,
+    tree_keys,
+    tree_nbytes,
+)
+from repro.wire.framing import (  # noqa: F401
+    MAX_MSG_BYTES,
+    Connection,
+    pack_parts,
+    recv_msg,
+    request,
+    send_msg,
+    unpack_parts,
+)

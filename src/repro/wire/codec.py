@@ -1,0 +1,353 @@
+"""Unified update-encoding codec — ONE byte-accounting truth (DESIGN.md §10).
+
+Every layer that moves a significance-filtered update — the live FaaS data
+path (``runtime.protocol``), the compressed pod collectives
+(``dist.compression``), and the simulator's communication cost model
+(``core.simulator`` / ``core.billing``) — encodes and *accounts* through
+this module.  The invariant the whole cost story rests on:
+
+    simulated bytes == measured bytes, by construction.
+
+``leaf_nbytes`` is the single sizing formula; ``encode_leaf`` asserts its
+output length against it on every call, so the auto-tuner can never again
+tune against a cost model the runtime doesn't obey.
+
+Schemes (per leaf):
+
+* ``dense``  — raw value bytes, ``n * itemsize``;
+* ``sparse`` — flat indices + values, ``nnz * (idx_itemsize + itemsize)``
+  (int32 indices, int64 when the leaf has >= 2**31 elements);
+* ``bitmap`` — little-endian packed significance mask + values,
+  ``ceil(n/8) + nnz * itemsize`` — the paper's Redis sparse encoding;
+* ``auto``   — whichever of the three is smallest for this leaf
+  (ties prefer sparse, then bitmap).
+
+Value quantization (``quant``): ``fp16`` / ``bf16`` halve the value bytes
+of floating leaves; the quantization error is returned as an fp32
+error-feedback residual (``encode_leaf(..., with_residual=True)``) so no
+update mass is lost — the same conservation discipline as the ISP filter
+itself.  Non-float leaves pass through unquantized.
+
+Decode is bit-exact: ``decode(encode(x)) == x`` without quantization, and
+``decode(encode(x)) == dequant(quant(x))`` with it (asserted by
+``tests/test_wire_codec.py`` across schemes x dtypes x edge shapes).
+
+Only numpy at module import — jax is imported lazily inside the tree
+helpers so worker cold-start (a measured FaaS cost) stays light.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+
+try:  # bf16 rides ml_dtypes (a jax dependency); degrade gracefully without
+    import ml_dtypes
+
+    _BF16: Optional[np.dtype] = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover - ml_dtypes ships with jax
+    _BF16 = None
+
+PyTree = Any
+
+SCHEMES = ("dense", "sparse", "bitmap")
+AUTO = "auto"
+QUANTS = ("none", "fp16", "bf16")
+
+INT32_MAX = 2**31 - 1  # flat-index overflow bound (satellite guard)
+
+
+# -- sizing: the one formula every layer reads --------------------------------
+
+
+def index_itemsize(n: int) -> int:
+    """Bytes per flat index for an ``n``-element leaf (int32 until 2**31)."""
+    return 4 if n <= INT32_MAX else 8
+
+
+def index_dtype(n: int) -> np.dtype:
+    """int32 flat indices, widened to int64 for leaves with >= 2**31
+    elements — int32 would wrap silently and scatter updates into the
+    wrong coordinates."""
+    return np.dtype(np.int32 if n <= INT32_MAX else np.int64)
+
+
+def mask_nbytes(n: int) -> int:
+    """Bytes of the packed significance bitmap for an ``n``-element leaf."""
+    return (n + 7) // 8
+
+
+def quant_dtype(dtype: Any, quant: str = "none") -> np.dtype:
+    """Wire value dtype for a leaf dtype under a quantization mode.
+
+    Only floating leaves quantize; integer/bool leaves pass through.
+    """
+    dt = np.dtype(dtype)
+    if quant not in QUANTS:
+        raise ValueError(f"quant must be one of {QUANTS}, got {quant!r}")
+    if quant == "none" or dt.kind != "f":
+        return dt
+    if quant == "fp16":
+        return np.dtype(np.float16)
+    if _BF16 is None:  # pragma: no cover
+        raise RuntimeError("bf16 quantization requires ml_dtypes")
+    return _BF16
+
+
+def leaf_nbytes(scheme: str, n: int, nnz, itemsize: int = 4):
+    """Wire bytes of one encoded leaf. THE sizing formula.
+
+    ``nnz`` may be a python number or a traced jax scalar (the compressed
+    pod collective accounts inside jit) — only ``+``/``*`` touch it.
+    """
+    if scheme == "dense":
+        return n * itemsize
+    if scheme == "sparse":
+        return nnz * (index_itemsize(n) + itemsize)
+    if scheme == "bitmap":
+        return mask_nbytes(n) + nnz * itemsize
+    raise ValueError(f"scheme must be one of {SCHEMES}, got {scheme!r}")
+
+
+def best_scheme(n: int, nnz: int, itemsize: int = 4) -> str:
+    """The ``auto`` resolution: smallest encoding for this leaf
+    (ties prefer sparse, then bitmap — sparse decodes cheapest)."""
+    order = ("sparse", "bitmap", "dense")
+    sizes = {s: leaf_nbytes(s, n, nnz, itemsize) for s in order}
+    return min(order, key=lambda s: sizes[s])
+
+
+# -- leaf encode / decode -----------------------------------------------------
+
+
+def encode_leaf(
+    arr: Any,
+    scheme: str = AUTO,
+    quant: str = "none",
+    key: Optional[str] = None,
+    with_residual: bool = False,
+) -> tuple[dict, list, Optional[np.ndarray]]:
+    """Encode one array -> (meta, buffer parts, optional fp32 residual).
+
+    ``parts`` is a list of read-only byte views over freshly materialized
+    arrays (zero extra copies; the views keep their bases alive) — hand it
+    straight to the vectored framing layer, or ``b"".join`` it.
+
+    ``meta``: k, shape, dtype, enc, nnz, nbytes (+ ``q`` when values are
+    quantized, ``idx: 'int64'`` when indices widened).  ``nbytes`` is
+    asserted equal to ``leaf_nbytes`` — accounting can never drift from
+    the bytes actually produced.
+
+    With ``with_residual=True`` the third element is the fp32
+    quantization error (``arr - decode(encode(arr))``), zeros when
+    nothing was lost.
+    """
+    a = np.asarray(arr)
+    dt = a.dtype
+    vdt = quant_dtype(dt, quant)
+    flat = np.ascontiguousarray(a).reshape(-1)
+    n = int(flat.size)
+    nz = np.flatnonzero(flat)
+    nnz = int(nz.size)
+    if scheme == AUTO:
+        scheme = best_scheme(n, nnz, vdt.itemsize)
+    meta: dict = {
+        "k": key,
+        "shape": list(a.shape),
+        "dtype": str(dt),
+        "enc": scheme,
+        "nnz": nnz,
+    }
+    if vdt != dt:
+        meta["q"] = quant
+    parts: list = []
+    if scheme == "dense":
+        qvals = flat if vdt == dt else flat.astype(vdt)
+        parts = [_byte_view(qvals)]
+    elif scheme == "sparse":
+        idt = index_dtype(n)
+        if idt != np.int32:
+            meta["idx"] = str(idt)
+        qvals = flat[nz].astype(vdt)
+        parts = [_byte_view(nz.astype(idt)), _byte_view(qvals)]
+    elif scheme == "bitmap":
+        mask = np.packbits(flat != 0, bitorder="little")
+        qvals = flat[nz].astype(vdt)
+        parts = [_byte_view(mask), _byte_view(qvals)]
+    else:
+        raise ValueError(f"scheme must be one of {SCHEMES}, got {scheme!r}")
+    nbytes = sum(len(p) for p in parts)
+    expect = leaf_nbytes(scheme, n, nnz, vdt.itemsize)
+    assert nbytes == expect, (nbytes, expect, meta)  # the §10 invariant
+    meta["nbytes"] = nbytes
+    residual = None
+    if with_residual:
+        # quantization error directly from the materialized wire values —
+        # zero off the nnz support, so no decode round trip is needed
+        if vdt == dt:
+            residual = np.zeros(a.shape, np.float32)
+        elif scheme == "dense":
+            residual = (
+                flat.astype(np.float32) - qvals.astype(np.float32)
+            ).reshape(a.shape)
+        else:
+            rflat = np.zeros(n, np.float32)
+            rflat[nz] = (
+                flat[nz].astype(np.float32) - qvals.astype(np.float32)
+            )
+            residual = rflat.reshape(a.shape)
+    return meta, parts, residual
+
+
+def _byte_view(arr: np.ndarray):
+    """Read-only byte view over a C-contiguous array (keeps it alive).
+
+    Views through uint8 because extension dtypes (ml_dtypes bf16) don't
+    export the buffer protocol directly.
+    """
+    a = np.ascontiguousarray(arr)
+    return a.view(np.uint8).reshape(-1).data.cast("B")
+
+
+def decode_leaf(meta: dict, blob) -> np.ndarray:
+    """Decode one leaf's bytes back into an array of its original dtype.
+
+    Quantized values are widened back (``dequant(quant(x))`` — bit-exact
+    against what the encoder saw post-quantization).
+    """
+    shape = tuple(meta["shape"])
+    dt = np.dtype(meta["dtype"])
+    vdt = quant_dtype(dt, meta.get("q", "none"))
+    n = int(np.prod(shape)) if shape else 1
+    enc = meta["enc"]
+    nnz = int(meta["nnz"])
+    if enc == "dense":
+        vals = np.frombuffer(blob, dtype=vdt, count=n)
+        return (vals if vdt == dt else vals.astype(dt)).reshape(shape)
+    if enc == "sparse":
+        idt = np.dtype(meta.get("idx", "int32"))
+        idx = np.frombuffer(blob, dtype=idt, count=nnz)
+        vals = np.frombuffer(
+            blob, dtype=vdt, offset=nnz * idt.itemsize, count=nnz
+        )
+        out = np.zeros(n, dtype=dt)
+        out[idx] = vals.astype(dt)
+        return out.reshape(shape)
+    if enc == "bitmap":
+        mb = mask_nbytes(n)
+        mask = np.unpackbits(
+            np.frombuffer(blob, dtype=np.uint8, count=mb),
+            count=n,
+            bitorder="little",
+        ).astype(bool)
+        vals = np.frombuffer(blob, dtype=vdt, offset=mb, count=nnz)
+        out = np.zeros(n, dtype=dt)
+        out[mask] = vals.astype(dt)
+        return out.reshape(shape)
+    raise ValueError(f"unknown leaf encoding {enc!r}")
+
+
+# -- pytree encode / decode ---------------------------------------------------
+
+
+def tree_keys(tree: PyTree) -> list[str]:
+    """Stable '/'-joined path keys — ``checkpoint.store.path_key``'s scheme
+    (imported, not copied, so wire metadata and checkpoint manifests can
+    never drift apart)."""
+    import jax
+
+    from repro.checkpoint.store import path_key
+
+    return [
+        path_key(path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
+    ]
+
+
+def encode_tree_parts(
+    tree: PyTree,
+    scheme: str = AUTO,
+    quant: str = "none",
+    with_residual: bool = False,
+) -> tuple[list[dict], list, Optional[PyTree]]:
+    """Encode a pytree -> (per-leaf meta, flat buffer list, residual tree).
+
+    The buffer list is framing-ready (vectored send, no join); the
+    residual tree is None unless ``with_residual`` and carries the fp32
+    quantization error per leaf for error feedback.
+    """
+    import jax
+
+    keys = tree_keys(tree)
+    leaves = jax.tree_util.tree_leaves(tree)
+    meta: list[dict] = []
+    parts: list = []
+    residuals: list = []
+    for key, leaf in zip(keys, leaves):
+        m, p, r = encode_leaf(
+            leaf, scheme=scheme, quant=quant, key=key,
+            with_residual=with_residual,
+        )
+        meta.append(m)
+        parts.extend(p)
+        residuals.append(r)
+    res_tree = None
+    if with_residual:
+        treedef = jax.tree_util.tree_structure(tree)
+        res_tree = jax.tree_util.tree_unflatten(treedef, residuals)
+    return meta, parts, res_tree
+
+
+def encode_tree(
+    tree: PyTree, scheme: str = AUTO, quant: str = "none"
+) -> tuple[list[dict], bytes]:
+    """Joined-payload form of ``encode_tree_parts`` (RPC-compatible)."""
+    meta, parts, _ = encode_tree_parts(tree, scheme=scheme, quant=quant)
+    return meta, b"".join(bytes(p) for p in parts)
+
+
+def decode_tree(meta: list[dict], payload, like: PyTree) -> PyTree:
+    """Decode bytes back into numpy leaves shaped like ``like``."""
+    import jax
+
+    like_leaves, treedef = jax.tree_util.tree_flatten(like)
+    if len(like_leaves) != len(meta):
+        raise ValueError(
+            f"template has {len(like_leaves)} leaves, message {len(meta)}"
+        )
+    view = memoryview(payload)
+    out = []
+    off = 0
+    for m in meta:
+        nb = int(m["nbytes"])
+        out.append(decode_leaf(m, view[off : off + nb]))
+        off += nb
+    if off != len(view):
+        raise ValueError(f"trailing bytes in payload: {len(view) - off}")
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_nbytes(meta: list[dict]) -> int:
+    """Payload bytes a meta list accounts for (the broker's unit of record)."""
+    return int(sum(m["nbytes"] for m in meta))
+
+
+def predict_tree_nbytes(
+    tree: PyTree, scheme: str = AUTO, quant: str = "none"
+) -> int:
+    """Simulator-side accounting: wire bytes this tree WOULD cost, computed
+    from nnz counts through the same ``leaf_nbytes`` formula the encoder
+    asserts against — equal to the encoded size by construction (the
+    cross-check test in ``tests/test_wire_codec.py`` holds this line)."""
+    import jax
+
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        a = np.asarray(leaf)
+        n = int(a.size)
+        nnz = int(np.count_nonzero(a))
+        isz = quant_dtype(a.dtype, quant).itemsize
+        s = best_scheme(n, nnz, isz) if scheme == AUTO else scheme
+        total += int(leaf_nbytes(s, n, nnz, isz))
+    return total

@@ -20,6 +20,7 @@ from repro.dist.compression import (
     isp_compressed_step,
     split_significant,
 )
+from repro.wire import codec as wire_codec
 
 DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
 
@@ -211,12 +212,14 @@ def test_bitmap_is_numerically_dense(seed, v):
     np.testing.assert_array_equal(
         np.asarray(outs["dense"][1]["w"]), np.asarray(outs["bitmap"][1]["w"])
     )
-    # wire model: 1 bit/entry mask + 4B per significant value; cheaper
-    # than dense exactly when the filter is actually sparse (the paper's
-    # point — a dense update gains nothing from a sparse encoding)
+    # wire model (repro.wire bitmap codec): a ceil(n/8) packed mask per pod
+    # + 4B per significant value; cheaper than dense exactly when the
+    # filter is actually sparse (the paper's point — a dense update gains
+    # nothing from a sparse encoding)
     n_total = u.size
+    n_pods, leaf_n = u.shape
     hits = float(outs["bitmap"][2]["sent_fraction"]) * n_total
-    want_bytes = n_total / 8.0 + 4.0 * hits
+    want_bytes = n_pods * wire_codec.mask_nbytes(leaf_n) + 4.0 * hits
     assert float(outs["bitmap"][2]["wire_bytes"]) == pytest.approx(
         want_bytes, rel=1e-5
     )

@@ -218,6 +218,76 @@ def test_broker_refuses_eviction_past_job_end(broker):
     assert broker.core.evictions == {}
 
 
+def test_persistent_connection_many_round_trips(broker):
+    """One TCP connection, many framed request/response round trips — the
+    coalesced data path (DESIGN.md §10.3)."""
+    with protocol.Connection(broker.addr) as conn:
+        for s in (1, 2, 3):
+            resp, _ = conn.request({"t": "batch", "worker": 0, "step": s})
+            assert resp["ok"] and resp["key"] == ((s - 1) * 2) % 5
+        # a tensor publish and a poll ride the same socket
+        meta, payload = protocol.encode_tree({"x": jnp.ones(4)})
+        resp, _ = conn.request(
+            {"t": "publish", "worker": 0, "step": 1, "meta": meta,
+             "loss": 1.0, "sent_fraction": 1.0, "inv_err": 0.0},
+            payload,
+        )
+        assert resp["ok"]
+    # exactly one connection's worth of batch traffic was accounted
+    assert broker.core.stats["batch"]["count"] == 3
+
+
+def test_connection_survives_reconnect(broker):
+    conn = protocol.Connection(broker.addr)
+    resp, _ = conn.request({"t": "batch", "worker": 0, "step": 1})
+    assert resp["ok"]
+    conn._sock.close()  # simulate a dropped connection mid-invocation
+    resp, _ = conn.request({"t": "batch", "worker": 0, "step": 2})
+    assert resp["ok"]  # transparently reconnected and replayed
+    conn.close()
+
+
+def test_pull_piggybacks_next_batch_key(broker):
+    """The ready pull response carries the NEXT step's minibatch key, so
+    the steady-state worker loop is publish + pull only."""
+    meta, payload = protocol.encode_tree({"x": jnp.ones(4)})
+    for w in (0, 1):
+        _rpc(
+            broker,
+            {"t": "publish", "worker": w, "step": 1, "meta": meta,
+             "loss": 1.0, "sent_fraction": 1.0, "inv_err": 0.0},
+            payload,
+        )
+    resp, _ = _rpc(
+        broker, {"t": "pull", "worker": 1, "step": 1, "timeout_s": 5.0}
+    )
+    assert resp["ready"] is True
+    # key for (step=2, worker=1): ((2-1)*P + 1) % n_batches = 3
+    assert resp["key_next"] == 3
+
+
+def test_poll_with_since_cursor_is_idempotent(broker):
+    """A cursor-carrying poll re-serves the same rows on replay — the
+    supervisor's retrying Connection must not lose telemetry when a poll
+    response is dropped mid-flight."""
+    meta, payload = protocol.encode_tree({"x": jnp.ones(2)})
+    for w in (0, 1):
+        _rpc(
+            broker,
+            {"t": "publish", "worker": w, "step": 1, "meta": meta,
+             "loss": 1.0, "sent_fraction": 1.0, "inv_err": 0.0},
+            payload,
+        )
+        _rpc(broker, {"t": "report", "worker": w, "step": 1, "dur_s": 0.5})
+    r1, _ = _rpc(broker, {"t": "poll", "since": 1})
+    r2, _ = _rpc(broker, {"t": "poll", "since": 1})  # replay
+    assert [r["step"] for r in r1["rows"]] == [1]
+    assert r1["rows"] == r2["rows"]
+    # and the server-side cursor of legacy polls was not advanced by them
+    r3, _ = _rpc(broker, {"t": "poll"})
+    assert [r["step"] for r in r3["rows"]] == [1]
+
+
 def test_broker_accounts_bytes_per_message_type(broker):
     meta, payload = protocol.encode_tree({"x": jnp.ones(8)})
     _rpc(

@@ -1,0 +1,359 @@
+"""repro.wire — codec round-trips, byte-accounting invariants, cross-checks.
+
+The load-bearing invariant (DESIGN.md §10): every layer that sizes an
+update — the live runtime's encoder, the compressed pod collective's
+traced accounting, and the simulator's cost model — reads the SAME
+``leaf_nbytes`` formula, so simulated bytes == measured bytes by
+construction.  These tests hold that line:
+
+* bit-exact decode across schemes x dtypes x edge shapes;
+* ``len(payload) == meta nbytes == predicted nbytes`` everywhere;
+* broker-measured bytes == simulator-accounted bytes per scheme;
+* ``dist.compression``'s traced ``wire_bytes`` == real encoded bytes;
+* the int32 flat-index overflow guard (>= 2**31-element leaves widen).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import ml_dtypes
+
+from repro import wire
+from repro.wire import codec
+
+F32 = np.float32
+SCHEMES = ("dense", "sparse", "bitmap")
+DTYPES = {
+    "f32": np.dtype(np.float32),
+    "f16": np.dtype(np.float16),
+    "bf16": np.dtype(ml_dtypes.bfloat16),
+    "i32": np.dtype(np.int32),
+}
+# edge shapes: scalar, singleton, non-multiple-of-128, exactly 128, odd 129
+SHAPES = ((), (1,), (5,), (128,), (129,), (16, 4), (3, 5, 7))
+
+
+def _leaf(shape, dtype, density, seed=0):
+    dtype = np.dtype(dtype)
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal(shape or ())
+    mask = rng.random(shape or ()) < density
+    a = np.where(mask, a, 0.0)
+    if dtype.kind == "i":
+        return (a * 10).astype(dtype)
+    return a.astype(dtype)
+
+
+# -- round trips --------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", SCHEMES + ("auto",))
+@pytest.mark.parametrize("dtype", sorted(DTYPES))
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("density", (0.0, 0.15, 1.0))
+def test_roundtrip_bit_exact_with_exact_accounting(
+    scheme, dtype, shape, density
+):
+    dt = DTYPES[dtype]
+    a = _leaf(shape, dt, density)
+    meta, parts, _ = codec.encode_leaf(a, scheme=scheme)
+    blob = b"".join(bytes(p) for p in parts)
+    # exact accounting: produced == recorded == predicted
+    assert len(blob) == meta["nbytes"]
+    assert meta["nbytes"] == codec.leaf_nbytes(
+        meta["enc"], int(a.size), int(np.count_nonzero(a)), dt.itemsize
+    )
+    out = codec.decode_leaf(meta, blob)
+    assert out.dtype == a.dtype and out.shape == a.shape
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(a))
+
+
+def test_non_contiguous_leaf_encodes_its_logical_order():
+    base = _leaf((8, 6), F32, 0.3, seed=3)
+    nc = base.T  # non-contiguous view
+    assert not nc.flags["C_CONTIGUOUS"]
+    for scheme in SCHEMES:
+        meta, parts, _ = codec.encode_leaf(nc, scheme=scheme)
+        out = codec.decode_leaf(meta, b"".join(bytes(p) for p in parts))
+        np.testing.assert_array_equal(out, nc)
+
+
+def test_tree_encode_decode_and_predict_agree():
+    tree = {
+        "U": _leaf((40, 8), F32, 0.1, seed=1),
+        "M": _leaf((30, 8), F32, 1.0, seed=2),
+        "b": _leaf((), F32, 1.0, seed=3),
+    }
+    for scheme in SCHEMES + ("auto",):
+        meta, payload = wire.encode_tree(tree, scheme=scheme)
+        assert wire.tree_nbytes(meta) == len(payload)
+        assert wire.predict_tree_nbytes(tree, scheme=scheme) == len(payload)
+        out = wire.decode_tree(meta, payload, tree)
+        for k in tree:
+            np.testing.assert_array_equal(out[k], tree[k])
+
+
+def test_auto_picks_the_smallest_encoding_per_leaf():
+    sparse_leaf = _leaf((256,), F32, 0.02, seed=4)
+    dense_leaf = _leaf((256,), F32, 1.0, seed=5)
+    m1, _, _ = codec.encode_leaf(sparse_leaf, scheme="auto")
+    m2, _, _ = codec.encode_leaf(dense_leaf, scheme="auto")
+    n, i = 256, 4
+    for m, a in ((m1, sparse_leaf), (m2, dense_leaf)):
+        best = min(
+            codec.leaf_nbytes(s, n, int(np.count_nonzero(a)), i)
+            for s in SCHEMES
+        )
+        assert m["nbytes"] == best
+    assert m1["enc"] in ("sparse", "bitmap") and m2["enc"] == "dense"
+
+
+# -- quantization -------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("quant", ("fp16", "bf16"))
+def test_quantized_roundtrip_and_error_feedback_residual(scheme, quant):
+    a = _leaf((67,), F32, 0.4, seed=6)
+    qdt = codec.quant_dtype(a.dtype, quant)
+    meta, parts, res = codec.encode_leaf(
+        a, scheme=scheme, quant=quant, with_residual=True
+    )
+    blob = b"".join(bytes(p) for p in parts)
+    # half-width values shrink the wire by construction
+    assert meta["q"] == quant
+    assert meta["nbytes"] == codec.leaf_nbytes(
+        scheme, a.size, int(np.count_nonzero(a)), 2
+    )
+    out = codec.decode_leaf(meta, blob)
+    np.testing.assert_array_equal(out, a.astype(qdt).astype(F32))
+    # error feedback: decoded + residual reconstructs the original exactly
+    np.testing.assert_array_equal(out + res, a)
+
+
+def test_quantization_passes_integer_leaves_through():
+    a = _leaf((33,), DTYPES["i32"], 0.5, seed=7)
+    meta, parts, res = codec.encode_leaf(
+        a, scheme="dense", quant="fp16", with_residual=True
+    )
+    assert "q" not in meta and meta["nbytes"] == a.size * 4
+    np.testing.assert_array_equal(
+        codec.decode_leaf(meta, b"".join(bytes(p) for p in parts)), a
+    )
+    assert not np.any(res)
+
+
+# -- int32 flat-index overflow guard ------------------------------------------
+
+
+def test_index_dtype_widens_at_2_31():
+    assert codec.index_dtype(codec.INT32_MAX) == np.int32
+    assert codec.index_dtype(codec.INT32_MAX + 1) == np.int64
+    assert codec.index_itemsize(codec.INT32_MAX) == 4
+    assert codec.index_itemsize(codec.INT32_MAX + 1) == 8
+
+
+def test_sparse_accounting_charges_8B_indices_above_2_31():
+    n = codec.INT32_MAX + 1
+    assert codec.leaf_nbytes("sparse", n, 10, 4) == 10 * (8 + 4)
+    assert codec.leaf_nbytes("sparse", n - 1, 10, 4) == 10 * (4 + 4)
+
+
+def test_decode_honors_int64_index_meta():
+    # a huge-leaf message decodes through the int64 branch; exercise it on
+    # a small one by building the message the way the encoder would for
+    # n >= 2**31 (the decoder trusts meta['idx'], not the leaf size)
+    vals = np.asarray([1.5, -2.0], np.float32)
+    idx = np.asarray([3, 7], np.int64)
+    meta = {
+        "k": "w", "shape": [9], "dtype": "float32", "enc": "sparse",
+        "nnz": 2, "idx": "int64", "nbytes": 2 * (8 + 4),
+    }
+    out = codec.decode_leaf(meta, idx.tobytes() + vals.tobytes())
+    want = np.zeros(9, np.float32)
+    want[idx] = vals
+    np.testing.assert_array_equal(out, want)
+
+
+# -- cross-layer byte equality ------------------------------------------------
+
+
+def test_broker_measured_equals_simulator_accounted_per_scheme():
+    """The acceptance-criteria cross-check: publish one update through a
+    REAL broker under every scheme and require the broker's measured
+    telemetry bytes to equal the simulator-side accounting
+    (``predict_tree_nbytes`` -> ``leaf_nbytes``) for the same update."""
+    from repro.runtime import protocol
+    from repro.runtime.broker import Broker
+
+    tree = {
+        "U": _leaf((50, 4), F32, 0.08, seed=8),
+        "M": _leaf((20, 4), F32, 0.5, seed=9),
+    }
+    for step, scheme in enumerate(SCHEMES + ("auto",), start=1):
+        broker = Broker(
+            {"n_workers": 1, "total_steps": 4, "n_batches": 1}
+        )
+        broker.start()
+        try:
+            meta, payload = protocol.encode_tree(tree, scheme=scheme)
+            conn = protocol.Connection(broker.addr)
+            conn.request(
+                {"t": "publish", "worker": 0, "step": 1, "meta": meta,
+                 "loss": 0.0, "sent_fraction": 0.0, "inv_err": 0.0},
+                payload,
+            )
+            conn.close()
+            measured = broker.core.telemetry[(1, 0)]["wire_bytes"]
+            accounted = wire.predict_tree_nbytes(tree, scheme=scheme)
+            assert measured == accounted == len(payload), scheme
+        finally:
+            broker.stop()
+
+
+def test_simulator_bytes_out_reads_the_codec_formula():
+    """core.simulator._bytes_out == leaf_nbytes for every scheme (the cost
+    model and the runtime share one sizing function)."""
+    import jax
+
+    from repro import optim
+    from repro.core import consistency as cons
+    from repro.core.simulator import (
+        Platform, ServerlessSimulator, SimulatorConfig,
+    )
+
+    params = {"w": np.zeros((100,), F32)}
+
+    def grad_fn(p, b):
+        return np.float32(0.0), jax.tree.map(np.zeros_like, p)
+
+    for scheme in ("dense", "sparse", "bitmap", "auto"):
+        sim = ServerlessSimulator(
+            SimulatorConfig(
+                n_workers=2,
+                platform=Platform.MLLESS,
+                consistency=cons.ConsistencyConfig(model=cons.Model.ISP),
+                wire_scheme=scheme,
+            ),
+            grad_fn=grad_fn,
+            optimizer=optim.make("sgd", 0.1),
+            params=params,
+            flops_per_sample=1.0,
+        )
+        frac = 0.13
+        got = sim._bytes_out(frac, batch_size=8)
+        nnz = 100 * frac
+        if scheme == "auto":
+            want = min(
+                codec.leaf_nbytes(s, 100, nnz, 4) for s in SCHEMES
+            )
+        else:
+            want = codec.leaf_nbytes(scheme, 100, nnz, 4)
+        assert got == float(want), scheme
+    # serverful: dense bytes come from the same codec via billing
+    sim = ServerlessSimulator(
+        SimulatorConfig(n_workers=2, platform=Platform.SERVERFUL),
+        grad_fn=grad_fn,
+        optimizer=optim.make("sgd", 0.1),
+        params=params,
+        flops_per_sample=1.0,
+    )
+    assert sim._bytes_out(1.0, 8) == codec.leaf_nbytes("dense", 100, 100, 4)
+
+
+def test_dist_compression_accounts_real_encoded_bytes():
+    """The traced pod-collective ``wire_bytes`` stat equals the bytes the
+    shared codec ACTUALLY produces for the same sent tensors, per scheme
+    — exactly, no tolerance: simulated bytes ARE measured bytes."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.dist.compression import (
+        CompressionConfig,
+        _block_topk_mask,
+        isp_compressed_step,
+        split_significant,
+    )
+
+    P = 3
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = {"w": jax.random.normal(ks[0], (11, 129), jnp.float32)}
+    u = {"w": 0.1 * jax.random.normal(ks[1], (P, 11, 129), jnp.float32)}
+    r = {"w": 0.01 * jax.random.normal(ks[2], (P, 11, 129), jnp.float32)}
+    v = jnp.float32(0.9)
+
+    for scheme in ("dense", "topk", "bitmap"):
+        cfg = CompressionConfig(scheme=scheme)
+        _, _, stats = isp_compressed_step(cfg, u, x, r, v)
+        # what each pod put on the wire, via the module's own split
+        sig, _ = split_significant(u["w"], x["w"], r["w"], v)
+        if scheme == "topk":
+            keep = jax.vmap(lambda s: _block_topk_mask(s, cfg))(sig)
+            sent = jnp.where(keep, sig, jnp.zeros_like(sig))
+        else:
+            sent = sig
+        measured = 0
+        arr = np.asarray(sent)
+        for p in range(P):
+            m, _, _ = codec.encode_leaf(arr[p], scheme=cfg.wire_scheme)
+            measured += m["nbytes"]
+        assert int(float(stats["wire_bytes"])) == measured, scheme
+
+
+# -- framing / transport ------------------------------------------------------
+
+
+def test_vectored_send_msg_matches_joined_payload():
+    import socket
+
+    a, b = socket.socketpair()
+    try:
+        parts = [memoryview(b"abc"), b"", bytearray(b"defg")]
+        n = wire.send_msg(a, {"t": "x"}, parts)
+        h, p = wire.recv_msg(b)
+        assert h == {"t": "x"} and p == b"abcdefg"
+        assert n == 8 + len(b'{"t":"x"}') + 7
+    finally:
+        a.close()
+        b.close()
+
+
+def test_vectored_send_chunks_past_iov_max():
+    """A payload with more buffer views than the kernel's IOV_MAX (deep
+    pytrees: 2 views per sparse leaf) must still go out in one message."""
+    import socket
+    import threading
+
+    n_bufs = 3000  # > IOV_MAX (1024) by a comfortable margin
+    parts = [memoryview(bytes([i % 251])) for i in range(n_bufs)]
+    a, b = socket.socketpair()
+    got = {}
+
+    def reader():
+        got["msg"] = wire.recv_msg(b)
+
+    t = threading.Thread(target=reader)
+    t.start()
+    try:
+        wire.send_msg(a, {"t": "big"}, parts)
+        t.join(timeout=10.0)
+        assert not t.is_alive()
+        h, p = got["msg"]
+        assert h == {"t": "big"}
+        assert p == bytes(i % 251 for i in range(n_bufs))
+    finally:
+        a.close()
+        b.close()
+
+
+def test_pack_parts_vectored_and_unpack():
+    meta, parts, _ = codec.encode_leaf(_leaf((17,), F32, 0.3), scheme="sparse")
+    descs, bufs = wire.pack_parts(
+        [({"worker": 0}, parts), ({"worker": 1}, b"xyz")]
+    )
+    out = wire.unpack_parts(descs, bufs)
+    assert bytes(out[0][1]) == b"".join(bytes(p) for p in parts)
+    assert bytes(out[1][1]) == b"xyz"
+    assert out[0][0]["nbytes"] == meta["nbytes"]

@@ -42,6 +42,24 @@ LIVE_STEPS = 140
 # bills and each invocation round stalls the pool for.  A modelling
 # constant like CommModel's RTTs, NOT fit to the live run.
 COLD_START_S = 2.0
+# the shard sweep: a store-bound PMF job (big dense updates, the regime
+# "Towards Demystifying Serverless ML Training" identifies as the
+# indirect-communication bottleneck), live, at each update-store shard
+# count — the wire phase (publish + pipelined barrier pulls) is the cost
+# the sharded topology attacks, and the bill carries n_redis == n_brokers.
+# Shards are extra PROCESSES: they can only help up to the host's spare
+# cores (os.cpu_count() is recorded in the payload), so the wire mean
+# shrinks 1 -> 2 on a 2-core runner and saturates beyond it.
+SWEEP_BROKERS = (1, 2, 4)
+SWEEP_STEPS = 30
+SWEEP_P = 2
+SWEEP_WCFG = {
+    "n_users": 2000,
+    "n_movies": 3000,
+    "n_ratings": 40_000,
+    "rank": 32,
+    "batch_size": 1024,
+}
 
 
 def _run(kind: str, with_tuner: bool) -> dict:
@@ -117,8 +135,10 @@ def _run_live() -> dict:
             ),
             sparse_model=True,
             # predicted bytes read the SAME repro.wire codec formula the
-            # live workers' encoder asserts against (DESIGN.md §10)
+            # live workers' encoder asserts against (DESIGN.md §10), and
+            # the modelled store topology is the one the job ran
             wire_scheme=job.wire_scheme,
+            n_redis=job.n_brokers,
             cold_start_s=COLD_START_S,
             invocations_per_worker=inv_rounds,
         ),
@@ -193,11 +213,70 @@ def _run_live() -> dict:
             ),
         },
     }
+    payload["shard_sweep"] = _run_shard_sweep()
     root = os.path.join(os.path.dirname(__file__), "..")
     with open(os.path.join(root, "BENCH_runtime.json"), "w") as f:
         json.dump(payload, f, indent=1)
     write_result("fig6_runtime_live", payload)
     return payload
+
+
+def _run_shard_sweep() -> dict:
+    """The same deterministic store-bound PMF job, live, at each
+    update-store shard count (``runtime.sharding``): auto-tuner off and a
+    single invocation per worker so every run ships the IDENTICAL update
+    stream — wire bytes are bit-equal across the sweep, and the only
+    things that move are the wire phase (broker-side serialization, now
+    split and parallelized across shard processes) and the
+    ``n_redis == n_brokers`` infra bill."""
+    import tempfile
+
+    from repro.runtime import FaaSJobConfig, run_job
+
+    rows = []
+    for nb in SWEEP_BROKERS:
+        job = FaaSJobConfig(
+            run_dir=tempfile.mkdtemp(prefix=f"bench_shards{nb}_"),
+            workload="pmf",
+            workload_cfg=dict(SWEEP_WCFG),
+            n_workers=SWEEP_P,
+            total_steps=SWEEP_STEPS,
+            checkpoint_every=100,
+            optimizer="nesterov",
+            lr=0.1,
+            isp_v=0.7,
+            wire_scheme="dense",  # store-bound: ship full dense updates
+            n_brokers=nb,
+            autotune=False,
+            deadline_s=480.0,
+        )
+        live = run_job(job)
+        ph = live["phase_s_mean"] or {}
+        rows.append(
+            {
+                "n_brokers": nb,
+                "measured_step_s_mean": live["measured_step_s"],
+                "wire_phase_s_mean": ph.get("wire"),
+                "phase_s_mean": ph,
+                "wire_bytes_total": live["wire_bytes_total"],
+                "update_bytes_per_shard": live[
+                    "broker_update_bytes_per_shard"
+                ],
+                "dup_mismatches": live["dup_mismatches"],
+                "faas_cost_usd": live["bill"]["total"],
+                "infra_cost_usd": live["bill"]["infra_cost"],
+                "n_redis_billed": live["bill"]["n_redis"],
+            }
+        )
+    return {
+        "workload": dict(SWEEP_WCFG),
+        "n_workers": SWEEP_P,
+        "steps": SWEEP_STEPS,
+        "wire_scheme": "dense",
+        # shard processes only parallelize up to the host's spare cores
+        "host_cpus": os.cpu_count(),
+        "rows": rows,
+    }
 
 
 def run(live: bool = False) -> dict:
@@ -244,4 +323,11 @@ def report(out: dict) -> list[str]:
             lines.append(f"fig6,runtime_live_phases,0,{breakdown}")
         for scheme, b in (rt["live"].get("wire_bytes_by_scheme") or {}).items():
             lines.append(f"fig6,wire_bytes_{scheme},{b:.0f},bytes={b:.0f}")
+        for row in (rt.get("shard_sweep") or {}).get("rows", []):
+            w = row["wire_phase_s_mean"] or 0.0
+            lines.append(
+                f"fig6,shard_sweep_b{row['n_brokers']},{w*1e6:.0f},"
+                f"wire={w*1e3:.1f}ms,step={row['measured_step_s_mean']*1e3:.0f}ms,"
+                f"n_redis={row['n_redis_billed']}"
+            )
     return lines

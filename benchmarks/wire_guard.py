@@ -1,13 +1,19 @@
-"""CI wire-bytes regression guard (DESIGN.md §10.5).
+"""CI wire-bytes regression guard (DESIGN.md §10.5, §11.5).
 
-Runs the PMF smoke workload once on the LIVE FaaS runtime and once through
-the simulator's cost model, then compares against the checked-in baseline
-(``benchmarks/wire_baseline.json``):
+Runs the PMF smoke workload on the LIVE FaaS runtime — once single-broker
+and once sharded over two broker processes (``--n-brokers 2``) — plus the
+simulator's cost model for each topology, then compares against the
+checked-in baseline (``benchmarks/wire_baseline.json``):
 
 * ``wire_bytes_total`` — bit-deterministic at a fixed seed with the
   auto-tuner off (same updates -> same nnz -> same codec bytes), so ANY
   increase >10% means an encoding regression, not noise;
-* ``cost_measured_over_predicted`` — the live/model cost calibration; a
+* the SHARDED run's wire bytes must equal the single-broker run's EXACTLY
+  (the leaf-key partition moves bytes between shards, it never changes
+  them) and its per-shard broker-measured split must sum to the total —
+  the topology-invariance guard;
+* ``cost_measured_over_predicted`` (and its ``_sharded`` twin, whose
+  prediction bills ``n_redis == 2``) — the live/model cost calibration; a
   >10% regression over the baseline (which carries documented headroom for
   host variance) means the live data path got structurally slower.
 
@@ -40,10 +46,11 @@ SMOKE_WCFG = {
 }
 SMOKE_P = 2
 SMOKE_STEPS = 12
+SMOKE_SHARDS = 2  # the sharded leg of the guard
 COLD_START_S = 2.0  # same runtime-init constant as benchmarks/fig6
 
 
-def run_smoke() -> dict:
+def run_smoke(n_brokers: int = 1) -> dict:
     from functools import partial
 
     from repro import optim
@@ -55,7 +62,7 @@ def run_smoke() -> dict:
     from repro.runtime import FaaSJobConfig, build_workload, run_job
 
     job = FaaSJobConfig(
-        run_dir=tempfile.mkdtemp(prefix="wire_guard_"),
+        run_dir=tempfile.mkdtemp(prefix=f"wire_guard{n_brokers}_"),
         workload="pmf",
         workload_cfg=dict(SMOKE_WCFG),
         n_workers=SMOKE_P,
@@ -64,6 +71,7 @@ def run_smoke() -> dict:
         optimizer="nesterov",
         lr=0.08,
         isp_v=0.7,
+        n_brokers=n_brokers,
         autotune=False,
         deadline_s=240.0,
     )
@@ -80,6 +88,7 @@ def run_smoke() -> dict:
             ),
             sparse_model=True,
             wire_scheme=job.wire_scheme,
+            n_redis=job.n_brokers,  # predicted topology == live topology
             cold_start_s=COLD_START_S,
             invocations_per_worker=1,
         ),
@@ -98,9 +107,12 @@ def run_smoke() -> dict:
     simres = sim.run(batch_fn, wl.cfg["batch_size"], SMOKE_STEPS)
     return {
         "wire_bytes_total": float(live["wire_bytes_total"]),
+        "update_bytes_per_shard": live["broker_update_bytes_per_shard"],
+        "dup_mismatches": live["dup_mismatches"],
         "cost_measured_over_predicted": (
             live["bill"]["total"] / max(simres.total_cost, 1e-12)
         ),
+        "n_redis_billed": live["bill"]["n_redis"],
         "measured_step_s": live["measured_step_s"],
         "phase_s_mean": live["phase_s_mean"],
     }
@@ -112,52 +124,108 @@ def main() -> int:
                     help="rewrite the baseline from this run")
     ap.add_argument("--headroom", type=float, default=2.0,
                     help="host-variance headroom recorded on the cost "
-                    "ratio when updating the baseline (wire bytes are "
-                    "deterministic and get none). The ratio scales with "
+                    "ratios when updating the baseline (wire bytes are "
+                    "deterministic and get none). The ratios scale with "
                     "host speed — re-record with --update on the runner "
                     "class that gates merges")
     args = ap.parse_args()
 
     try:
-        cur = run_smoke()
+        single = run_smoke(n_brokers=1)
+        sharded = run_smoke(n_brokers=SMOKE_SHARDS)
     except Exception as e:  # noqa: BLE001 - CI wants a clean signal
         print(f"wire_guard: smoke run failed: {e}", file=sys.stderr)
         return 2
 
-    print(json.dumps(cur, indent=1))
+    cur = {
+        "wire_bytes_total": single["wire_bytes_total"],
+        "cost_measured_over_predicted": (
+            single["cost_measured_over_predicted"]
+        ),
+        "wire_bytes_total_sharded": sharded["wire_bytes_total"],
+        "cost_measured_over_predicted_sharded": (
+            sharded["cost_measured_over_predicted"]
+        ),
+    }
+    print(json.dumps({"single": single, "sharded": sharded}, indent=1))
+
+    # structural invariants need no baseline: the sharded topology must
+    # ship bit-identical bytes, split exactly across its shards, with a
+    # clean replay ledger
+    ok = True
+    if sharded["wire_bytes_total"] != single["wire_bytes_total"]:
+        print(
+            "wire_guard: REGRESSION: sharded wire_bytes_total "
+            f"{sharded['wire_bytes_total']} != single-broker "
+            f"{single['wire_bytes_total']} (topology changed the bytes)",
+            file=sys.stderr,
+        )
+        ok = False
+    if sum(sharded["update_bytes_per_shard"]) != int(
+        sharded["wire_bytes_total"]
+    ):
+        print(
+            "wire_guard: REGRESSION: per-shard broker-measured bytes "
+            f"{sharded['update_bytes_per_shard']} do not sum to "
+            f"{sharded['wire_bytes_total']}",
+            file=sys.stderr,
+        )
+        ok = False
+    if sharded["dup_mismatches"] or single["dup_mismatches"]:
+        print("wire_guard: REGRESSION: dup_mismatches != 0",
+              file=sys.stderr)
+        ok = False
+
     if args.update or not os.path.exists(BASELINE):
         base = {
             "wire_bytes_total": cur["wire_bytes_total"],
             "cost_measured_over_predicted": (
                 cur["cost_measured_over_predicted"] * args.headroom
             ),
+            "cost_measured_over_predicted_sharded": (
+                cur["cost_measured_over_predicted_sharded"] * args.headroom
+            ),
             "note": (
                 "wire_bytes_total is exact (deterministic seed, no "
-                "auto-tuner); the cost ratio carries the --headroom "
-                "factor over the recording host's run"
+                "auto-tuner; the sharded run must match it bit-for-bit); "
+                "the cost ratios carry the --headroom factor over the "
+                "recording host's run"
             ),
         }
         with open(BASELINE, "w") as f:
             json.dump(base, f, indent=1)
         print(f"wire_guard: baseline written to {BASELINE}")
-        return 0
+        return 0 if ok else 1
 
     with open(BASELINE) as f:
         base = json.load(f)
-    ok = True
-    for key in ("wire_bytes_total", "cost_measured_over_predicted"):
-        limit = base[key] * (1.0 + TOLERANCE)
-        if cur[key] > limit:
+    checks = {
+        "wire_bytes_total": cur["wire_bytes_total"],
+        "cost_measured_over_predicted": (
+            cur["cost_measured_over_predicted"]
+        ),
+        "cost_measured_over_predicted_sharded": (
+            cur["cost_measured_over_predicted_sharded"]
+        ),
+        # the sharded bytes gate against the SAME baseline entry — they
+        # are required to be bit-equal to the single-broker bytes
+        "wire_bytes_total_sharded": cur["wire_bytes_total_sharded"],
+    }
+    for key, val in checks.items():
+        ref = base[key.replace("wire_bytes_total_sharded",
+                               "wire_bytes_total")]
+        limit = ref * (1.0 + TOLERANCE)
+        if val > limit:
             print(
                 f"wire_guard: REGRESSION in {key}: "
-                f"{cur[key]:.6g} > {base[key]:.6g} * {1 + TOLERANCE}\n"
+                f"{val:.6g} > {ref:.6g} * {1 + TOLERANCE}\n"
                 "wire_guard: if this host class legitimately differs from "
                 "the baseline's, re-record with --update",
                 file=sys.stderr,
             )
             ok = False
         else:
-            print(f"wire_guard: {key} ok ({cur[key]:.6g} <= {limit:.6g})")
+            print(f"wire_guard: {key} ok ({val:.6g} <= {limit:.6g})")
     return 0 if ok else 1
 
 

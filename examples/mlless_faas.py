@@ -32,6 +32,9 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--steps", type=int, default=140)
+    ap.add_argument("--n-brokers", type=int, default=1,
+                    help="update-store shards (one broker process each; "
+                    "bills n_redis == n_brokers)")
     ap.add_argument("--run-dir", default=None)
     ap.add_argument("--no-check", action="store_true",
                     help="skip the health assertions (exploratory runs)")
@@ -41,11 +44,13 @@ def main() -> int:
         run_dir=args.run_dir or tempfile.mkdtemp(prefix="mlless_faas_"),
         n_workers=args.workers,
         total_steps=args.steps,
+        n_brokers=args.n_brokers,
     )
     wc = PMF_QUICKSTART_CFG
     print(f"PMF {wc['n_users']}x{wc['n_movies']} rank {wc['rank']}, "
           f"{args.workers} worker processes, {args.steps} steps, "
-          f"ISP v={cfg.isp_v} (run dir {cfg.run_dir})")
+          f"{cfg.n_brokers} broker shard(s), ISP v={cfg.isp_v} "
+          f"(run dir {cfg.run_dir})")
     res = run_job(cfg)
 
     hist = res["history"]

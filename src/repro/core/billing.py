@@ -40,6 +40,8 @@ class FaaSBill:
 
     worker_seconds: float  # sum over workers of their individual lifetimes
     wall_seconds: float  # job wall-clock (supervisor + VMs are billed on this)
+    # one always-on Redis-analogue VM per update-store shard; live runs
+    # pass the real shard count (n_redis == FaaSJobConfig.n_brokers)
     n_redis: int = 1
 
     @property

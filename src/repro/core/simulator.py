@@ -61,6 +61,10 @@ class SimulatorConfig:
     # compute model: 1 vCPU sustained flops for the Cython/MKL inner loops
     worker_flops_rate: float = 4e9
     straggler_sigma: float = 0.12  # lognormal sigma on per-worker compute time
+    # update-store shards (paper: Redis instances). The live runtime's
+    # analogue is FaaSJobConfig.n_brokers — calibration runs must set
+    # n_redis == n_brokers so the modelled exchange strain AND the billed
+    # infra VMs match the topology that actually ran (DESIGN.md §11)
     n_redis: int = 1
     seed: int = 0
     # sparse models update only touched coordinates; serverful exchanges dense

@@ -411,7 +411,11 @@ def train(args) -> dict:
                       f"(global batch {plan.global_batch(st.pool)})")
 
     wall = time.time() - t_job0
-    bill = faas_cost([worker_seconds], wall, n_redis=1)
+    # bill the modelled topology the job declares (paper: one Redis VM per
+    # update-store shard), not a hardcoded single shard
+    bill = faas_cost(
+        [worker_seconds], wall, n_redis=getattr(args, "n_brokers", 1)
+    )
     result = {
         "arch": cfg.name,
         "n_params": n_params,
@@ -478,6 +482,7 @@ def train_faas(args) -> dict:
         isp_v=args.isp_v,
         wire_scheme=args.wire_scheme or "auto",
         wire_quant=args.wire_quant,
+        n_brokers=getattr(args, "n_brokers", 1),
         autotune=args.autotune,
         tuner=AutoTunerConfig(
             sched_interval_s=args.sched_interval,
@@ -540,6 +545,10 @@ def main() -> None:
                     help="JSON overrides for the workload config")
     ap.add_argument("--invocation-steps", type=int, default=1_000_000,
                     help="faas: steps per function invocation")
+    ap.add_argument("--n-brokers", type=int, default=1,
+                    help="update-store shards (runtime.sharding): faas "
+                    "spawns one broker process per shard; both runtimes "
+                    "bill n_redis == n_brokers")
     ap.add_argument("--run-dir", default=None,
                     help="faas: checkpoints + worker logs directory")
     args = ap.parse_args()

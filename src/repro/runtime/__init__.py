@@ -6,9 +6,13 @@ through an in-memory broker over local sockets, supervised by a host-side
 controller that drives the scale-in auto-tuner from live telemetry and
 meters real per-worker lifetimes at the FaaS billing quantum.
 
-    broker      — update store + pub/sub + minibatch keys + byte accounting
+    broker      — update-store shard: pub/sub + WAL + byte accounting
+                  (shard 0 = coordinator: minibatch keys, membership,
+                  telemetry)
+    sharding    — leaf-key -> shard partitioner + sharded tree encoding
     worker      — stateless ISP worker entrypoint (subprocess)
-    supervisor  — spawn/evict/respawn controller, billing, results
+    supervisor  — spawn/evict/respawn controller (workers AND broker
+                  shards), billing with n_redis == n_brokers, results
     protocol    — thin veneer over repro.wire (codec + framing, §10)
     workload    — named deterministic workloads (pmf, lr)
 """

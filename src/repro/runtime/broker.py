@@ -1,35 +1,54 @@
-"""Update broker — the RabbitMQ/Redis stand-in of the FaaS runtime.
+"""Update broker shard — the sharded Redis stand-in of the FaaS runtime.
 
-One process (or one thread of the supervisor) owns all shared state of a
-training job; workers talk to it over *persistent* local TCP connections
-(``repro.wire.framing``) — one connection per worker invocation, one
-handler thread per connection, any number of framed request/response
-round trips (DESIGN.md §10.3).  Responsibilities, mirroring MLLess's
-messaging VM + KV store (paper §5):
+The paper scales its external store by sharding keys across Redis
+instances (§5); here the live update store is partitioned by *leaf key*
+(``runtime.sharding``) over N broker shards, each its own process running
+this module's handler loop.  Workers talk to every shard over *persistent*
+local TCP connections (``repro.wire.framing``) — one connection per shard
+per worker invocation, one handler thread per connection, any number of
+framed request/response round trips (DESIGN.md §10.3, §11).
 
-* **update store / pub-sub**: workers publish their significance-filtered
-  update for step t and pull the peers' updates for t; the pull blocks until
-  the ISP barrier for t is met (every worker active at t has published, and
-  every worker *evicted at* t has flushed).  Updates are retained so a
-  respawned worker can replay any step — the store IS the fault-tolerance
-  log, like the iteration keys MLLess leaves in Redis.
+Responsibilities of every shard:
+
+* **update store / pub-sub** for the leaves it owns: workers publish their
+  significance-filtered slice for step t and pull the peers' slices for t;
+  the pull blocks until the shard's ISP barrier for t is met (every worker
+  active at t has published its slice here, and every worker *evicted at*
+  t has flushed its slice here).  Updates are retained so a respawned
+  worker can replay any step — the store IS the fault-tolerance log, like
+  the iteration keys MLLess leaves in Redis.
+* **byte accounting**: per-message-type request/response byte counters
+  plus ``update_bytes`` (codec-accounted published update bytes) — the
+  measured analogue of ``core.billing.CommModel``, per shard.
+* **write-ahead log**: every state-mutating request is appended (framed,
+  synchronously, BEFORE the response) to an on-disk WAL; a respawned
+  shard replays it and resumes bit-identically — acked means logged, so
+  a SIGKILL loses at most unacknowledged requests, which the workers'
+  idempotent RPC layer retries.
+
+The *coordinator* (shard 0) additionally owns everything that must be
+globally consistent — the paper's messaging-VM role:
+
 * **minibatch keys**: deterministic round-robin assignment
-  ``((step - 1) * P + worker) % n_batches`` (steps are 1-indexed;
-  ``data.store.MinibatchStore``'s partitioning), served per request like
-  the COS key scheme of the paper.
-* **membership**: the supervisor requests evictions; the broker picks the
-  effective step ``e = max_published + 2`` so no worker can have computed a
-  step with a stale pool size (a worker only begins step t after pulling
-  t-1, and every response from here on carries the eviction table).
+  ``((step - 1) * P + worker) % n_batches`` served per request and
+  piggybacked on ready pulls (``key_next``);
+* **membership**: the supervisor requests evictions; the coordinator picks
+  the effective step ``e = max_published + 2`` so no worker can have
+  computed a step with a stale pool size (a worker only begins step t
+  after pulling t-1 from the coordinator, and every coordinator response
+  carries the eviction table).  The supervisor then installs the granted
+  ``(worker, step)`` on the other shards via ``evict_apply`` — a shard
+  with a not-yet-synced table merely blocks its step-e barrier
+  conservatively (it still expects the leaver's publish), never serves it
+  short;
 * **telemetry**: per-(step, worker) loss / duration / sent-fraction /
   conservation-error rows, aggregated per completed step for the
   supervisor's auto-tuner poll.
-* **byte accounting**: per-message-type request/response byte counters —
-  the measured analogue of ``core.billing.CommModel``.
 
-The broker never decodes tensor payloads (workers own the math); it stores
-raw bytes plus a digest so duplicate publishes from a replayed worker can be
-verified bit-identical (``dup_mismatches`` must stay 0 — determinism check).
+No shard ever decodes tensor payloads (workers own the math); it stores
+raw bytes plus a digest so duplicate publishes from a replayed worker can
+be verified bit-identical (``dup_mismatches`` must stay 0 — the
+determinism check, which a broker-shard respawn is also held to).
 """
 
 from __future__ import annotations
@@ -37,19 +56,81 @@ from __future__ import annotations
 import argparse
 import hashlib
 import json
+import os
 import socket
 import socketserver
+import struct
 import threading
 from typing import Optional
 
 from repro.runtime import protocol
 
+# ops that mutate shard state — exactly what the WAL must persist.
+# publish/flush log from inside their handlers (only non-dup records, with
+# the store lock held, BEFORE the update becomes pullable); the rest log
+# generically from handle().
+_MUTATING = ("hello", "report", "bye", "evict_apply")
+
+_WAL_HDR = struct.Struct("<II")  # header_len, payload_len (framing's shape)
+
+
+class WriteAheadLog:
+    """Append-only framed (header JSON, payload) log with torn-tail
+    tolerance: a record is ``uint32 hlen | uint32 plen | header | payload``
+    flushed per append, so a SIGKILL can truncate at most the final
+    record — which was never acked and will be retried by its sender."""
+
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._f = open(path, "ab")
+        self._lock = threading.Lock()
+
+    def append(self, header: dict, payload: bytes) -> None:
+        raw = json.dumps(header, separators=(",", ":")).encode("utf-8")
+        with self._lock:
+            self._f.write(_WAL_HDR.pack(len(raw), len(payload)))
+            self._f.write(raw)
+            if payload:
+                self._f.write(payload)
+            self._f.flush()  # survive process death (not host death)
+
+    def close(self) -> None:
+        with self._lock:
+            self._f.close()
+
+    @staticmethod
+    def iter_records_with_end(path: str):
+        """Yield (header, payload, end_offset) records, stopping at a torn
+        tail; ``end_offset`` is the byte offset just past the record."""
+        with open(path, "rb") as f:
+            off = 0
+            while True:
+                head = f.read(_WAL_HDR.size)
+                if len(head) < _WAL_HDR.size:
+                    return
+                hlen, plen = _WAL_HDR.unpack(head)
+                raw = f.read(hlen)
+                payload = f.read(plen)
+                if len(raw) < hlen or len(payload) < plen:
+                    return  # torn tail: the op was never acked
+                off += _WAL_HDR.size + hlen + plen
+                yield json.loads(raw.decode("utf-8")), payload, off
+
+    @staticmethod
+    def iter_records(path: str):
+        """Yield (header, payload) records, stopping at a torn tail."""
+        for header, payload, _ in WriteAheadLog.iter_records_with_end(path):
+            yield header, payload
+
 
 class BrokerCore:
-    """All job state + request handling, guarded by one lock/condition."""
+    """All shard state + request handling, guarded by one lock/condition."""
 
-    def __init__(self, job: dict):
+    def __init__(self, job: dict, shard_id: int = 0, n_shards: int = 1):
         self.job = dict(job)
+        self.shard_id = int(shard_id)
+        self.n_shards = int(n_shards)
         self.P = int(job["n_workers"])
         self.n_batches = int(job.get("n_batches", 1))
         self.total_steps = int(job["total_steps"])
@@ -59,15 +140,60 @@ class BrokerCore:
         self.updates: dict[int, dict[int, tuple[list, bytes, str]]] = {}
         # step -> worker -> (meta, payload, digest)   (eviction flushes)
         self.flushes: dict[int, dict[int, tuple[list, bytes, str]]] = {}
-        # (step, worker) -> telemetry dict
+        # (step, worker) -> telemetry dict   (coordinator only)
         self.telemetry: dict[tuple[int, int], dict] = {}
         self.evictions: dict[int, int] = {}  # worker -> effective step
         self.statuses: dict[int, str] = {w: "spawned" for w in range(self.P)}
         self.max_published = 0
         self.dup_mismatches = 0
+        self.update_bytes = 0  # codec-accounted published update bytes
         self._poll_cursor = 1  # next telemetry step the supervisor hasn't seen
         self.stats: dict[str, dict[str, int]] = {}
         self.shutting_down = False
+        self.shutdown_event = threading.Event()
+        self._wal: Optional[WriteAheadLog] = None
+        self._replaying = False
+
+    @property
+    def is_coordinator(self) -> bool:
+        return self.shard_id == 0
+
+    # -- write-ahead log ------------------------------------------------------
+
+    def attach_wal(self, path: str, replay: bool = True) -> int:
+        """Replay an existing WAL (respawn path), then append to it.
+        Returns the number of records replayed.
+
+        Per-message socket ``stats`` are NOT reconstructed (the WAL holds
+        requests, not responses) — they restart per process; the codec
+        meter ``update_bytes`` IS rebuilt exactly, and is the number the
+        per-shard accounting invariant is stated in.
+        """
+        replayed = 0
+        if replay and os.path.exists(path):
+            valid_end = 0
+            self._replaying = True
+            try:
+                for header, payload, end in (
+                    WriteAheadLog.iter_records_with_end(path)
+                ):
+                    self.handle(header, payload)
+                    replayed += 1
+                    valid_end = end
+            finally:
+                self._replaying = False
+            if valid_end < os.path.getsize(path):
+                # drop a torn tail BEFORE appending: a later record after
+                # garbage bytes would be unreachable to the next replay,
+                # silently voiding its 'acked => logged' guarantee
+                with open(path, "r+b") as f:
+                    f.truncate(valid_end)
+        self._wal = WriteAheadLog(path)
+        return replayed
+
+    def _log(self, header: dict, payload: bytes = b"") -> None:
+        if self._wal is not None and not self._replaying:
+            self._wal.append(header, payload)
 
     # -- membership -----------------------------------------------------------
 
@@ -101,6 +227,11 @@ class BrokerCore:
         fn = getattr(self, f"_op_{kind}", None)
         if fn is None:
             return {"ok": False, "error": f"unknown message type {kind!r}"}, b""
+        if kind in _MUTATING:
+            # log-then-apply: an acked mutation is always in the WAL, so a
+            # respawned shard replays exactly what the workers believe
+            # happened; an unacked one is retried by the idempotent RPC
+            self._log(header, payload)
         return fn(header, payload)
 
     def _membership(self) -> dict:
@@ -110,7 +241,13 @@ class BrokerCore:
         with self._lock:
             w = int(h["worker"])
             self.statuses[w] = "running"
-            resp = {"ok": True, "job": self.job, **self._membership()}
+            resp = {
+                "ok": True,
+                "job": self.job,
+                "shard_id": self.shard_id,
+                "n_shards": self.n_shards,
+                **self._membership(),
+            }
         return resp, b""
 
     def batch_key(self, step: int, worker: int) -> int:
@@ -133,19 +270,36 @@ class BrokerCore:
             slot = self.updates.setdefault(step, {})
             dup = worker in slot
             if dup:
+                # bit-identical dups (worker replay) are NOT re-logged:
+                # the original record already persists, and re-appending
+                # full payloads would bloat every future WAL replay
                 if slot[worker][2] != digest:
                     self.dup_mismatches += 1
+                    # the determinism tripwire must survive a shard
+                    # respawn — persist a payload-free marker
+                    self._log({"t": "dup_mismatch", "worker": worker,
+                               "step": step, "kind": "publish"})
             else:
+                # log while holding the lock, before the update becomes
+                # pullable: no peer can apply an unlogged update
+                self._log(h, payload)
                 slot[worker] = (meta, payload, digest)
                 self.max_published = max(self.max_published, step)
-            self.telemetry.setdefault((step, worker), {}).update(
-                {
-                    "loss": h.get("loss"),
-                    "sent_fraction": h.get("sent_fraction"),
-                    "inv_err": h.get("inv_err"),
-                    "wire_bytes": protocol.wire_bytes(meta),
-                }
-            )
+                self.update_bytes += protocol.wire_bytes(meta)
+            if self.is_coordinator:
+                # telemetry is a coordinator concern; the worker reports
+                # its cross-shard wire_bytes total on this one publish
+                self.telemetry.setdefault((step, worker), {}).update(
+                    {
+                        "loss": h.get("loss"),
+                        "sent_fraction": h.get("sent_fraction"),
+                        "inv_err": h.get("inv_err"),
+                        "wire_bytes": (
+                            h["wire_bytes"] if "wire_bytes" in h
+                            else protocol.wire_bytes(meta)
+                        ),
+                    }
+                )
             self._cond.notify_all()
             return {"ok": True, "dup": dup, **self._membership()}, b""
 
@@ -162,7 +316,10 @@ class BrokerCore:
                 # already have applied the first copy
                 if slot[worker][2] != digest:
                     self.dup_mismatches += 1
+                    self._log({"t": "dup_mismatch", "worker": worker,
+                               "step": step, "kind": "flush"})
             else:
+                self._log(h, payload)  # as for publish: log-before-visible
                 slot[worker] = (h["meta"], payload, digest)
             self._cond.notify_all()
         return {"ok": True, "dup": dup}, b""
@@ -196,12 +353,13 @@ class BrokerCore:
                 "ok": True,
                 "ready": True,
                 "parts": descs,
-                # coalesced pull: piggyback the NEXT step's minibatch key so
-                # the steady-state worker loop is exactly two round trips per
-                # ISP barrier (publish + pull) instead of four one-shot RPCs
-                "key_next": self.batch_key(step + 1, worker),
                 **self._membership(),
             }
+            if self.is_coordinator:
+                # coalesced pull: piggyback the NEXT step's minibatch key so
+                # the steady-state worker loop is exactly 1 + n_shards round
+                # trips per ISP barrier (one publish + one pull per shard)
+                resp["key_next"] = self.batch_key(step + 1, worker)
         return resp, payload
 
     def _op_report(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
@@ -221,6 +379,10 @@ class BrokerCore:
         return {"ok": True}, b""
 
     def _op_evict(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
+        if not self.is_coordinator:
+            # membership decisions are minted in exactly one place; other
+            # shards receive the result via evict_apply
+            return {"ok": False, "error": "evict: not the coordinator"}, b""
         worker = int(h["worker"])
         with self._cond:
             if worker in self.evictions:
@@ -243,8 +405,35 @@ class BrokerCore:
                 return {"ok": True, "granted": False,
                         "reason": "past-end"}, b""
             self.evictions[worker] = step
+            # the WAL must replay the *result*, not re-derive it from a
+            # different max_published — log the grant as an evict_apply
+            self._log({"t": "evict_apply", "worker": worker, "step": step})
             self._cond.notify_all()
         return {"ok": True, "granted": True, "evict_step": step}, b""
+
+    def _op_dup_mismatch(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
+        """WAL-replay path only: restore a previously-detected replay
+        divergence (the marker is logged at detection time; this op is
+        not in _MUTATING so replay does not re-log it)."""
+        with self._lock:
+            self.dup_mismatches += 1
+        return {"ok": True}, b""
+
+    def _op_evict_apply(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
+        """Install a coordinator-granted eviction (worker, effective step)
+        on this shard — the supervisor's cross-shard membership sync."""
+        worker, step = int(h["worker"]), int(h["step"])
+        with self._cond:
+            prev = self.evictions.get(worker)
+            if prev is not None and prev != step:
+                return {
+                    "ok": False,
+                    "error": f"evict_apply conflict: worker {worker} already "
+                    f"evicted at {prev}, got {step}",
+                }, b""
+            self.evictions[worker] = step
+            self._cond.notify_all()
+        return {"ok": True, "evict_step": step}, b""
 
     def _op_poll(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
         # with a client-supplied cursor ('since') the poll is IDEMPOTENT —
@@ -294,7 +483,8 @@ class BrokerCore:
         return resp, b""
 
     def _op_dump(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
-        """Test/debug hook: every stored update as one multi-part payload."""
+        """Test/debug hook: every stored update slice as one multi-part
+        payload (this shard's leaves only; the supervisor merges shards)."""
         with self._lock:
             parts = []
             for step in sorted(self.updates):
@@ -308,13 +498,29 @@ class BrokerCore:
 
     def _op_stats(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
         with self._lock:
-            return {"ok": True, "stats": self.stats}, b""
+            return {
+                "ok": True,
+                "shard_id": self.shard_id,
+                "stats": self.stats,
+                "update_bytes": self.update_bytes,
+                "dup_mismatches": self.dup_mismatches,
+            }, b""
 
     def _op_shutdown(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
         with self._cond:
             self.shutting_down = True
             self._cond.notify_all()
-            return {"ok": True, "stats": self.stats}, b""
+            resp = {
+                "ok": True,
+                "shard_id": self.shard_id,
+                "stats": self.stats,
+                "update_bytes": self.update_bytes,
+                "dup_mismatches": self.dup_mismatches,
+            }
+        # shutdown_event is set by the HANDLER after this response is on
+        # the wire — setting it here would let the standalone process exit
+        # before the requester ever reads its stats
+        return resp, b""
 
     # -- accounting -----------------------------------------------------------
 
@@ -350,6 +556,10 @@ class _Handler(socketserver.BaseRequestHandler):
                     header.get("t", "?"), 8 + hdr_len + len(payload), out
                 )
                 if core.shutting_down:
+                    # signal process exit only AFTER the (shutdown)
+                    # response reached the wire — the requester must get
+                    # its final stats back
+                    core.shutdown_event.set()
                     break
         except (ConnectionError, ValueError, OSError):
             pass  # client vanished mid-stream; nothing to clean up
@@ -361,10 +571,26 @@ class _Server(socketserver.ThreadingTCPServer):
 
 
 class Broker:
-    """Socket-server shell around ``BrokerCore``; in-thread or standalone."""
+    """Socket-server shell around ``BrokerCore``; in-thread or standalone.
 
-    def __init__(self, job: dict, host: str = "127.0.0.1", port: int = 0):
-        self.core = BrokerCore(job)
+    With ``wal_path`` the core replays any existing log BEFORE the port is
+    bound (a respawned shard never serves from partial state) and appends
+    every subsequent mutation to it.
+    """
+
+    def __init__(
+        self,
+        job: dict,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        shard_id: int = 0,
+        n_shards: int = 1,
+        wal_path: Optional[str] = None,
+    ):
+        self.core = BrokerCore(job, shard_id=shard_id, n_shards=n_shards)
+        self.replayed = 0
+        if wal_path:
+            self.replayed = self.core.attach_wal(wal_path)
         self._server = _Server((host, port), _Handler)
         self._server.core = self.core  # type: ignore[attr-defined]
         self._thread: Optional[threading.Thread] = None
@@ -382,30 +608,61 @@ class Broker:
         self._thread.start()
         return self.addr
 
-    def stop(self) -> None:
+    def stop(self, timeout: float = 5.0) -> bool:
+        """Stop serving; returns False if the server thread failed to join
+        within ``timeout`` (a wedged handler the caller should surface)."""
         with self.core._cond:
             self.core.shutting_down = True
             self.core._cond.notify_all()
+        self.core.shutdown_event.set()
         self._server.shutdown()
         self._server.server_close()
+        joined = True
         if self._thread is not None:
-            self._thread.join(timeout=5.0)
+            self._thread.join(timeout=timeout)
+            joined = not self._thread.is_alive()
+        if self.core._wal is not None:
+            self.core._wal.close()
+        return joined
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--config", required=True, help="job config JSON file")
     ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--shard-id", type=int, default=0)
+    ap.add_argument("--n-shards", type=int, default=1)
+    ap.add_argument("--wal", default=None,
+                    help="write-ahead log path (replayed on respawn)")
+    ap.add_argument("--port-file", default=None,
+                    help="write HOST:PORT here once listening (atomic) — "
+                    "the supervisor's readiness signal")
     args = ap.parse_args()
     with open(args.config) as f:
         job = json.load(f)
-    broker = Broker(job, port=args.port)
+    broker = Broker(
+        job,
+        port=args.port,
+        shard_id=args.shard_id,
+        n_shards=args.n_shards,
+        wal_path=args.wal,
+    )
     host, port = broker.start()
-    print(f"broker listening on {host}:{port}", flush=True)
+    if args.port_file:
+        tmp = args.port_file + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(f"{host}:{port}")
+        os.replace(tmp, args.port_file)
+    print(
+        f"broker shard {args.shard_id}/{args.n_shards} listening on "
+        f"{host}:{port} (replayed {broker.replayed} WAL records)",
+        flush=True,
+    )
     try:
-        threading.Event().wait()
+        broker.core.shutdown_event.wait()
     except KeyboardInterrupt:
-        broker.stop()
+        pass
+    broker.stop()
 
 
 if __name__ == "__main__":

@@ -35,6 +35,7 @@ from repro.wire.framing import (  # noqa: F401
     MAX_MSG_BYTES,
     Connection,
     pack_parts,
+    pipelined,
     recv_msg,
     request,
     send_msg,

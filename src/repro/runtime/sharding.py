@@ -1,0 +1,181 @@
+"""Leaf-key -> broker-shard partitioner + sharded tree encoding (DESIGN.md §11).
+
+MLLess scales its external store by sharding keys across Redis instances
+(paper §5; ``CommModel.n_redis`` already charges for it).  This module is
+the live-runtime analogue: it owns the ONE deterministic assignment of
+pytree leaf keys to broker shards that every party — each worker process,
+the supervisor, and the tests — must compute identically from nothing but
+the workload's parameter template and the shard count.
+
+Properties the assignment guarantees (property-tested in
+``tests/test_runtime_sharded.py``):
+
+* **total**: every key is owned by exactly one shard in ``[0, n_shards)``;
+* **deterministic / pool-independent**: a pure function of the
+  (key, size) multiset and ``n_shards`` — independent of key order,
+  worker-pool size, or process identity (no Python ``hash``, which is
+  salted per process);
+* **balanced**: greedy least-loaded placement over keys sorted by
+  (size desc, key asc), so ``max_shard_bytes <= total/n + max_leaf_bytes``
+  (the classic list-scheduling bound — tight enough that PMF's two
+  embedding matrices land on different shards at ``n_shards == 2``).
+
+``encode_tree_sharded`` is the worker-side producer: one codec pass per
+leaf (``repro.wire``), grouped into per-shard (meta, buffer-views)
+messages, with the optional fp32 quantization-error residual assembled
+across all shards.  ``predict_shard_nbytes`` is the simulator/test-side
+accountant: per-shard wire bytes through the same ``leaf_nbytes`` formula
+the encoder asserts against, so broker-measured == simulator-accounted
+bytes *per shard* by construction (§10's invariant, sharded).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import numpy as np
+
+from repro.wire import codec as wire_codec
+
+PyTree = Any
+
+
+def assign_shards(
+    keys: Sequence[str],
+    sizes: Optional[Sequence[int]] = None,
+    n_shards: int = 1,
+) -> dict[str, int]:
+    """Deterministic balanced assignment of leaf keys to shards.
+
+    Greedy least-loaded over keys sorted by (size desc, key asc); ties on
+    load go to the lowest shard id.  With ``sizes=None`` every key weighs
+    1 (pure cardinality balance).
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    keys = list(keys)
+    if len(set(keys)) != len(keys):
+        raise ValueError("leaf keys must be unique")
+    weights = [1] * len(keys) if sizes is None else [int(s) for s in sizes]
+    if len(weights) != len(keys):
+        raise ValueError("sizes must align with keys")
+    order = sorted(range(len(keys)), key=lambda i: (-weights[i], keys[i]))
+    load = [0] * n_shards
+    out: dict[str, int] = {}
+    for i in order:
+        s = min(range(n_shards), key=lambda j: (load[j], j))
+        out[keys[i]] = s
+        load[s] += weights[i]
+    return out
+
+
+def tree_assignment(tree: PyTree, n_shards: int) -> dict[str, int]:
+    """The canonical assignment for a parameter template: keys are the
+    checkpoint-store path keys (``wire.codec.tree_keys``), weights the
+    dense leaf bytes — the quantity the balance bound is stated in."""
+    import jax
+
+    keys = wire_codec.tree_keys(tree)
+    sizes = [
+        int(np.asarray(leaf).size) * np.dtype(np.asarray(leaf).dtype).itemsize
+        for leaf in jax.tree_util.tree_leaves(tree)
+    ]
+    return assign_shards(keys, sizes, n_shards)
+
+
+def encode_tree_sharded(
+    tree: PyTree,
+    assignment: dict[str, int],
+    n_shards: int,
+    scheme: str = wire_codec.AUTO,
+    quant: str = "none",
+    with_residual: bool = False,
+) -> tuple[list[tuple[list[dict], list]], Optional[PyTree]]:
+    """Encode a pytree into one (meta, buffer-views) message per shard.
+
+    Leaves keep the global ``tree_keys`` order *within* each shard, so a
+    peer decoding shard by shard reassembles every leaf in a fixed order
+    regardless of ``n_shards`` — the bit-exactness across shard counts
+    rests on this.  Returns ``(per_shard, residual_tree)`` where
+    ``per_shard[s]`` feeds ``publish``/``flush`` to shard ``s`` directly.
+    """
+    import jax
+
+    keys = wire_codec.tree_keys(tree)
+    leaves = jax.tree_util.tree_leaves(tree)
+    per_shard: list[tuple[list[dict], list]] = [
+        ([], []) for _ in range(n_shards)
+    ]
+    residuals: list = []
+    for key, leaf in zip(keys, leaves):
+        m, parts, r = wire_codec.encode_leaf(
+            leaf, scheme=scheme, quant=quant, key=key,
+            with_residual=with_residual,
+        )
+        meta_s, parts_s = per_shard[assignment[key]]
+        meta_s.append(m)
+        parts_s.extend(parts)
+        residuals.append(r)
+    res_tree = None
+    if with_residual:
+        treedef = jax.tree_util.tree_structure(tree)
+        res_tree = jax.tree_util.tree_unflatten(treedef, residuals)
+    return per_shard, res_tree
+
+
+def predict_shard_nbytes(
+    tree: PyTree,
+    assignment: dict[str, int],
+    n_shards: int,
+    scheme: str = wire_codec.AUTO,
+    quant: str = "none",
+) -> list[int]:
+    """Simulator-side per-shard accounting: wire bytes each shard WOULD
+    measure for this tree — the per-leaf accountant is the codec's own
+    ``predict_leaf_nbytes`` (same ``leaf_nbytes`` formula + ``auto``
+    resolution the encoder asserts against), just bucketed by the
+    assignment, so ``== broker-measured`` per shard by construction."""
+    import jax
+
+    keys = wire_codec.tree_keys(tree)
+    out = [0] * n_shards
+    for key, leaf in zip(keys, jax.tree_util.tree_leaves(tree)):
+        out[assignment[key]] += wire_codec.predict_leaf_nbytes(
+            leaf, scheme, quant
+        )
+    return out
+
+
+def iter_part_leaves(descs: list[dict], payload):
+    """Walk one shard's multi-part pull/dump payload: yields
+    ``(desc, leaf_meta, decoded_leaf)`` for every leaf of every part.
+
+    The ONE decode twin of ``encode_tree_sharded``'s slicing — the
+    worker's peer-sum/flush reassembly and the supervisor's dump merge
+    both consume this, so the offset bookkeeping and key-order
+    assumptions the bit-exactness claim rests on live in one place.
+    """
+    from repro.wire.framing import unpack_parts
+
+    for desc, part in unpack_parts(descs, payload):
+        view = memoryview(part)
+        off = 0
+        for m in desc["meta"]:
+            nb = int(m["nbytes"])
+            yield desc, m, wire_codec.decode_leaf(m, view[off:off + nb])
+            off += nb
+        if off != len(view):
+            raise ValueError(
+                f"part for worker {desc.get('worker')}: {len(view) - off} "
+                "trailing bytes after its leaf metas"
+            )
+
+
+def shard_bytes_bound(
+    sizes: Sequence[int], n_shards: int
+) -> float:
+    """The list-scheduling balance bound the property tests assert:
+    ``max shard load <= total/n + max item`` for least-loaded placement."""
+    total = float(sum(sizes))
+    biggest = float(max(sizes, default=0))
+    return total / max(n_shards, 1) + biggest

@@ -2,21 +2,28 @@ r"""Host-side supervisor of the FaaS runtime — the MLLess scheduler (§4.2, §
 
 Owns one training job end to end:
 
-* starts the update broker (``runtime.broker``) and spawns ``n_workers``
-  real OS worker processes (``runtime.worker``), each invocation-bounded;
-* polls live (loss, step-duration) telemetry off the broker and feeds the
-  *unmodified* ``core.autotuner.ScaleInAutoTuner`` — scale-in decisions are
-  made from measured wall-clock, not modelled time;
-* on a decision, evicts the highest-id worker: the broker picks the
-  effective step, the worker flushes its replica through the
+* spawns ``n_brokers`` update-broker shard processes (``runtime.broker``;
+  the sharded Redis role, shard 0 doubling as the coordinator/messaging
+  VM) and ``n_workers`` real OS worker processes (``runtime.worker``),
+  each invocation-bounded;
+* polls live (loss, step-duration) telemetry off the coordinator and feeds
+  the *unmodified* ``core.autotuner.ScaleInAutoTuner`` — scale-in decisions
+  are made from measured wall-clock, not modelled time;
+* on a decision, evicts the highest-id worker: the coordinator picks the
+  effective step (then the supervisor installs it on the other shards via
+  ``evict_apply``), the worker flushes its replica through the
   mean-preserving reintegration path (``dist.elastic.reintegrate_into``)
   and exits, and the process's real lifetime stops being billed;
 * respawns workers at invocation boundaries and after crashes — a crashed
   worker restores the newest ``checkpoint.store`` snapshot and replays
-  forward deterministically (the broker's update log serves the history);
+  forward deterministically (the brokers' update log serves the history);
+* respawns a crashed *broker shard* on its original port — the shard
+  replays its write-ahead log before binding, so workers' idempotent RPC
+  retries land on bit-identical state (``dup_mismatches`` stays 0);
 * meters every invocation's measured lifetime through
-  ``core.billing.faas_cost`` at the 100 ms quantum, so a live run emits a
-  real ``FaaSBill``.
+  ``core.billing.faas_cost`` at the 100 ms quantum with
+  ``n_redis == n_brokers``, so a live run emits a real ``FaaSBill`` whose
+  infra cost matches the topology it actually ran.
 
 State machine per worker slot::
 
@@ -42,7 +49,6 @@ from typing import Any, Optional
 from repro.core.autotuner import AutoTunerConfig, ScaleInAutoTuner
 from repro.core.billing import FaaSBill, faas_cost
 from repro.runtime import protocol
-from repro.runtime.broker import Broker
 from repro.runtime import workload as workload_lib
 
 PyTree = Any
@@ -67,16 +73,21 @@ class FaaSJobConfig:
     # optional 'fp16'|'bf16' value quantization with error-feedback residual
     wire_scheme: str = "auto"
     wire_quant: str = "none"
+    # update-store shards (paper: Redis instances) — the leaf-key partition
+    # of runtime.sharding; bills as n_redis == n_brokers
+    n_brokers: int = 1
     autotune: bool = False
     tuner: Optional[AutoTunerConfig] = None
     # deterministic test hooks
     scripted_evict_steps: tuple[int, ...] = ()
     kill_worker_at_step: Optional[tuple[int, int]] = None  # (worker, step)
+    kill_broker_at_step: Optional[tuple[int, int]] = None  # (shard, step)
     retain_updates: bool = False
     # housekeeping
     poll_interval_s: float = 0.05
     deadline_s: float = 600.0
     pull_deadline_s: float = 120.0
+    broker_spawn_timeout_s: float = 30.0
     force_cpu: bool = True
     seed: int = 0
 
@@ -94,6 +105,7 @@ class FaaSJobConfig:
             "isp_decay": self.isp_decay,
             "wire_scheme": self.wire_scheme,
             "wire_quant": self.wire_quant,
+            "n_brokers": self.n_brokers,
             "n_batches": n_batches,
             "run_dir": self.run_dir,
             "pull_deadline_s": self.pull_deadline_s,
@@ -116,23 +128,41 @@ class _Slot:
         return self.proc is not None and self.proc.poll() is None
 
 
+@dataclasses.dataclass
+class _BrokerShard:
+    """One update-store shard (survives respawns at a pinned port)."""
+
+    shard: int
+    proc: Optional[subprocess.Popen] = None
+    addr: Optional[tuple[str, int]] = None
+    spawns: int = 0
+
+    @property
+    def alive(self) -> bool:
+        return self.proc is not None and self.proc.poll() is None
+
+
 class Supervisor:
     def __init__(self, cfg: FaaSJobConfig):
         self.cfg = cfg
         self.wl = workload_lib.build(cfg.workload, cfg.workload_cfg)
-        self.broker: Optional[Broker] = None
-        self.addr: Optional[tuple[str, int]] = None
-        self._conn: Optional[protocol.Connection] = None
+        self.shards = [_BrokerShard(shard=s) for s in range(cfg.n_brokers)]
+        self._conns: list[Optional[protocol.Connection]] = (
+            [None] * cfg.n_brokers
+        )
         self.slots = [_Slot(worker=w) for w in range(cfg.n_workers)]
         self.lifetimes: list[float] = []  # one entry per finished invocation
         self.history: list[dict] = []
         self.scale_events: list[dict] = []
         self.respawns: list[dict] = []
+        self.broker_respawns: list[dict] = []
         self.evictions: dict[int, int] = {}
         self._frontier = 0
         self._poll_since = 1  # next telemetry step this supervisor hasn't seen
         self._scripted_fired = 0
         self._killed_once = False
+        self._broker_killed_once = False
+        self._stopping = False  # end-of-job: shard exits are intentional
         self.tuner: Optional[ScaleInAutoTuner] = None
         if cfg.autotune:
             self.tuner = ScaleInAutoTuner(
@@ -141,7 +171,7 @@ class Supervisor:
 
     # -- process management ---------------------------------------------------
 
-    def _worker_env(self) -> dict:
+    def _base_env(self) -> dict:
         import repro
 
         # repro may be a namespace package (no __init__.py): use __path__
@@ -153,6 +183,10 @@ class Supervisor:
         src = os.path.dirname(os.path.abspath(pkg_dir))
         env = dict(os.environ)
         env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        return env
+
+    def _worker_env(self) -> dict:
+        env = self._base_env()
         if self.cfg.force_cpu:
             env["JAX_PLATFORMS"] = "cpu"
         # each worker is the paper's 1 vCPU function: cap per-process math
@@ -165,8 +199,107 @@ class Supervisor:
         env.setdefault("OPENBLAS_NUM_THREADS", "1")
         return env
 
+    # -- broker shard lifecycle -----------------------------------------------
+
+    def _broker_dir(self) -> str:
+        return os.path.join(self.cfg.run_dir, "broker")
+
+    def _spawn_broker(self, bs: _BrokerShard) -> None:
+        """Spawn (or respawn) one shard process and wait until it listens.
+
+        First spawn binds an ephemeral port; respawns pin the original port
+        so the workers' persistent connections reconnect unchanged.  The
+        port file doubles as the readiness signal — the shard writes it
+        only after any WAL replay completed and the socket is bound.
+        """
+        bdir = self._broker_dir()
+        os.makedirs(bdir, exist_ok=True)
+        logdir = os.path.join(self.cfg.run_dir, "logs")
+        os.makedirs(logdir, exist_ok=True)
+        port_file = os.path.join(bdir, f"shard{bs.shard:02d}.port")
+        if os.path.exists(port_file):
+            os.unlink(port_file)
+        wal_path = os.path.join(bdir, f"shard{bs.shard:02d}.wal")
+        if bs.spawns == 0 and os.path.exists(wal_path):
+            # a reused run_dir must not replay the PREVIOUS job's log into
+            # a fresh one; only respawns within this job replay the WAL
+            os.unlink(wal_path)
+        log = open(
+            os.path.join(
+                logdir, f"broker{bs.shard:02d}.spawn{bs.spawns:02d}.log"
+            ),
+            "wb",
+        )
+        bs.proc = subprocess.Popen(
+            [
+                sys.executable,
+                "-m",
+                "repro.runtime.broker",
+                "--config", os.path.join(bdir, "job.json"),
+                "--shard-id", str(bs.shard),
+                "--n-shards", str(self.cfg.n_brokers),
+                "--port", str(bs.addr[1] if bs.addr else 0),
+                "--wal", wal_path,
+                "--port-file", port_file,
+            ],
+            stdout=log,
+            stderr=subprocess.STDOUT,
+            env=self._base_env(),
+        )
+        log.close()
+        bs.spawns += 1
+        deadline = time.monotonic() + self.cfg.broker_spawn_timeout_s
+        while not os.path.exists(port_file):
+            if bs.proc.poll() is not None:
+                raise RuntimeError(
+                    f"broker shard {bs.shard} exited during spawn "
+                    f"(code {bs.proc.returncode}); logs in {logdir}"
+                )
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    f"broker shard {bs.shard} did not listen within "
+                    f"{self.cfg.broker_spawn_timeout_s}s"
+                )
+            time.sleep(0.01)
+        with open(port_file) as f:
+            host, port = f.read().strip().rsplit(":", 1)
+        bs.addr = (host, int(port))
+
+    def _start_brokers(self) -> None:
+        bdir = self._broker_dir()
+        os.makedirs(bdir, exist_ok=True)
+        with open(os.path.join(bdir, "job.json"), "w") as f:
+            json.dump(self.cfg.job_dict(self.wl.n_batches), f, indent=1)
+        for bs in self.shards:
+            self._spawn_broker(bs)
+
+    def _reap_brokers(self) -> None:
+        """Respawn any shard that died without being asked to — the WAL
+        replay restores its store; workers ride the gap on RPC retries."""
+        if self._stopping:
+            # shutdown phase: shards exit on purpose after acking their
+            # shutdown RPC — respawning one here (e.g. from a _rpc retry
+            # whose response was lost) would hand back a fresh process
+            # with empty socket stats and a phantom respawn entry
+            return
+        for bs in self.shards:
+            if bs.proc is not None and bs.proc.poll() is not None:
+                self.broker_respawns.append(
+                    {
+                        "shard": bs.shard,
+                        "exit_code": bs.proc.returncode,
+                        "at_frontier": self._frontier,
+                    }
+                )
+                # drop the stale client connection before the port rebinds
+                if self._conns[bs.shard] is not None:
+                    self._conns[bs.shard].close()
+                    self._conns[bs.shard] = None
+                self._spawn_broker(bs)
+
+    # -- worker lifecycle -----------------------------------------------------
+
     def _spawn(self, slot: _Slot) -> None:
-        assert self.addr is not None
         logdir = os.path.join(self.cfg.run_dir, "logs")
         os.makedirs(logdir, exist_ok=True)
         log = open(
@@ -175,13 +308,15 @@ class Supervisor:
             ),
             "wb",
         )
+        brokers = ",".join(f"{h}:{p}" for h, p in
+                           (bs.addr for bs in self.shards))
         slot.proc = subprocess.Popen(
             [
                 sys.executable,
                 "-m",
                 "repro.runtime.worker",
-                "--broker",
-                f"{self.addr[0]}:{self.addr[1]}",
+                "--brokers",
+                brokers,
                 "--worker-id",
                 str(slot.worker),
             ],
@@ -228,11 +363,28 @@ class Supervisor:
 
     # -- broker RPC -----------------------------------------------------------
 
-    def _rpc(self, header: dict, payload: bytes = b"") -> tuple[dict, bytes]:
-        assert self.addr is not None
-        if self._conn is None:
-            self._conn = protocol.Connection(self.addr, timeout=30.0)
-        return self._conn.request(header, payload)
+    def _rpc(
+        self, header: dict, payload: bytes = b"", shard: int = 0,
+        tries: int = 8,
+    ) -> tuple[dict, bytes]:
+        """Retrying RPC to one shard — must survive a shard respawn window
+        (the connection reconnects to the pinned port once it rebinds)."""
+        last: Optional[Exception] = None
+        for i in range(tries):
+            if self._conns[shard] is None:
+                self._conns[shard] = protocol.Connection(
+                    self.shards[shard].addr, timeout=30.0
+                )
+            try:
+                return self._conns[shard].request(header, payload)
+            except (ConnectionError, OSError, TimeoutError) as e:
+                last = e
+                self._conns[shard].close()
+                self._conns[shard] = None
+                self._reap_brokers()  # a dead shard blocks every retry
+                time.sleep(0.1 * (i + 1))
+        assert last is not None
+        raise last
 
     def _poll(self) -> dict:
         # supervisor-owned cursor keeps the poll idempotent: if the
@@ -261,6 +413,16 @@ class Supervisor:
         resp, _ = self._rpc({"t": "evict", "worker": victim})
         if not resp.get("granted"):
             return False  # e.g. past-end: the job ends before it could land
+        # install the coordinator-granted (worker, step) on every other
+        # shard: until the sync lands a stale shard only *blocks* its
+        # step-e barrier (it still expects the leaver's publish), so the
+        # window is safe — see DESIGN.md §11 failure matrix
+        for s in range(1, self.cfg.n_brokers):
+            self._rpc(
+                {"t": "evict_apply", "worker": victim,
+                 "step": resp["evict_step"]},
+                shard=s,
+            )
         # record immediately — a second decision in this same poll iteration
         # must not re-target the worker we just evicted
         self.evictions[victim] = resp["evict_step"]
@@ -280,20 +442,21 @@ class Supervisor:
     def run(self) -> dict:
         cfg = self.cfg
         os.makedirs(cfg.run_dir, exist_ok=True)
-        self.broker = Broker(self.cfg.job_dict(self.wl.n_batches))
-        self.addr = self.broker.start()
         t_job0 = time.monotonic()
         dump = None
         try:
+            self._start_brokers()
             for slot in self.slots:
                 self._spawn(slot)
             deadline = t_job0 + cfg.deadline_s
             while True:
                 time.sleep(cfg.poll_interval_s)
+                self._reap_brokers()
                 resp = self._poll()
                 statuses = resp["statuses"]
 
-                # fault injection hook (tests): real SIGKILL mid-epoch
+                # fault injection hooks (tests): real SIGKILL mid-epoch,
+                # on a worker or on a broker shard
                 if (
                     cfg.kill_worker_at_step is not None
                     and not self._killed_once
@@ -303,6 +466,15 @@ class Supervisor:
                     if self._frontier >= at and slot.alive:
                         slot.proc.send_signal(signal.SIGKILL)
                         self._killed_once = True
+                if (
+                    cfg.kill_broker_at_step is not None
+                    and not self._broker_killed_once
+                ):
+                    s, at = cfg.kill_broker_at_step
+                    bs = self.shards[s]
+                    if self._frontier >= at and bs.alive:
+                        bs.proc.send_signal(signal.SIGKILL)
+                        self._broker_killed_once = True
 
                 for slot in self.slots:
                     if slot.terminal is None and slot.proc is not None \
@@ -340,35 +512,60 @@ class Supervisor:
 
             if cfg.retain_updates:
                 dump = self._dump_updates()
-            resp, _ = self._rpc({"t": "shutdown"})
-            stats = resp.get("stats", {})
-            dup_mismatches = self.broker.core.dup_mismatches
+            self._stopping = True
+            shard_stats = []
+            for s in range(cfg.n_brokers):
+                resp, _ = self._rpc({"t": "shutdown"}, shard=s)
+                shard_stats.append(resp)
         finally:
             for slot in self.slots:
                 if slot.alive:
                     slot.proc.kill()
-            if self._conn is not None:
-                self._conn.close()
-                self._conn = None
-            if self.broker is not None:
-                self.broker.stop()
+            for conn in self._conns:
+                if conn is not None:
+                    conn.close()
+            self._conns = [None] * cfg.n_brokers
+            for bs in self.shards:
+                if bs.proc is not None:
+                    bs.proc.terminate()
+                    try:
+                        bs.proc.wait(timeout=5.0)
+                    except subprocess.TimeoutExpired:
+                        bs.proc.kill()
 
         wall = time.monotonic() - t_job0
-        bill = faas_cost(self.lifetimes, wall, n_redis=1)
-        return self._result(wall, bill, stats, dump, dup_mismatches)
+        # the topology bills what it runs: one Redis-analogue VM per shard
+        bill = faas_cost(self.lifetimes, wall, n_redis=cfg.n_brokers)
+        return self._result(wall, bill, shard_stats, dump)
 
     # -- results --------------------------------------------------------------
 
     def _dump_updates(self) -> list[dict]:
-        resp, blob = self._rpc({"t": "dump"})
+        """Merge every shard's stored slices back into full update trees."""
+        import jax
+
+        leaf_keys = protocol.tree_keys(self.wl.params0)
+        treedef = jax.tree_util.tree_structure(self.wl.params0)
+        from repro.runtime import sharding
+
+        acc: dict[tuple[int, int], dict[str, Any]] = {}
+        for s in range(self.cfg.n_brokers):
+            resp, blob = self._rpc({"t": "dump"}, shard=s)
+            for desc, m, leaf in sharding.iter_part_leaves(
+                resp["parts"], blob
+            ):
+                acc.setdefault(
+                    (int(desc["worker"]), int(desc["step"])), {}
+                )[m["k"]] = leaf
         out = []
-        for desc, part in protocol.unpack_parts(resp["parts"], blob):
+        for (worker, step) in sorted(acc):
+            leaves = acc[(worker, step)]
             out.append(
                 {
-                    "worker": desc["worker"],
-                    "step": desc["step"],
-                    "update": protocol.decode_tree(
-                        desc["meta"], part, self.wl.params0
+                    "worker": worker,
+                    "step": step,
+                    "update": jax.tree_util.tree_unflatten(
+                        treedef, [leaves[k] for k in leaf_keys]
                     ),
                 }
             )
@@ -399,7 +596,7 @@ class Supervisor:
         tree = ckpt.restore(d, step, like)
         return self.wl.eval_fn(tree["params"]), step
 
-    def _result(self, wall, bill: FaaSBill, stats, dump, dup_mismatches):
+    def _result(self, wall, bill: FaaSBill, shard_stats, dump):
         final_eval, final_ckpt_step = self._final_eval()
         hist = self.history
         durs = [r["dur_s"] for r in hist if r.get("dur_s")]
@@ -413,9 +610,23 @@ class Supervisor:
             if phases
             else {}
         )
+        # aggregate per-message byte accounting across shards (the merged
+        # view existing callers read), keep the per-shard split alongside
+        stats: dict[str, dict[str, int]] = {}
+        for resp in shard_stats:
+            for kind, row in (resp.get("stats") or {}).items():
+                agg = stats.setdefault(
+                    kind, {"count": 0, "bytes_in": 0, "bytes_out": 0}
+                )
+                for k in agg:
+                    agg[k] += row.get(k, 0)
+        dup_mismatches = sum(
+            int(r.get("dup_mismatches", 0)) for r in shard_stats
+        )
         result = {
             "workload": self.wl.name,
             "n_workers": self.cfg.n_workers,
+            "n_brokers": self.cfg.n_brokers,
             "steps": self._frontier,
             "final_pool": sum(1 for s in self.slots if s.terminal == "done"),
             "final_loss": hist[-1]["loss"] if hist else None,
@@ -433,6 +644,7 @@ class Supervisor:
             "scale_events": self.scale_events,
             "respawns": self.respawns,
             "n_respawns": len(self.respawns),
+            "broker_respawns": self.broker_respawns,
             "n_invocations": len(self.lifetimes),
             "lifetimes_s": list(self.lifetimes),
             "dup_mismatches": dup_mismatches,
@@ -442,9 +654,19 @@ class Supervisor:
                 "wall_seconds": bill.wall_seconds,
                 "worker_cost": bill.worker_cost,
                 "infra_cost": bill.infra_cost,
+                "n_redis": bill.n_redis,
                 "total": bill.total,
             },
             "broker_stats": stats,
+            "broker_stats_per_shard": [
+                r.get("stats") or {} for r in shard_stats
+            ],
+            # codec-accounted published-update bytes each shard measured —
+            # the per-shard half of the §10 invariant (== what
+            # runtime.sharding.predict_shard_nbytes accounts)
+            "broker_update_bytes_per_shard": [
+                int(r.get("update_bytes", 0)) for r in shard_stats
+            ],
         }
         if dump is not None:
             result["updates"] = dump
@@ -469,7 +691,8 @@ PMF_QUICKSTART_CFG = {
 
 
 def pmf_quickstart_config(
-    run_dir: str, n_workers: int = 4, total_steps: int = 140
+    run_dir: str, n_workers: int = 4, total_steps: int = 140,
+    n_brokers: int = 1,
 ) -> FaaSJobConfig:
     """PMF on 4 CPU workers with a live knee-driven scale-in (~1 min)."""
     return FaaSJobConfig(
@@ -483,6 +706,7 @@ def pmf_quickstart_config(
         optimizer="nesterov",
         lr=0.3,
         isp_v=0.7,
+        n_brokers=n_brokers,
         autotune=True,
         tuner=AutoTunerConfig(
             sched_interval_s=0.5,
@@ -503,6 +727,7 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--invocation-steps", type=int, default=1_000_000)
+    ap.add_argument("--n-brokers", type=int, default=1)
     ap.add_argument("--autotune", action="store_true")
     ap.add_argument("--run-dir", default="/tmp/repro_faas")
     ap.add_argument("--out", default=None)
@@ -513,6 +738,7 @@ def main() -> None:
         n_workers=args.workers,
         total_steps=args.steps,
         invocation_steps=args.invocation_steps,
+        n_brokers=args.n_brokers,
         autotune=args.autotune,
     )
     res = run_job(cfg)

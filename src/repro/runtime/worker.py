@@ -1,32 +1,43 @@
 """Stateless FaaS worker — one invocation of the MLLess training function.
 
-Spawned as ``python -m repro.runtime.worker --broker HOST:PORT --worker-id K``
-with *no other job state on the command line*: everything (workload name +
-config, ISP threshold, step budget, checkpoint root) comes from the broker's
-hello response, and model/optimizer/residual state is restored from
-``checkpoint.store`` — the invocation-bounded, externally-checkpointed
-worker model of the paper (§5).
+Spawned as ``python -m repro.runtime.worker --brokers HOST:PORT[,HOST:PORT...]
+--worker-id K`` with *no other job state on the command line*: everything
+(workload name + config, ISP threshold, step budget, checkpoint root) comes
+from the coordinator shard's hello response, and model/optimizer/residual
+state is restored from ``checkpoint.store`` — the invocation-bounded,
+externally-checkpointed worker model of the paper (§5).
+
+The update store is sharded by leaf key over the N broker shards
+(``runtime.sharding``, DESIGN.md §11): the worker holds ONE persistent
+``wire.Connection`` per shard, publishes each shard its slice of every
+update, and pulls each shard's coalesced slice of the peers' updates —
+shard 0 (the coordinator) additionally serves minibatch keys, membership,
+and telemetry.
 
 Per step t the worker runs the *paper-faithful replica semantics* of
 ``core.isp`` (the same math ``core.simulator`` vmaps, here on a real
 process):
 
-1. fetch its minibatch key (piggybacked on the previous pull; a ``batch``
-   round trip only on the first step of an invocation) and load the
-   batch locally;
+1. fetch its minibatch key (piggybacked on the previous coordinator pull;
+   a ``batch`` round trip only on the first step of an invocation) and
+   load the batch locally;
 2. ``u_t = optimizer(grads) / P_active(t)`` (averaged-gradient scaling);
 3. ``sig, residual' = filter_update(residual + u_t)`` — the ISP
    significance split of ``core.isp``, bit-identical semantics;
-4. publish ``sig`` through the shared wire codec (``repro.wire``; scheme
-   and optional fp16/bf16 value quantization from the job config, any
-   quantization error fed back into the residual);
-5. pull the peers' significant updates for t (ISP barrier, ONE coalesced
-   round trip on the persistent connection) and apply
-   ``x += u_t + sum_peers sig`` — own update in full, peers filtered;
+4. publish ``sig`` sliced per shard through the shared wire codec
+   (``repro.wire``; scheme and optional fp16/bf16 value quantization from
+   the job config, any quantization error fed back into the residual);
+5. pull the peers' significant updates for t (ISP barrier per shard, ONE
+   coalesced round trip per shard on its persistent connection) and apply
+   ``x += u_t + sum_peers sig`` — own update in full, peers filtered.
+   Each leaf is owned by exactly one shard and peers arrive in ascending
+   worker order within a shard, so the per-leaf float32 summation order
+   is fixed regardless of the shard count — final params are bit-exact
+   across ``n_brokers`` (asserted by ``tests/test_runtime_sharded.py``);
 6. on an eviction notice effective at t: publish ``x + residual`` as the
-   flush payload (the leaving worker's model-averaging hand-off) and exit;
-   on a flush from a leaving peer: mean-preserving reintegration via
-   ``dist.elastic.reintegrate_into``.
+   flush payload (the leaving worker's model-averaging hand-off, sliced
+   per shard) and exit; on a flush from a leaving peer: mean-preserving
+   reintegration via ``dist.elastic.reintegrate_into``.
 
 Every step reports a per-phase wall-clock breakdown (fetch / compute /
 encode / wire / decode) so data-path regressions are attributable
@@ -34,9 +45,12 @@ encode / wire / decode) so data-path regressions are attributable
 
 Crash recovery is replay: a respawned worker restores the newest checkpoint
 and re-executes forward — every input (minibatch key, peer updates, pool
-membership) is served deterministically by the broker, so replayed
-publishes are bit-identical (the broker counts any mismatch) and the pool
-never observes a diverging history.
+membership) is served deterministically by the brokers, so replayed
+publishes are bit-identical (each shard counts any mismatch) and the pool
+never observes a diverging history.  A *broker shard* crash is equally
+survivable: the RPC layer retries through the supervisor's respawn window,
+and the respawned shard replays its write-ahead log, so any acked publish
+is still there and any retried one dup-checks bit-identical.
 
 Exit codes: 0 clean (done / evicted / invocation boundary), 3 broker
 abort, 4 broker unreachable, 5 barrier deadline exceeded.
@@ -51,25 +65,36 @@ from typing import Any, Optional
 
 PyTree = Any
 
+# the broker-unreachable retry window: must comfortably cover a supervisor
+# shard respawn (detect + python start + WAL replay + bind), which a worker
+# rides out instead of dying into a full checkpoint-replay cold start
+_RPC_TRIES = 8
+_RPC_BACKOFF_S = 0.25
+
 
 def _make_rpc(conn):
-    """Retrying RPC over one persistent broker connection."""
+    """Retrying RPC over one persistent broker-shard connection."""
 
-    def _rpc(header, payload=b"", timeout=30.0, tries=5):
+    def _rpc(header, payload=b"", timeout=30.0, tries=_RPC_TRIES):
         last: Optional[Exception] = None
         for i in range(tries):
             try:
                 return conn.request(header, payload, timeout=timeout)
             except (ConnectionError, OSError, TimeoutError) as e:
                 last = e
-                time.sleep(0.05 * (i + 1))
+                time.sleep(_RPC_BACKOFF_S * (i + 1))
         raise SystemExit(4) from last
 
     return _rpc
 
 
 class _Membership:
-    """Worker-side view of the eviction table (worker -> effective step)."""
+    """Worker-side view of the eviction table (worker -> effective step).
+
+    Updated from every shard response; entries are only ever added (the
+    coordinator is the single minting authority), so merging views from
+    shards with differently-stale tables is safe.
+    """
 
     def __init__(self, n_workers: int):
         self.P = n_workers
@@ -86,7 +111,7 @@ class _Membership:
         return self.evictions.get(worker)
 
 
-def run_worker(host: str, port: int, worker_id: int) -> int:
+def run_worker(addrs: list[tuple[str, int]], worker_id: int) -> int:
     # jax and friends are imported lazily so ``--help`` stays instant — the
     # import cost is the measured FaaS cold-start of each invocation.
     import jax
@@ -97,14 +122,38 @@ def run_worker(host: str, port: int, worker_id: int) -> int:
     from repro.checkpoint import store as ckpt
     from repro.core import isp as isp_lib
     from repro.dist.elastic import reintegrate_into
-    from repro.runtime import protocol, workload as workload_lib
+    from repro.runtime import protocol, sharding
+    from repro.runtime import workload as workload_lib
 
-    # ONE persistent broker connection for the whole invocation — the
-    # coalesced data path (DESIGN.md §10.3) instead of a TCP connect per
-    # message
-    conn = protocol.Connection((host, port), timeout=30.0)
-    _rpc = _make_rpc(conn)
-    hello, _ = _rpc({"t": "hello", "worker": worker_id})
+    # ONE persistent connection per broker shard for the whole invocation —
+    # the coalesced data path (DESIGN.md §10.3) instead of a TCP connect
+    # per message.  conns[0] is the coordinator.
+    n_shards = len(addrs)
+    conns = [protocol.Connection(a, timeout=30.0) for a in addrs]
+    # single-shard round trips (hello/batch/report/bye) go to the
+    # coordinator; everything per-shard goes through the pipelined fanout
+    rpc0 = _make_rpc(conns[0])
+
+    def fanout(shard_ids, headers, payloads=None, timeout=30.0):
+        """Pipelined RPC to several shards (send all, then collect all) —
+        per-shard latencies overlap instead of summing, which is what
+        makes the sharded store cheaper, not dearer, per barrier.  Retries
+        whole rounds through a broker-shard respawn window; every op is
+        idempotent so a replayed round is safe."""
+        payloads = payloads or [b""] * len(shard_ids)
+        last: Optional[Exception] = None
+        for i in range(_RPC_TRIES):
+            try:
+                return protocol.pipelined(
+                    [conns[s] for s in shard_ids],
+                    list(zip(headers, payloads)),
+                    timeout=timeout,
+                )
+            except (ConnectionError, OSError, TimeoutError) as e:
+                last = e
+                time.sleep(_RPC_BACKOFF_S * (i + 1))
+        raise SystemExit(4) from last
+    hello, _ = rpc0({"t": "hello", "worker": worker_id})
     job = hello["job"]
     members = _Membership(int(job["n_workers"]))
     members.update(hello)
@@ -139,6 +188,18 @@ def run_worker(host: str, port: int, worker_id: int) -> int:
     params = wl.params0
     opt_state = optimizer.init(params)
     residual = jax.tree.map(jnp.zeros_like, params)
+
+    # the leaf-key -> shard partition: a pure function of the parameter
+    # template and the shard count, so every worker, the supervisor, and
+    # the tests compute the identical assignment (runtime.sharding)
+    leaf_keys = protocol.tree_keys(params)
+    assignment = sharding.tree_assignment(params, n_shards)
+    leaves0 = [np.asarray(x) for x in jax.tree_util.tree_leaves(params)]
+    treedef0 = jax.tree_util.tree_structure(params)
+    leaf_like = {
+        k: (leaf.shape, leaf.dtype) for k, leaf in zip(leaf_keys, leaves0)
+    }
+
     start_step = 1
     last_saved = 0
     latest = ckpt.latest_step(ckpt_dir)
@@ -193,8 +254,9 @@ def run_worker(host: str, port: int, worker_id: int) -> int:
         last_saved = step_done
 
     def bye(reason: str) -> None:
-        _rpc({"t": "bye", "worker": worker_id, "reason": reason})
-        conn.close()
+        rpc0({"t": "bye", "worker": worker_id, "reason": reason})
+        for c in conns:
+            c.close()
 
     t = start_step
     steps_this_invocation = 0
@@ -210,10 +272,14 @@ def run_worker(host: str, port: int, worker_id: int) -> int:
             # Flushes are full replicas — always 'auto' (dense wins), never
             # quantized: the hand-off must be exact.
             flushed = jax.tree.map(lambda x, r: x + r, params, residual)
-            meta, parts, _ = protocol.encode_tree_parts(flushed)
-            _rpc(
-                {"t": "flush", "worker": worker_id, "step": ev, "meta": meta},
-                parts,
+            per_shard, _ = sharding.encode_tree_sharded(
+                flushed, assignment, n_shards
+            )
+            fanout(
+                list(range(n_shards)),
+                [{"t": "flush", "worker": worker_id, "step": ev,
+                  "meta": meta} for meta, _ in per_shard],
+                [parts for _, parts in per_shard],
             )
             bye("evicted")
             return 0
@@ -231,7 +297,7 @@ def run_worker(host: str, port: int, worker_id: int) -> int:
         # -- fetch: minibatch key (piggybacked except on the first step of
         #    an invocation) + local batch materialization
         if key_next is None:
-            resp, _ = _rpc({"t": "batch", "worker": worker_id, "step": t})
+            resp, _ = rpc0({"t": "batch", "worker": worker_id, "step": t})
             members.update(resp)
             key = int(resp["key"])
         else:
@@ -252,61 +318,96 @@ def run_worker(host: str, port: int, worker_id: int) -> int:
             )
         )
         t_compute = tp()
-        # -- encode: shared wire codec; quantization error (if any) is
-        #    error-feedback — it joins the residual, conserving update mass
-        meta, parts, qerr = protocol.encode_tree_parts(
-            sig, scheme=wire_scheme, quant=wire_quant,
+        # -- encode: shared wire codec, sliced per shard; quantization
+        #    error (if any) is error-feedback — it joins the residual,
+        #    conserving update mass
+        per_shard, qerr = sharding.encode_tree_sharded(
+            sig, assignment, n_shards,
+            scheme=wire_scheme, quant=wire_quant,
             with_residual=(wire_quant != "none"),
         )
         if qerr is not None:
             res = jax.tree.map(
                 lambda r, e: r + e.astype(r.dtype), res, qerr
             )
-        t_encode = tp()
-        # -- wire: publish + ONE coalesced blocking pull per ISP barrier
-        ack, _ = _rpc(
-            {
-                "t": "publish",
-                "worker": worker_id,
-                "step": t,
-                "meta": meta,
-                "loss": float(loss),
-                "sent_fraction": float(sent),
-                "inv_err": float(inv_err),
-            },
-            parts,
+        total_bytes = sum(
+            protocol.wire_bytes(meta) for meta, _ in per_shard
         )
-        members.update(ack)
+        t_encode = tp()
+        # -- wire: one pipelined publish round (every shard gets its slice;
+        #    the coordinator's carries the telemetry header), then
+        #    pipelined coalesced pulls — all shards' ISP-barrier long
+        #    polls run server-side concurrently
+        pub_hdrs = []
+        for s, (meta, _parts) in enumerate(per_shard):
+            hdr = {"t": "publish", "worker": worker_id, "step": t,
+                   "meta": meta}
+            if s == 0:
+                hdr.update(
+                    loss=float(loss),
+                    sent_fraction=float(sent),
+                    inv_err=float(inv_err),
+                    wire_bytes=total_bytes,
+                )
+            pub_hdrs.append(hdr)
+        for ack, _ in fanout(
+            list(range(n_shards)), pub_hdrs,
+            [parts for _, parts in per_shard],
+        ):
+            members.update(ack)
 
         deadline = time.monotonic() + pull_deadline_s
-        while True:
-            resp, blob = _rpc(
-                {"t": "pull", "worker": worker_id, "step": t,
-                 "timeout_s": 2.0},
+        shard_parts: list[Optional[tuple[list, bytes]]] = [None] * n_shards
+        pending = list(range(n_shards))
+        while pending:
+            resps = fanout(
+                pending,
+                [{"t": "pull", "worker": worker_id, "step": t,
+                  "timeout_s": 2.0} for _ in pending],
                 timeout=10.0,
             )
-            if resp.get("abort"):
-                return 3
-            members.update(resp)
-            if resp.get("ready"):
-                break
-            if time.monotonic() > deadline:
+            nxt = []
+            for s, (resp, blob) in zip(pending, resps):
+                if resp.get("abort"):
+                    return 3
+                members.update(resp)
+                if resp.get("ready"):
+                    if s == 0:
+                        key_next = resp.get("key_next")
+                    shard_parts[s] = (resp["parts"], blob)
+                else:
+                    nxt.append(s)
+            pending = nxt
+            if pending and time.monotonic() > deadline:
                 return 5
-        key_next = resp.get("key_next")
         t_wire = tp()
-        # -- decode: peers' updates + eviction flushes back into pytrees
-        peers_sum = jax.tree.map(
-            lambda x: np.zeros(np.shape(x), np.asarray(x).dtype), params
+        # -- decode: peers' update slices + eviction-flush slices back into
+        #    per-leaf accumulators.  Each leaf lives on exactly one shard
+        #    and arrives in ascending worker order there, so the per-leaf
+        #    float32 summation order is fixed for ANY shard count — the
+        #    replay path and every peer stay bit-identical
+        sums = {
+            k: np.zeros(shape, dtype)
+            for k, (shape, dtype) in leaf_like.items()
+        }
+        flush_acc: dict[int, dict[str, np.ndarray]] = {}
+        for descs, blob in shard_parts:
+            for desc, m, leaf in sharding.iter_part_leaves(descs, blob):
+                if desc.get("flush"):
+                    flush_acc.setdefault(int(desc["worker"]), {})[
+                        m["k"]
+                    ] = leaf
+                else:
+                    sums[m["k"]] = sums[m["k"]] + leaf
+        peers_sum = jax.tree_util.tree_unflatten(
+            treedef0, [sums[k] for k in leaf_keys]
         )
-        flushes: list[tuple[int, PyTree]] = []
-        for desc, part in protocol.unpack_parts(resp["parts"], blob):
-            tree = protocol.decode_tree(desc["meta"], part, wl.params0)
-            if desc.get("flush"):
-                flushes.append((int(desc["worker"]), tree))
-            else:
-                # fixed (ascending worker id) float32 summation order keeps
-                # the replay path and every peer bit-identical
-                peers_sum = jax.tree.map(lambda a, b: a + b, peers_sum, tree)
+        flushes = [
+            (q, jax.tree_util.tree_unflatten(
+                treedef0, [acc[k] for k in leaf_keys]
+            ))
+            for q, acc in flush_acc.items()
+        ]
         t_decode = tp()
         # -- apply (counted as compute): own update + peers + reintegration
         params = apply_visible(params, u, peers_sum)
@@ -319,7 +420,7 @@ def run_worker(host: str, port: int, worker_id: int) -> int:
         params = jax.block_until_ready(params)
         residual = res
         t_apply = tp()
-        _rpc(
+        rpc0(
             {
                 "t": "report", "worker": worker_id, "step": t,
                 "dur_s": float(t_apply - t0),
@@ -338,13 +439,27 @@ def run_worker(host: str, port: int, worker_id: int) -> int:
         t += 1
 
 
+def _parse_addrs(spec: str) -> list[tuple[str, int]]:
+    out = []
+    for item in spec.split(","):
+        host, port = item.strip().rsplit(":", 1)
+        out.append((host, int(port)))
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--broker", required=True, help="HOST:PORT")
+    ap.add_argument("--brokers", default=None,
+                    help="comma-separated HOST:PORT per shard "
+                    "(shard 0 = coordinator)")
+    ap.add_argument("--broker", default=None,
+                    help="single-shard HOST:PORT (legacy alias)")
     ap.add_argument("--worker-id", type=int, required=True)
     args = ap.parse_args()
-    host, port = args.broker.rsplit(":", 1)
-    raise SystemExit(run_worker(host, int(port), args.worker_id))
+    spec = args.brokers or args.broker
+    if not spec:
+        ap.error("--brokers (or --broker) is required")
+    raise SystemExit(run_worker(_parse_addrs(spec), args.worker_id))
 
 
 if __name__ == "__main__":

@@ -26,6 +26,7 @@ from repro.wire.codec import (  # noqa: F401
     index_itemsize,
     leaf_nbytes,
     mask_nbytes,
+    predict_leaf_nbytes,
     predict_tree_nbytes,
     quant_dtype,
     tree_keys,
@@ -35,6 +36,7 @@ from repro.wire.framing import (  # noqa: F401
     MAX_MSG_BYTES,
     Connection,
     pack_parts,
+    pipelined,
     recv_msg,
     request,
     send_msg,

@@ -333,6 +333,23 @@ def tree_nbytes(meta: list[dict]) -> int:
     return int(sum(m["nbytes"] for m in meta))
 
 
+def predict_leaf_nbytes(
+    leaf: Any, scheme: str = AUTO, quant: str = "none"
+) -> int:
+    """Accounting for ONE leaf: wire bytes it WOULD cost, from its nnz
+    through the same ``leaf_nbytes`` formula (and ``auto`` resolution)
+    the encoder asserts against.  Every predictor — whole-tree
+    (``predict_tree_nbytes``) and per-shard
+    (``runtime.sharding.predict_shard_nbytes``) — sums THIS function, so
+    the accountants cannot drift from each other or from the encoder."""
+    a = np.asarray(leaf)
+    n = int(a.size)
+    nnz = int(np.count_nonzero(a))
+    isz = quant_dtype(a.dtype, quant).itemsize
+    s = best_scheme(n, nnz, isz) if scheme == AUTO else scheme
+    return int(leaf_nbytes(s, n, nnz, isz))
+
+
 def predict_tree_nbytes(
     tree: PyTree, scheme: str = AUTO, quant: str = "none"
 ) -> int:
@@ -342,12 +359,7 @@ def predict_tree_nbytes(
     cross-check test in ``tests/test_wire_codec.py`` holds this line)."""
     import jax
 
-    total = 0
-    for leaf in jax.tree_util.tree_leaves(tree):
-        a = np.asarray(leaf)
-        n = int(a.size)
-        nnz = int(np.count_nonzero(a))
-        isz = quant_dtype(a.dtype, quant).itemsize
-        s = best_scheme(n, nnz, isz) if scheme == AUTO else scheme
-        total += int(leaf_nbytes(s, n, nnz, isz))
-    return total
+    return sum(
+        predict_leaf_nbytes(leaf, scheme, quant)
+        for leaf in jax.tree_util.tree_leaves(tree)
+    )

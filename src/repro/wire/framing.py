@@ -156,6 +156,48 @@ class Connection:
         assert last is not None
         raise last
 
+    # -- pipelined half-operations (multi-shard fan-out) ----------------------
+    #
+    # ``send_only`` + ``recv_response`` split one round trip so a client
+    # talking to N servers can send N requests before waiting for any
+    # response — per-server latency (scheduling wakeups, WAL flushes, long
+    # polls) then overlaps instead of summing.  Strictly one outstanding
+    # request per connection; ``pipelined`` is the safe composition.
+
+    def send_only(
+        self, header: dict, payload: Payload = b"",
+        timeout: Optional[float] = None,
+    ) -> None:
+        """Write one request without reading the response (reconnects and
+        resends once on failure — server ops are idempotent)."""
+        for attempt in range(2):
+            sock = self._sock
+            try:
+                if sock is None:
+                    sock = self._connect()
+                sock.settimeout(timeout if timeout is not None
+                                else self.timeout)
+                send_msg(sock, header, payload)
+                return
+            except (ConnectionError, OSError, TimeoutError):
+                self.close()
+                if attempt:
+                    raise
+
+    def recv_response(
+        self, timeout: Optional[float] = None
+    ) -> tuple[dict, bytes]:
+        """Read the response of the request ``send_only`` put in flight."""
+        if self._sock is None:
+            raise ConnectionError("no in-flight request on this connection")
+        self._sock.settimeout(timeout if timeout is not None
+                              else self.timeout)
+        try:
+            return recv_msg(self._sock)
+        except (ConnectionError, OSError, TimeoutError):
+            self.close()  # never leave a half-read stream behind
+            raise
+
     def close(self) -> None:
         if self._sock is not None:
             try:
@@ -169,6 +211,37 @@ class Connection:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+
+def pipelined(
+    conns: list["Connection"],
+    messages: list[tuple[dict, Payload]],
+    timeout: Optional[float] = None,
+) -> list[tuple[dict, bytes]]:
+    """One round trip to N servers, overlapped: send every request, then
+    collect every response.  A connection that fails either half falls
+    back to a fresh-socket sequential ``request`` (idempotent servers make
+    the replay safe), so the result is positionally complete or raises.
+    """
+    results: list[Optional[tuple[dict, bytes]]] = [None] * len(conns)
+    failed: list[int] = []
+    for i, (conn, (header, payload)) in enumerate(zip(conns, messages)):
+        try:
+            conn.send_only(header, payload, timeout=timeout)
+        except (ConnectionError, OSError, TimeoutError):
+            failed.append(i)
+    for i, conn in enumerate(conns):
+        if i in failed:
+            continue
+        try:
+            results[i] = conn.recv_response(timeout=timeout)
+        except (ConnectionError, OSError, TimeoutError):
+            failed.append(i)
+    for i in failed:
+        conns[i].close()  # force a clean socket for the replay
+        header, payload = messages[i]
+        results[i] = conns[i].request(header, payload, timeout=timeout)
+    return results  # type: ignore[return-value]
 
 
 # -- multi-part payloads (coalesced pull responses) ---------------------------

@@ -1,0 +1,218 @@
+"""Fixture library for the multi-process FaaS runtime tests (DESIGN.md §11.4).
+
+Every runtime test used to copy-paste its own workload config, job builder
+and broker setup; this module is the single home for that plumbing so the
+test files state only what they assert:
+
+* ``SMALL_PMF_WCFG`` / ``small_pmf_cfg`` / ``run_small_pmf`` — the tiny
+  deterministic PMF job every end-to-end test sizes itself to (real worker
+  processes are the slowest tier-1 tests);
+* ``BrokerCluster`` — an in-thread sharded broker cluster on ephemeral
+  ports (OS-assigned, so parallel test runs never collide) with
+  teardown-with-timeout, for protocol-level tests that stub the workers;
+* ``reference_updates`` — the in-process ``core.isp`` replica-semantics
+  replay that the bit-verification tests compare runtime-published
+  updates and final parameters against;
+* ``final_params`` — restore one worker's newest checkpoint (the final
+  replica) from a finished run directory.
+
+Used by ``test_runtime_faas.py``, ``test_runtime_fault.py``,
+``test_runtime_protocol.py`` and ``test_runtime_sharded.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from repro.runtime import FaaSJobConfig, build_workload, run_job
+from repro.runtime import protocol
+from repro.runtime.broker import Broker
+
+PyTree = Any
+
+# the shared tiny-PMF instance: small enough that a full multi-process run
+# fits in a few seconds, big enough that the ISP filter actually filters
+SMALL_PMF_WCFG = {
+    "n_users": 120,
+    "n_movies": 150,
+    "n_ratings": 6000,
+    "rank": 4,
+    "batch_size": 64,
+}
+SMALL_P = 3
+SMALL_STEPS = 8
+SMALL_V = 0.5
+SMALL_LR = 0.08
+
+
+def small_pmf_cfg(run_dir, **overrides) -> FaaSJobConfig:
+    """The canonical small deterministic PMF job; override any field."""
+    base = dict(
+        run_dir=str(run_dir),
+        workload="pmf",
+        workload_cfg=dict(SMALL_PMF_WCFG),
+        n_workers=SMALL_P,
+        total_steps=SMALL_STEPS,
+        checkpoint_every=100,
+        optimizer="nesterov",
+        lr=SMALL_LR,
+        isp_v=SMALL_V,
+        deadline_s=180.0,
+    )
+    base.update(overrides)
+    return FaaSJobConfig(**base)
+
+
+def run_small_pmf(tmp_path, **overrides) -> dict:
+    """Run the canonical small job (real processes) and return its result."""
+    return run_job(small_pmf_cfg(tmp_path / "job", **overrides))
+
+
+class BrokerCluster:
+    """In-thread broker shards for protocol-level tests.
+
+    Each shard is the production ``Broker`` server (real sockets, real
+    handler loops) on an OS-allocated ephemeral port; only the workers are
+    stubbed by the test.  Shard 0 is the coordinator.  ``close`` tears
+    every shard down with a bounded join so a wedged handler thread fails
+    the test instead of hanging the suite.
+    """
+
+    def __init__(self, job: dict, n_shards: int = 1,
+                 wal_dir: Optional[str] = None):
+        self.n_shards = n_shards
+        self.brokers: list[Broker] = []
+        for s in range(n_shards):
+            wal = f"{wal_dir}/shard{s:02d}.wal" if wal_dir else None
+            self.brokers.append(
+                Broker(dict(job), shard_id=s, n_shards=n_shards,
+                       wal_path=wal)
+            )
+        self.addrs = [b.start() for b in self.brokers]
+
+    @property
+    def coordinator(self) -> Broker:
+        return self.brokers[0]
+
+    def rpc(self, header: dict, payload: bytes = b"", shard: int = 0,
+            timeout: float = 10.0) -> tuple[dict, bytes]:
+        return protocol.request(
+            self.addrs[shard], header, payload, timeout=timeout
+        )
+
+    def close(self, timeout: float = 5.0) -> None:
+        wedged = [
+            b.core.shard_id for b in self.brokers
+            if not b.stop(timeout=timeout)
+        ]
+        if wedged:
+            raise RuntimeError(
+                f"broker shard(s) {wedged} did not shut down within "
+                f"{timeout}s (wedged handler thread)"
+            )
+
+    def __enter__(self) -> "BrokerCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def reference_updates(
+    wcfg: dict = SMALL_PMF_WCFG,
+    n_workers: int = SMALL_P,
+    steps: int = SMALL_STEPS,
+    isp_v: float = SMALL_V,
+    lr: float = SMALL_LR,
+    workload: str = "pmf",
+    optimizer: str = "nesterov",
+) -> tuple[dict, list]:
+    """In-process ``core.isp`` replica-semantics replay of a full job.
+
+    Returns ``(published, final_params)`` where ``published[(worker,
+    step)]`` is the significance-filtered update that worker must have
+    published at that step (bit-exact reference), and ``final_params[w]``
+    is worker w's replica after the last step — what its final checkpoint
+    must contain.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro import optim
+    from repro.core import isp as isp_lib
+
+    wl = build_workload(workload, wcfg)
+    opt = optim.make(optimizer, lr)
+    isp = isp_lib.ISPConfig(v=isp_v)
+
+    def compute(params, opt_state, residual, batch, inv_p, t):
+        loss, grads = wl.grad_fn(params, batch)
+        upd, opt_state = opt.update(grads, opt_state, params)
+        u = jax.tree.map(lambda a: (a * inv_p).astype(a.dtype), upd)
+        sig, st, _ = isp_lib.filter_update(
+            isp, isp_lib.ISPState(residual=residual, step=t), u, params
+        )
+        return u, sig, st.residual, opt_state
+
+    compute = jax.jit(compute)
+    apply_v = jax.jit(
+        lambda p, u, pe: jax.tree.map(
+            lambda a, b, c: a + b + c.astype(a.dtype), p, u, pe
+        )
+    )
+
+    import numpy as np
+
+    P = n_workers
+    params = [wl.params0] * P
+    opts = [opt.init(wl.params0) for _ in range(P)]
+    residuals = [jax.tree.map(jnp.zeros_like, wl.params0) for _ in range(P)]
+    published: dict[tuple[int, int], PyTree] = {}
+    for t in range(1, steps + 1):
+        sigs, us = {}, {}
+        for w in range(P):
+            key = ((t - 1) * P + w) % wl.n_batches
+            u, sig, r2, opts[w] = compute(
+                params[w], opts[w], residuals[w], wl.batch(key),
+                jnp.asarray(1.0 / P, jnp.float32),
+                jnp.asarray(t, jnp.int32),
+            )
+            residuals[w] = r2
+            sigs[w], us[w] = sig, u
+            published[(w, t)] = sig
+        for w in range(P):
+            acc = jax.tree.map(
+                lambda x: np.zeros(np.shape(x), np.asarray(x).dtype),
+                wl.params0,
+            )
+            for w2 in sorted(sigs):
+                if w2 != w:
+                    acc = jax.tree.map(
+                        lambda a, b: a + np.asarray(b), acc, sigs[w2]
+                    )
+            params[w] = apply_v(params[w], us[w], acc)
+    return published, params
+
+
+def final_params(cfg: FaaSJobConfig, worker: int) -> tuple[int, PyTree]:
+    """Restore worker ``worker``'s newest checkpoint from a finished run.
+    Returns (checkpointed step, params)."""
+    import os
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import optim
+    from repro.checkpoint import store as ckpt
+
+    wl = build_workload(cfg.workload, cfg.workload_cfg)
+    opt = optim.make(cfg.optimizer, cfg.lr)
+    like = {
+        "params": wl.params0,
+        "opt": opt.init(wl.params0),
+        "residual": jax.tree.map(jnp.zeros_like, wl.params0),
+    }
+    d = os.path.join(cfg.run_dir, "ckpt", f"w{worker:03d}")
+    step = ckpt.latest_step(d)
+    assert step is not None, f"no checkpoint for worker {worker} in {d}"
+    return step, ckpt.restore(d, step, like)["params"]

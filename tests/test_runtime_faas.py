@@ -2,7 +2,8 @@
 
 These spawn REAL worker processes (each imports jax, restores from the
 checkpoint store, and talks to the broker over sockets), so they are the
-slowest tier-1 tests — sized to a tiny PMF instance.
+slowest tier-1 tests — sized to the tiny PMF instance the shared harness
+provides (``tests/runtime_harness.py``).
 
 The heart of the file is the bit-verification test the acceptance criteria
 ask for: every update published by every worker process across a run must
@@ -14,49 +15,22 @@ it.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import optim
-from repro.core import isp as isp_lib
-from repro.runtime import FaaSJobConfig, build_workload, run_job
-
-WCFG = {
-    "n_users": 120,
-    "n_movies": 150,
-    "n_ratings": 6000,
-    "rank": 4,
-    "batch_size": 64,
-}
-P = 3
-STEPS = 8
-V = 0.5
-LR = 0.08
-
-
-def _cfg(tmp_path, **kw) -> FaaSJobConfig:
-    base = dict(
-        run_dir=str(tmp_path / "job"),
-        workload="pmf",
-        workload_cfg=WCFG,
-        n_workers=P,
-        total_steps=STEPS,
-        checkpoint_every=100,
-        optimizer="nesterov",
-        lr=LR,
-        isp_v=V,
-        deadline_s=180.0,
-    )
-    base.update(kw)
-    return FaaSJobConfig(**base)
+from runtime_harness import (
+    SMALL_P as P,
+    SMALL_STEPS as STEPS,
+    reference_updates,
+    run_small_pmf,
+)
 
 
 @pytest.fixture(scope="module")
 def plain_run(tmp_path_factory):
     """One shared end-to-end run (real processes are expensive)."""
     tmp = tmp_path_factory.mktemp("faas_e2e")
-    return run_job(_cfg(tmp, retain_updates=True))
+    return run_small_pmf(tmp, retain_updates=True)
 
 
 def test_e2e_completes_all_steps_with_real_processes(plain_run):
@@ -84,6 +58,8 @@ def test_e2e_bill_from_measured_lifetimes(plain_run):
     assert bill["worker_seconds"] == pytest.approx(expect)
     assert bill["worker_seconds"] >= sum(lifetimes)
     assert bill["total"] > 0
+    # single-shard topology bills a single Redis-analogue VM
+    assert bill["n_redis"] == 1
 
 
 def test_e2e_byte_accounting(plain_run):
@@ -92,6 +68,10 @@ def test_e2e_byte_accounting(plain_run):
         assert stats[kind]["count"] > 0, kind
     assert stats["publish"]["count"] == P * STEPS
     assert stats["publish"]["bytes_in"] > plain_run["wire_bytes_total"]
+    # the per-shard split sums to the merged view (one shard here)
+    assert sum(plain_run["broker_update_bytes_per_shard"]) == (
+        plain_run["wire_bytes_total"]
+    )
     assert plain_run["dup_mismatches"] == 0
 
 
@@ -103,74 +83,27 @@ def test_e2e_updates_bit_identical_to_core_isp_reference(plain_run):
     }
     assert len(pub) == P * STEPS
 
-    wl = build_workload("pmf", WCFG)
-    optimizer = optim.make("nesterov", LR)
-    isp = isp_lib.ISPConfig(v=V)
-
-    def compute(params, opt_state, residual, batch, inv_p, t):
-        loss, grads = wl.grad_fn(params, batch)
-        upd, opt_state = optimizer.update(grads, opt_state, params)
-        u = jax.tree.map(lambda a: (a * inv_p).astype(a.dtype), upd)
-        sig, st, _ = isp_lib.filter_update(
-            isp, isp_lib.ISPState(residual=residual, step=t), u, params
-        )
-        return u, sig, st.residual, opt_state
-
-    compute = jax.jit(compute)
-    apply_v = jax.jit(
-        lambda p, u, pe: jax.tree.map(
-            lambda a, b, c: a + b + c.astype(a.dtype), p, u, pe
-        )
-    )
-
-    params = [wl.params0] * P
-    opts = [optimizer.init(wl.params0) for _ in range(P)]
-    residuals = [jax.tree.map(jnp.zeros_like, wl.params0) for _ in range(P)]
-    for t in range(1, STEPS + 1):
-        sigs, us = {}, {}
-        for w in range(P):
-            key = ((t - 1) * P + w) % wl.n_batches
-            u, sig, r2, opts[w] = compute(
-                params[w], opts[w], residuals[w], wl.batch(key),
-                jnp.asarray(1.0 / P, jnp.float32),
-                jnp.asarray(t, jnp.int32),
+    ref, _final = reference_updates()
+    for (w, t), sig in sorted(ref.items()):
+        for a, b in zip(jax.tree.leaves(sig), jax.tree.leaves(pub[(w, t)])):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"worker {w} step {t}: runtime diverged from "
+                f"core.isp semantics",
             )
-            residuals[w] = r2
-            sigs[w], us[w] = sig, u
-            for ref, got in zip(
-                jax.tree.leaves(sig), jax.tree.leaves(pub[(w, t)])
-            ):
-                np.testing.assert_array_equal(
-                    np.asarray(ref), np.asarray(got),
-                    err_msg=f"worker {w} step {t}: runtime diverged from "
-                    f"core.isp semantics",
-                )
-        for w in range(P):
-            acc = jax.tree.map(
-                lambda x: np.zeros(np.shape(x), np.asarray(x).dtype),
-                wl.params0,
-            )
-            for w2 in sorted(sigs):
-                if w2 != w:
-                    acc = jax.tree.map(
-                        lambda a, b: a + np.asarray(b), acc, sigs[w2]
-                    )
-            params[w] = apply_v(params[w], us[w], acc)
 
 
 def test_e2e_scripted_eviction_and_invocation_boundaries(tmp_path):
     """Scale-in mid-run + invocation-bounded workers in one job: the pool
     shrinks at the broker-chosen step, survivors keep training across
     invocation respawns, and the conservation invariant holds throughout."""
-    res = run_job(
-        _cfg(
-            tmp_path,
-            total_steps=14,
-            invocation_steps=6,  # forces mid-job respawns
-            checkpoint_every=5,
-            scripted_evict_steps=(4,),
-            deadline_s=240.0,
-        )
+    res = run_small_pmf(
+        tmp_path,
+        total_steps=14,
+        invocation_steps=6,  # forces mid-job respawns
+        checkpoint_every=5,
+        scripted_evict_steps=(4,),
+        deadline_s=240.0,
     )
     assert res["steps"] == 14
     assert len(res["scale_events"]) == 1

@@ -6,20 +6,16 @@ forward deterministically (bit-identical re-publishes; the broker counts
 any mismatch) until it catches the pool — with the ISP conservation
 invariant ``sent + residual' == residual + update`` holding pool-wide
 through the crash and recovery.
+
+(The dual fault — SIGKILL of a *broker shard* — lives in
+``test_runtime_sharded.py``, where the sharded topology it exercises is
+introduced.)
 """
 
 from __future__ import annotations
 
-from repro.runtime import FaaSJobConfig, run_job
+from runtime_harness import SMALL_P as P, run_small_pmf
 
-WCFG = {
-    "n_users": 120,
-    "n_movies": 150,
-    "n_ratings": 6000,
-    "rank": 4,
-    "batch_size": 64,
-}
-P = 3
 STEPS = 14
 KILL_WORKER = 2
 KILL_AT = 6  # after the step-4 checkpoint exists
@@ -27,20 +23,13 @@ CKPT_EVERY = 4
 
 
 def test_sigkill_mid_epoch_respawns_from_checkpoint(tmp_path):
-    res = run_job(
-        FaaSJobConfig(
-            run_dir=str(tmp_path / "job"),
-            workload="pmf",
-            workload_cfg=WCFG,
-            n_workers=P,
-            total_steps=STEPS,
-            checkpoint_every=CKPT_EVERY,
-            optimizer="nesterov",
-            lr=0.08,
-            isp_v=0.5,
-            kill_worker_at_step=(KILL_WORKER, KILL_AT),
-            deadline_s=240.0,
-        )
+    res = run_small_pmf(
+        tmp_path,
+        total_steps=STEPS,
+        checkpoint_every=CKPT_EVERY,
+        lr=0.08,
+        kill_worker_at_step=(KILL_WORKER, KILL_AT),
+        deadline_s=240.0,
     )
     # the kill really happened and was recovered
     assert res["n_respawns"] >= 1

@@ -2,7 +2,8 @@
 
 Covers the framing/encoding layer the multi-process runtime stands on, and
 the broker's barrier/membership/accounting semantics via real sockets (the
-broker thread is the production server; only the workers are stubbed).
+broker threads are the production server, spun up through the shared
+``BrokerCluster`` harness; only the workers are stubbed).
 """
 
 from __future__ import annotations
@@ -15,7 +16,9 @@ import numpy as np
 import pytest
 
 from repro.runtime import protocol
-from repro.runtime.broker import Broker
+from repro.runtime.broker import WriteAheadLog
+
+from runtime_harness import BrokerCluster
 
 
 # -- framing ------------------------------------------------------------------
@@ -105,45 +108,43 @@ JOB = {
 
 
 @pytest.fixture()
-def broker():
-    b = Broker(dict(JOB))
-    b.start()
-    yield b
-    b.stop()
+def cluster():
+    with BrokerCluster(dict(JOB)) as c:
+        yield c
 
 
-def _rpc(broker, header, payload=b""):
-    return protocol.request(broker.addr, header, payload, timeout=10.0)
+@pytest.fixture()
+def broker(cluster):
+    return cluster.coordinator
 
 
-def test_broker_hello_and_batch_keys(broker):
-    resp, _ = _rpc(broker, {"t": "hello", "worker": 0})
+def test_broker_hello_and_batch_keys(cluster):
+    resp, _ = cluster.rpc({"t": "hello", "worker": 0})
     assert resp["ok"] and resp["job"]["n_workers"] == 2
+    assert resp["shard_id"] == 0 and resp["n_shards"] == 1
     # deterministic round-robin minibatch keys: (step-1)*P + worker mod n
     keys = [
-        _rpc(broker, {"t": "batch", "worker": w, "step": s})[0]["key"]
+        cluster.rpc({"t": "batch", "worker": w, "step": s})[0]["key"]
         for s in (1, 2) for w in (0, 1)
     ]
     assert keys == [0, 1, 2, 3]
 
 
-def test_broker_barrier_blocks_until_all_publish(broker):
+def test_broker_barrier_blocks_until_all_publish(cluster):
     meta, payload = protocol.encode_tree({"x": jnp.ones(4)})
-    _rpc(
-        broker,
+    cluster.rpc(
         {"t": "publish", "worker": 0, "step": 1, "meta": meta,
          "loss": 1.0, "sent_fraction": 1.0, "inv_err": 0.0},
         payload,
     )
-    resp, _ = _rpc(
-        broker, {"t": "pull", "worker": 0, "step": 1, "timeout_s": 0.1}
+    resp, _ = cluster.rpc(
+        {"t": "pull", "worker": 0, "step": 1, "timeout_s": 0.1}
     )
     assert resp["ready"] is False  # worker 1 hasn't published
     done = {}
 
     def late_publish():
-        _rpc(
-            broker,
+        cluster.rpc(
             {"t": "publish", "worker": 1, "step": 1, "meta": meta,
              "loss": 2.0, "sent_fraction": 1.0, "inv_err": 0.0},
             payload,
@@ -152,8 +153,8 @@ def test_broker_barrier_blocks_until_all_publish(broker):
 
     t = threading.Thread(target=late_publish)
     t.start()
-    resp, blob = _rpc(
-        broker, {"t": "pull", "worker": 0, "step": 1, "timeout_s": 5.0}
+    resp, blob = cluster.rpc(
+        {"t": "pull", "worker": 0, "step": 1, "timeout_s": 5.0}
     )
     t.join()
     assert resp["ready"] is True
@@ -165,63 +166,63 @@ def test_broker_barrier_blocks_until_all_publish(broker):
     np.testing.assert_array_equal(got["x"], np.ones(4))
 
 
-def test_broker_duplicate_publish_is_idempotent(broker):
+def test_broker_duplicate_publish_is_idempotent(cluster, broker):
     meta, payload = protocol.encode_tree({"x": jnp.arange(4.0)})
     h = {"t": "publish", "worker": 0, "step": 2, "meta": meta,
          "loss": 1.0, "sent_fraction": 1.0, "inv_err": 0.0}
-    r1, _ = _rpc(broker, h, payload)
-    r2, _ = _rpc(broker, h, payload)  # bit-identical replay
+    r1, _ = cluster.rpc(h, payload)
+    r2, _ = cluster.rpc(h, payload)  # bit-identical replay
     assert (r1["dup"], r2["dup"]) == (False, True)
     assert broker.core.dup_mismatches == 0
+    # a dup does not double-count the shard's update-byte meter
+    assert broker.core.update_bytes == protocol.wire_bytes(meta)
     # a diverging replay is counted (the determinism tripwire)
     meta2, payload2 = protocol.encode_tree({"x": jnp.arange(4.0) + 1})
-    _rpc(broker, {**h, "meta": meta2}, payload2)
+    cluster.rpc({**h, "meta": meta2}, payload2)
     assert broker.core.dup_mismatches == 1
 
 
-def test_broker_evict_step_is_safely_in_the_future(broker):
+def test_broker_evict_step_is_safely_in_the_future(cluster, broker):
     meta, payload = protocol.encode_tree({"x": jnp.ones(2)})
     for w in (0, 1):
-        _rpc(
-            broker,
+        cluster.rpc(
             {"t": "publish", "worker": w, "step": 3, "meta": meta,
              "loss": 1.0, "sent_fraction": 1.0, "inv_err": 0.0},
             payload,
         )
-    resp, _ = _rpc(broker, {"t": "evict", "worker": 1})
+    resp, _ = cluster.rpc({"t": "evict", "worker": 1})
     assert resp["granted"] and resp["evict_step"] == 5  # max_published + 2
     assert broker.core.active_at(4) == [0, 1]
     assert broker.core.active_at(5) == [0]
     # idempotent
-    again, _ = _rpc(broker, {"t": "evict", "worker": 1})
+    again, _ = cluster.rpc({"t": "evict", "worker": 1})
     assert again["granted"] and again["evict_step"] == 5
     # a second eviction granted back-to-back gets a DISTINCT effective step:
     # one leaver per step keeps the survivors' sequential mean-preserving
     # pulls exact
-    other, _ = _rpc(broker, {"t": "evict", "worker": 0})
+    other, _ = cluster.rpc({"t": "evict", "worker": 0})
     assert other["granted"] and other["evict_step"] == 6
 
 
-def test_broker_refuses_eviction_past_job_end(broker):
+def test_broker_refuses_eviction_past_job_end(cluster, broker):
     meta, payload = protocol.encode_tree({"x": jnp.ones(2)})
     for w in (0, 1):
-        _rpc(
-            broker,
+        cluster.rpc(
             {"t": "publish", "worker": w, "step": 9, "meta": meta,
              "loss": 1.0, "sent_fraction": 1.0, "inv_err": 0.0},
             payload,
         )
     # effective step would be 11 > total_steps=10: the pool finishes before
     # the eviction could land, so granting it would strand the flush
-    resp, _ = _rpc(broker, {"t": "evict", "worker": 1})
+    resp, _ = cluster.rpc({"t": "evict", "worker": 1})
     assert resp["granted"] is False and resp["reason"] == "past-end"
     assert broker.core.evictions == {}
 
 
-def test_persistent_connection_many_round_trips(broker):
+def test_persistent_connection_many_round_trips(cluster, broker):
     """One TCP connection, many framed request/response round trips — the
     coalesced data path (DESIGN.md §10.3)."""
-    with protocol.Connection(broker.addr) as conn:
+    with protocol.Connection(cluster.addrs[0]) as conn:
         for s in (1, 2, 3):
             resp, _ = conn.request({"t": "batch", "worker": 0, "step": s})
             assert resp["ok"] and resp["key"] == ((s - 1) * 2) % 5
@@ -237,8 +238,8 @@ def test_persistent_connection_many_round_trips(broker):
     assert broker.core.stats["batch"]["count"] == 3
 
 
-def test_connection_survives_reconnect(broker):
-    conn = protocol.Connection(broker.addr)
+def test_connection_survives_reconnect(cluster):
+    conn = protocol.Connection(cluster.addrs[0])
     resp, _ = conn.request({"t": "batch", "worker": 0, "step": 1})
     assert resp["ok"]
     conn._sock.close()  # simulate a dropped connection mid-invocation
@@ -247,58 +248,219 @@ def test_connection_survives_reconnect(broker):
     conn.close()
 
 
-def test_pull_piggybacks_next_batch_key(broker):
+def test_pull_piggybacks_next_batch_key(cluster):
     """The ready pull response carries the NEXT step's minibatch key, so
     the steady-state worker loop is publish + pull only."""
     meta, payload = protocol.encode_tree({"x": jnp.ones(4)})
     for w in (0, 1):
-        _rpc(
-            broker,
+        cluster.rpc(
             {"t": "publish", "worker": w, "step": 1, "meta": meta,
              "loss": 1.0, "sent_fraction": 1.0, "inv_err": 0.0},
             payload,
         )
-    resp, _ = _rpc(
-        broker, {"t": "pull", "worker": 1, "step": 1, "timeout_s": 5.0}
+    resp, _ = cluster.rpc(
+        {"t": "pull", "worker": 1, "step": 1, "timeout_s": 5.0}
     )
     assert resp["ready"] is True
     # key for (step=2, worker=1): ((2-1)*P + 1) % n_batches = 3
     assert resp["key_next"] == 3
 
 
-def test_poll_with_since_cursor_is_idempotent(broker):
+def test_poll_with_since_cursor_is_idempotent(cluster):
     """A cursor-carrying poll re-serves the same rows on replay — the
     supervisor's retrying Connection must not lose telemetry when a poll
     response is dropped mid-flight."""
     meta, payload = protocol.encode_tree({"x": jnp.ones(2)})
     for w in (0, 1):
-        _rpc(
-            broker,
+        cluster.rpc(
             {"t": "publish", "worker": w, "step": 1, "meta": meta,
              "loss": 1.0, "sent_fraction": 1.0, "inv_err": 0.0},
             payload,
         )
-        _rpc(broker, {"t": "report", "worker": w, "step": 1, "dur_s": 0.5})
-    r1, _ = _rpc(broker, {"t": "poll", "since": 1})
-    r2, _ = _rpc(broker, {"t": "poll", "since": 1})  # replay
+        cluster.rpc({"t": "report", "worker": w, "step": 1, "dur_s": 0.5})
+    r1, _ = cluster.rpc({"t": "poll", "since": 1})
+    r2, _ = cluster.rpc({"t": "poll", "since": 1})  # replay
     assert [r["step"] for r in r1["rows"]] == [1]
     assert r1["rows"] == r2["rows"]
     # and the server-side cursor of legacy polls was not advanced by them
-    r3, _ = _rpc(broker, {"t": "poll"})
+    r3, _ = cluster.rpc({"t": "poll"})
     assert [r["step"] for r in r3["rows"]] == [1]
 
 
-def test_broker_accounts_bytes_per_message_type(broker):
+def test_broker_accounts_bytes_per_message_type(cluster):
     meta, payload = protocol.encode_tree({"x": jnp.ones(8)})
-    _rpc(
-        broker,
+    cluster.rpc(
         {"t": "publish", "worker": 0, "step": 1, "meta": meta,
          "loss": 0.0, "sent_fraction": 1.0, "inv_err": 0.0},
         payload,
     )
-    _rpc(broker, {"t": "batch", "worker": 0, "step": 1})
-    stats, _ = _rpc(broker, {"t": "stats"})
+    cluster.rpc({"t": "batch", "worker": 0, "step": 1})
+    stats, _ = cluster.rpc({"t": "stats"})
     s = stats["stats"]
+    assert stats["update_bytes"] == protocol.wire_bytes(meta)
     assert s["publish"]["count"] == 1
     assert s["publish"]["bytes_in"] >= len(payload)
     assert s["batch"]["count"] == 1 and s["batch"]["bytes_out"] > 0
+
+
+# -- sharded coordinator semantics --------------------------------------------
+
+
+@pytest.fixture()
+def sharded():
+    with BrokerCluster(dict(JOB), n_shards=2) as c:
+        yield c
+
+
+def test_noncoordinator_refuses_evict_but_applies_sync(sharded):
+    """Membership is minted on shard 0 only; other shards install the
+    granted (worker, step) via evict_apply — the supervisor's sync."""
+    resp, _ = sharded.rpc({"t": "evict", "worker": 1}, shard=1)
+    assert resp["ok"] is False and "coordinator" in resp["error"]
+    meta, payload = protocol.encode_tree({"x": jnp.ones(2)})
+    for w in (0, 1):
+        sharded.rpc(
+            {"t": "publish", "worker": w, "step": 3, "meta": meta,
+             "loss": 1.0, "sent_fraction": 1.0, "inv_err": 0.0},
+            payload,
+        )
+    grant, _ = sharded.rpc({"t": "evict", "worker": 1})
+    assert grant["granted"]
+    sync, _ = sharded.rpc(
+        {"t": "evict_apply", "worker": 1, "step": grant["evict_step"]},
+        shard=1,
+    )
+    assert sync["ok"]
+    assert sharded.brokers[1].core.evictions == {1: grant["evict_step"]}
+    # a conflicting re-install is rejected, idempotent one accepted
+    bad, _ = sharded.rpc(
+        {"t": "evict_apply", "worker": 1, "step": grant["evict_step"] + 1},
+        shard=1,
+    )
+    assert bad["ok"] is False
+    ok, _ = sharded.rpc(
+        {"t": "evict_apply", "worker": 1, "step": grant["evict_step"]},
+        shard=1,
+    )
+    assert ok["ok"]
+
+
+def test_noncoordinator_pull_has_no_key_next(sharded):
+    meta, payload = protocol.encode_tree({"x": jnp.ones(2)})
+    for w in (0, 1):
+        for s in (0, 1):
+            sharded.rpc(
+                {"t": "publish", "worker": w, "step": 1, "meta": meta},
+                payload, shard=s,
+            )
+    r0, _ = sharded.rpc(
+        {"t": "pull", "worker": 0, "step": 1, "timeout_s": 5.0}
+    )
+    r1, _ = sharded.rpc(
+        {"t": "pull", "worker": 0, "step": 1, "timeout_s": 5.0}, shard=1
+    )
+    assert r0["ready"] and "key_next" in r0
+    assert r1["ready"] and "key_next" not in r1
+
+
+# -- write-ahead log ----------------------------------------------------------
+
+
+def test_wal_replay_restores_broker_state(tmp_path):
+    """A respawned shard replays its WAL and resumes bit-identically: the
+    stored update survives, a retried publish dup-checks clean, and the
+    granted eviction is still installed."""
+    meta, payload = protocol.encode_tree({"x": jnp.arange(6.0)})
+    pub = {"t": "publish", "worker": 0, "step": 1, "meta": meta,
+           "loss": 1.0, "sent_fraction": 1.0, "inv_err": 0.0}
+    with BrokerCluster(dict(JOB), wal_dir=str(tmp_path)) as c1:
+        c1.rpc(pub, payload)
+        c1.rpc(
+            {"t": "publish", "worker": 1, "step": 1, "meta": meta,
+             "loss": 1.0, "sent_fraction": 1.0, "inv_err": 0.0},
+            payload,
+        )
+        c1.rpc({"t": "evict", "worker": 1})
+    # "respawn": a fresh cluster over the same WAL directory
+    with BrokerCluster(dict(JOB), wal_dir=str(tmp_path)) as c2:
+        core = c2.coordinator.core
+        assert core.max_published == 1
+        assert core.evictions == {1: 3}
+        assert core.update_bytes == 2 * protocol.wire_bytes(meta)
+        # the worker's retried publish is a bit-identical dup
+        r, _ = c2.rpc(pub, payload)
+        assert r["dup"] is True and core.dup_mismatches == 0
+        # and the barrier over the replayed store still serves pulls
+        r, blob = c2.rpc(
+            {"t": "pull", "worker": 0, "step": 1, "timeout_s": 5.0}
+        )
+        assert r["ready"] is True
+        parts = protocol.unpack_parts(r["parts"], blob)
+        got = protocol.decode_tree(
+            parts[0][0]["meta"], parts[0][1], {"x": jnp.zeros(6)}
+        )
+        np.testing.assert_array_equal(got["x"], np.arange(6.0))
+
+
+def test_wal_tolerates_torn_tail(tmp_path):
+    """A SIGKILL can truncate the final record; replay must stop there
+    instead of exploding (the op was never acked, so it gets retried)."""
+    path = str(tmp_path / "w.wal")
+    wal = WriteAheadLog(path)
+    wal.append({"t": "report", "worker": 0, "step": 1, "dur_s": 0.5}, b"")
+    wal.append({"t": "bye", "worker": 0, "reason": "done"}, b"xyz")
+    wal.close()
+    with open(path, "rb") as f:
+        raw = f.read()
+    with open(path, "wb") as f:
+        f.write(raw[:-2])  # tear the tail
+    records = list(WriteAheadLog.iter_records(path))
+    assert len(records) == 1
+    assert records[0][0]["t"] == "report"
+
+
+def test_wal_persists_dup_mismatch_counter(tmp_path):
+    """A detected replay divergence must survive a shard respawn: the
+    determinism tripwire is logged as a payload-free marker and restored
+    by WAL replay (a crashed shard must not launder a real divergence)."""
+    from repro.runtime.broker import BrokerCore
+
+    path = str(tmp_path / "w.wal")
+    meta, payload = protocol.encode_tree({"x": jnp.arange(4.0)})
+    meta2, payload2 = protocol.encode_tree({"x": jnp.arange(4.0) + 1})
+    core = BrokerCore(dict(JOB))
+    core.attach_wal(path)
+    h = {"t": "publish", "worker": 0, "step": 1, "meta": meta}
+    core.handle(h, payload)
+    core.handle({**h, "meta": meta2}, payload2)  # diverging replay
+    assert core.dup_mismatches == 1
+    core._wal.close()
+    core2 = BrokerCore(dict(JOB))
+    core2.attach_wal(path)
+    assert core2.dup_mismatches == 1  # survived the "respawn"
+
+
+def test_wal_truncates_torn_tail_before_appending(tmp_path):
+    """The torn tail must be CUT before new records are appended —
+    otherwise a record written after the garbage is unreachable to the
+    next replay, and a second crash silently loses acked mutations."""
+    from repro.runtime.broker import BrokerCore
+
+    path = str(tmp_path / "w.wal")
+    wal = WriteAheadLog(path)
+    wal.append({"t": "report", "worker": 0, "step": 1, "dur_s": 0.5}, b"")
+    wal.append({"t": "bye", "worker": 0, "reason": "done"}, b"xyz")
+    wal.close()
+    with open(path, "rb") as f:
+        raw = f.read()
+    with open(path, "wb") as f:
+        f.write(raw[:-2])  # first crash: torn tail
+    core = BrokerCore(dict(JOB))
+    assert core.attach_wal(path) == 1  # replays up to the tear
+    # an acked mutation after the respawn...
+    core.handle({"t": "report", "worker": 1, "step": 2, "dur_s": 0.1}, b"")
+    core._wal.close()
+    # ...survives the SECOND crash/replay
+    core2 = BrokerCore(dict(JOB))
+    assert core2.attach_wal(path) == 2
+    assert (2, 1) in core2.telemetry

@@ -1,0 +1,296 @@
+"""The sharded update store (repro.runtime.sharding + multi-broker runtime).
+
+Three claims, matching the PR's acceptance criteria:
+
+1. **Topology-invariance**: the SAME job converges bit-identically for
+   ``n_brokers in {1, 2, 4}`` — sharding changes where bytes live, never
+   what any worker computes (per-leaf summation order is fixed because
+   each leaf is owned by exactly one shard).
+2. **Per-shard accounting**: what each broker shard measures for published
+   updates equals what the simulator-side accountant
+   (``sharding.predict_shard_nbytes``, same ``leaf_nbytes`` formula)
+   charges for the same updates — §10's invariant, sharded.
+3. **Shard crash recovery**: SIGKILL of a broker shard mid-run →
+   supervisor respawn at the pinned port, WAL replay, and ZERO replay
+   mismatches pool-wide.
+
+Plus hypothesis property tests for the leaf-key → shard partitioner
+(total, deterministic/order-independent, balanced within the
+list-scheduling bound) on random key sets and on the concrete PMF/LR
+leaf sets.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.runtime import build_workload, protocol, run_job
+from repro.runtime import sharding
+
+from runtime_harness import (
+    SMALL_P as P,
+    SMALL_STEPS as STEPS,
+    final_params,
+    reference_updates,
+    small_pmf_cfg,
+)
+
+SHARD_COUNTS = (1, 2, 4)
+
+
+@pytest.fixture(scope="module")
+def sharded_runs(tmp_path_factory):
+    """One small PMF job per shard count, shared seed, retained updates."""
+    runs = {}
+    for nb in SHARD_COUNTS:
+        tmp = tmp_path_factory.mktemp(f"faas_nb{nb}")
+        cfg = small_pmf_cfg(tmp / "job", n_brokers=nb, retain_updates=True)
+        runs[nb] = (cfg, run_job(cfg))
+    return runs
+
+
+# -- 1. bit-exact equivalence across shard counts -----------------------------
+
+
+def test_final_params_bit_identical_across_shard_counts(sharded_runs):
+    ref_cfg, ref_res = sharded_runs[1]
+    assert ref_res["steps"] == STEPS
+    for nb in SHARD_COUNTS[1:]:
+        cfg, res = sharded_runs[nb]
+        assert res["steps"] == STEPS and res["final_pool"] == P
+        assert res["dup_mismatches"] == 0
+        for w in range(P):
+            s_ref, p_ref = final_params(ref_cfg, w)
+            s_nb, p_nb = final_params(cfg, w)
+            assert s_ref == s_nb == STEPS
+            for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_nb)):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"worker {w} final params diverged at "
+                    f"n_brokers={nb}",
+                )
+
+
+def test_sharded_updates_bit_identical_to_core_isp_reference(sharded_runs):
+    """The merged per-shard dump reassembles exactly the reference updates
+    — slicing + WAL + re-merge loses nothing."""
+    ref, final = reference_updates()
+    for nb in SHARD_COUNTS[1:]:
+        _cfg, res = sharded_runs[nb]
+        pub = {(u["worker"], u["step"]): u["update"]
+               for u in res["updates"]}
+        assert len(pub) == P * STEPS
+        for (w, t), sig in sorted(ref.items()):
+            for a, b in zip(
+                jax.tree.leaves(sig), jax.tree.leaves(pub[(w, t)])
+            ):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"n_brokers={nb} worker {w} step {t}",
+                )
+
+
+def test_billed_topology_matches_shard_count(sharded_runs):
+    for nb, (_cfg, res) in sharded_runs.items():
+        assert res["n_brokers"] == nb
+        assert res["bill"]["n_redis"] == nb
+        # more shards -> strictly larger always-on infra bill at equal wall
+        assert res["bill"]["infra_cost"] > 0
+    # wire bytes are topology-invariant (same updates, same codec)
+    totals = {nb: res["wire_bytes_total"]
+              for nb, (_c, res) in sharded_runs.items()}
+    assert len(set(totals.values())) == 1, totals
+
+
+# -- 2. broker-measured == simulator-accounted, per shard ---------------------
+
+
+def test_per_shard_bytes_measured_equals_accounted(sharded_runs):
+    from runtime_harness import SMALL_PMF_WCFG
+
+    wl = build_workload("pmf", dict(SMALL_PMF_WCFG))
+    for nb, (_cfg, res) in sharded_runs.items():
+        assignment = sharding.tree_assignment(wl.params0, nb)
+        expect = [0] * nb
+        for u in res["updates"]:
+            per_shard = sharding.predict_shard_nbytes(
+                u["update"], assignment, nb
+            )
+            for s in range(nb):
+                expect[s] += per_shard[s]
+        measured = res["broker_update_bytes_per_shard"]
+        assert measured == expect, f"n_brokers={nb}"
+        # and the per-shard split sums to the telemetry total
+        assert sum(measured) == res["wire_bytes_total"]
+
+
+# -- 3. broker-shard SIGKILL -> respawn + WAL replay --------------------------
+
+
+def test_sigkill_broker_shard_respawns_with_zero_replay_mismatches(tmp_path):
+    res = run_job(
+        small_pmf_cfg(
+            tmp_path / "job",
+            n_brokers=2,
+            total_steps=14,
+            checkpoint_every=4,
+            kill_broker_at_step=(1, 6),
+            deadline_s=300.0,
+        )
+    )
+    # the kill really happened on the broker, not a worker
+    assert len(res["broker_respawns"]) >= 1
+    ev = res["broker_respawns"][0]
+    assert ev["shard"] == 1
+    assert ev["exit_code"] == -9  # SIGKILL
+    # the workers rode out the gap on RPC retries: the WAL replay restored
+    # every acked publish, retried ones dup-checked bit-identical
+    assert res["dup_mismatches"] == 0
+    assert res["steps"] == 14
+    assert res["final_pool"] == P
+    assert res["invariant_max_err"] == 0.0
+    assert res["history"][-1]["loss"] < res["history"][0]["loss"]
+
+
+def test_reused_run_dir_does_not_replay_previous_jobs_wal(tmp_path):
+    """A fresh job in a reused run_dir must start its broker shards EMPTY
+    (a previous job's WAL would pre-fill barriers with stale updates and
+    pre-install old evictions) — while a respawn WITHIN the job still
+    replays this job's WAL."""
+    import os
+
+    from repro.runtime.broker import WriteAheadLog
+    from repro.runtime.supervisor import Supervisor
+
+    cfg = small_pmf_cfg(tmp_path / "job", n_brokers=1)
+    sup = Supervisor(cfg)
+    os.makedirs(cfg.run_dir)
+    bdir = os.path.join(cfg.run_dir, "broker")
+    os.makedirs(bdir)
+    # plant a "previous job's" WAL with a step-3 publish
+    stale = WriteAheadLog(os.path.join(bdir, "shard00.wal"))
+    stale.append({"t": "publish", "worker": 0, "step": 3, "meta": []}, b"")
+    stale.close()
+    try:
+        sup._start_brokers()
+        resp, _ = sup._rpc({"t": "poll", "since": 1})
+        assert resp["max_published"] == 0  # stale WAL was discarded
+        # this job's own mutations DO replay across a shard respawn
+        sup._rpc({"t": "publish", "worker": 0, "step": 2, "meta": []})
+        sup.shards[0].proc.kill()
+        sup.shards[0].proc.wait(timeout=10)
+        sup._reap_brokers()
+        assert len(sup.broker_respawns) == 1
+        resp, _ = sup._rpc({"t": "poll", "since": 1})
+        assert resp["max_published"] == 2
+    finally:
+        for conn in sup._conns:
+            if conn is not None:
+                conn.close()
+        for bs in sup.shards:
+            if bs.proc is not None:
+                bs.proc.kill()
+
+
+# -- partitioner property tests -----------------------------------------------
+
+
+_KEYS = st.lists(
+    st.integers(min_value=0, max_value=10_000).map(lambda i: f"leaf/{i}"),
+    min_size=1, max_size=64,
+).map(lambda ks: sorted(set(ks)))
+
+
+@settings(max_examples=60)
+@given(
+    keys=_KEYS,
+    n_shards=st.integers(min_value=1, max_value=9),
+    size_seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_partitioner_total_and_in_range(keys, n_shards, size_seed):
+    """Every key is owned by exactly one shard, in [0, n_shards)."""
+    rng = np.random.RandomState(size_seed % 2**31)
+    sizes = [int(rng.randint(1, 1 << 20)) for _ in keys]
+    a = sharding.assign_shards(keys, sizes, n_shards)
+    assert sorted(a) == list(keys)  # exactly the input keys, once each
+    assert all(0 <= s < n_shards for s in a.values())
+
+
+@settings(max_examples=60)
+@given(
+    keys=_KEYS,
+    n_shards=st.integers(min_value=1, max_value=9),
+    size_seed=st.integers(min_value=0, max_value=2**31 - 1),
+    perm_seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_partitioner_deterministic_and_order_independent(
+    keys, n_shards, size_seed, perm_seed
+):
+    """The assignment is a pure function of the (key, size) multiset —
+    independent of input order and of anything process-local (no salted
+    ``hash``), so every worker and the supervisor agree, and a scale-in
+    of the WORKER pool (which is not even an input) cannot move keys."""
+    rng = np.random.RandomState(size_seed % 2**31)
+    sizes = {k: int(rng.randint(1, 1 << 20)) for k in keys}
+    a1 = sharding.assign_shards(keys, [sizes[k] for k in keys], n_shards)
+    perm = list(keys)
+    np.random.RandomState(perm_seed % 2**31).shuffle(perm)
+    a2 = sharding.assign_shards(perm, [sizes[k] for k in perm], n_shards)
+    assert a1 == a2
+    # recomputation (a respawned worker's view) is identical too
+    assert a1 == sharding.assign_shards(
+        keys, [sizes[k] for k in keys], n_shards
+    )
+
+
+@settings(max_examples=60)
+@given(
+    keys=_KEYS,
+    n_shards=st.integers(min_value=1, max_value=9),
+    size_seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_partitioner_balance_bound(keys, n_shards, size_seed):
+    """Least-loaded greedy bound: max shard load <= total/n + max item."""
+    rng = np.random.RandomState(size_seed % 2**31)
+    sizes = [int(rng.randint(1, 1 << 20)) for _ in keys]
+    a = sharding.assign_shards(keys, sizes, n_shards)
+    load = [0] * n_shards
+    for k, sz in zip(keys, sizes):
+        load[a[k]] += sz
+    assert max(load) <= sharding.shard_bytes_bound(sizes, n_shards) + 1e-9
+
+
+@pytest.mark.parametrize("workload,wcfg", [
+    ("pmf", {"n_users": 64, "n_movies": 80, "n_ratings": 1000, "rank": 4,
+             "batch_size": 32}),
+    ("lr", {"n_samples": 512, "batch_size": 64}),
+])
+def test_partitioner_on_real_leaf_sets(workload, wcfg):
+    """The concrete PMF/LR parameter templates: total, balanced within
+    bound at every practical shard count, and consistent with what the
+    worker's encoder actually ships to each shard."""
+    wl = build_workload(workload, wcfg)
+    keys = protocol.tree_keys(wl.params0)
+    leaves = jax.tree_util.tree_leaves(wl.params0)
+    sizes = [int(np.asarray(x).size * np.asarray(x).dtype.itemsize)
+             for x in leaves]
+    for nb in (1, 2, 3, 4, 8):
+        a = sharding.tree_assignment(wl.params0, nb)
+        assert sorted(a) == sorted(keys)
+        load = [0] * nb
+        for k, sz in zip(keys, sizes):
+            load[a[k]] += sz
+        assert max(load) <= sharding.shard_bytes_bound(sizes, nb)
+        # the two big PMF embedding matrices must not share a shard
+        if workload == "pmf" and nb >= 2:
+            assert len(set(a.values())) == 2
+        # encoder slices agree with the assignment: every leaf's meta
+        # lands on exactly the assigned shard
+        per_shard, _ = sharding.encode_tree_sharded(wl.params0, a, nb)
+        for s, (meta, _parts) in enumerate(per_shard):
+            assert all(a[m["k"]] == s for m in meta)
+        assert sum(len(meta) for meta, _ in per_shard) == len(keys)

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import json
 import os
+from typing import Optional
 
 from benchmarks.common import (
     lr_batch_fn,
@@ -60,6 +61,16 @@ SWEEP_WCFG = {
     "rank": 32,
     "batch_size": 1024,
 }
+# PMF has exactly TWO leaves, so without splitting every shard past the
+# second owns zero update bytes and the sweep silently stops measuring —
+# split leaves denser than 128 KiB into chunks (topology-independent:
+# wire bytes stay bit-identical across every n_brokers row)
+SWEEP_SPLIT_BYTES = 128 * 1024
+# the transport sweep: the SAME store-bound job over each update-path
+# transport x shard count — the zero-copy claim of DESIGN.md §12 as a
+# measured number, with bit-identical bytes/params across every cell
+TRANSPORT_SWEEP = ("tcp", "shm")
+TRANSPORT_SWEEP_BROKERS = (1, 2)
 
 
 def _run(kind: str, with_tuner: bool) -> dict:
@@ -79,6 +90,38 @@ def _run(kind: str, with_tuner: bool) -> dict:
         )
     tag = "tuned" if with_tuner else "fixed"
     return summarize(f"{kind}_{tag}", res)
+
+
+def _phase_stats(history: list) -> tuple[dict, dict]:
+    """Per-phase mean and {p50, p95} over a run's per-step phase rows —
+    tail percentiles make transport wins visible that a mean smears
+    (a single slow barrier wakeup hides in the mean, not in the p95)."""
+    import numpy as np
+
+    phases = [r["phase"] for r in history if r.get("phase")]
+    if not phases:
+        return {}, {}
+    keys = list(phases[0])
+    vals = {
+        k: [p[k] for p in phases if p.get(k) is not None] for k in keys
+    }
+    mean = {k: float(np.mean(v)) for k, v in vals.items() if v}
+    quant = {
+        k: {
+            "p50": float(np.percentile(v, 50)),
+            "p95": float(np.percentile(v, 95)),
+        }
+        for k, v in vals.items()
+        if v
+    }
+    return mean, quant
+
+
+def _steady(history: list) -> list:
+    """Drop the compile/warm-up step (step 1): its ~3 s XLA compile is a
+    cold-start constant, not a step-time sample — with it in, the mean is
+    ~2x the steady state and every comparison is noise-dominated."""
+    return [r for r in history if r["step"] > 1]
 
 
 def _run_live() -> dict:
@@ -159,20 +202,34 @@ def _run_live() -> dict:
         tuner=tuner(LIVE_P, interval=2.0),
     )
 
-    # symmetric step-time comparison: the live mean includes the pool-wide
-    # barrier stalls of invocation-boundary cold starts (a respawning peer
-    # blocks everyone), so the predicted mean must include the modelled
-    # stall rounds too — same cold-start constant the bill charges
-    predicted_step = (
+    # symmetric step-time comparison, steady state on BOTH sides: the
+    # measured mean drops the compile/warm-up step (step 1), so the
+    # predicted mean drops the first cold-start round and its step too —
+    # later invocation-boundary stalls stay in both (a respawning peer
+    # blocks the whole pool)
+    n_rec = len(simres.records)
+    predicted_step_incl = (
         simres.total_wall_s + COLD_START_S * inv_rounds
-    ) / max(len(simres.records), 1)
+    ) / max(n_rec, 1)
+    predicted_step = (
+        simres.total_wall_s * max(n_rec - 1, 1) / max(n_rec, 1)
+        + COLD_START_S * max(inv_rounds - 1, 0)
+    ) / max(n_rec - 1, 1)
+    steady = _steady(live["history"])
+    measured_steady = (
+        sum(r["dur_s"] for r in steady) / len(steady) if steady else None
+    )
+    phase_mean, phase_quant = _phase_stats(steady)
     payload = {
         "workload": dict(wl.cfg),
         "n_workers": LIVE_P,
         "steps": LIVE_STEPS,
         "isp_v": job.isp_v,
         "live": {
-            "measured_step_s_mean": live["measured_step_s"],
+            # steady state (warm-up step excluded); the inclusive mean is
+            # kept alongside for the cost/wall narratives it belongs to
+            "measured_step_s_mean": measured_steady,
+            "measured_step_s_mean_incl_warmup": live["measured_step_s"],
             "wall_s": live["wall_s"],
             "faas_cost_usd": live["bill"]["total"],
             "worker_seconds": live["bill"]["worker_seconds"],
@@ -184,9 +241,13 @@ def _run_live() -> dict:
             "wire_bytes_total": live["wire_bytes_total"],
             "wire_bytes_by_scheme": wire_bytes_by_scheme,
             "invariant_max_err": live["invariant_max_err"],
-            # per-phase data-path breakdown (mean seconds per step), so a
-            # future regression is attributable to encode/wire/decode/compute
-            "phase_s_mean": live["phase_s_mean"],
+            # per-phase data-path breakdown (steady-state seconds per
+            # step) with tail percentiles, so a future regression is
+            # attributable to encode/wire/decode/compute AND visible in
+            # the tail even when the mean hides it
+            "phase_s_mean": phase_mean,
+            "phase_s_quantiles": phase_quant,
+            "phase_s_mean_incl_warmup": live["phase_s_mean"],
             # measured loss/pool trajectory — fig7/fig8-style time-to-loss
             # and cost-to-loss curves from a LIVE run instead of the model
             "history": [
@@ -197,6 +258,7 @@ def _run_live() -> dict:
         },
         "simulated": {
             "predicted_step_s_mean": predicted_step,
+            "predicted_step_s_mean_incl_warmup": predicted_step_incl,
             "modelled_wall_s": simres.total_wall_s,
             "cold_start_s": COLD_START_S,
             "invocation_rounds": inv_rounds,
@@ -206,14 +268,29 @@ def _run_live() -> dict:
         },
         "ratios": {
             "step_time_measured_over_predicted": (
-                (live["measured_step_s"] or 0.0) / max(predicted_step, 1e-12)
+                (measured_steady or 0.0) / max(predicted_step, 1e-12)
+            ),
+            "step_time_measured_over_predicted_incl_warmup": (
+                (live["measured_step_s"] or 0.0)
+                / max(predicted_step_incl, 1e-12)
             ),
             "cost_measured_over_predicted": (
                 live["bill"]["total"] / max(simres.total_cost, 1e-12)
             ),
         },
     }
-    payload["shard_sweep"] = _run_shard_sweep()
+    shard_sweep = _run_shard_sweep()
+    payload["shard_sweep"] = shard_sweep
+    # the tcp x {1,2} transport cells are byte-identical reruns of the
+    # shard sweep's first two rows — reuse them instead of paying for
+    # two more live multi-process jobs
+    payload["transport_sweep"] = _run_transport_sweep(
+        tcp_rows={
+            r["n_brokers"]: r
+            for r in shard_sweep["rows"]
+            if r["n_brokers"] in TRANSPORT_SWEEP_BROKERS
+        }
+    )
     root = os.path.join(os.path.dirname(__file__), "..")
     with open(os.path.join(root, "BENCH_runtime.json"), "w") as f:
         json.dump(payload, f, indent=1)
@@ -221,61 +298,122 @@ def _run_live() -> dict:
     return payload
 
 
-def _run_shard_sweep() -> dict:
-    """The same deterministic store-bound PMF job, live, at each
-    update-store shard count (``runtime.sharding``): auto-tuner off and a
-    single invocation per worker so every run ships the IDENTICAL update
-    stream — wire bytes are bit-equal across the sweep, and the only
-    things that move are the wire phase (broker-side serialization, now
-    split and parallelized across shard processes) and the
-    ``n_redis == n_brokers`` infra bill."""
+def _run_store_bound(n_brokers: int, transport: str) -> dict:
+    """One deterministic store-bound PMF run: auto-tuner off and a single
+    invocation per worker, so every (transport, n_brokers) cell ships the
+    IDENTICAL update stream — wire bytes and final parameters must be
+    bit-equal across cells, and the only things that move are the wire
+    phase and the ``n_redis == n_brokers`` infra bill."""
     import tempfile
 
-    from repro.runtime import FaaSJobConfig, run_job
+    from repro.runtime import FaaSJobConfig, final_params_digest, run_job
 
-    rows = []
-    for nb in SWEEP_BROKERS:
-        job = FaaSJobConfig(
-            run_dir=tempfile.mkdtemp(prefix=f"bench_shards{nb}_"),
-            workload="pmf",
-            workload_cfg=dict(SWEEP_WCFG),
-            n_workers=SWEEP_P,
-            total_steps=SWEEP_STEPS,
-            checkpoint_every=100,
-            optimizer="nesterov",
-            lr=0.1,
-            isp_v=0.7,
-            wire_scheme="dense",  # store-bound: ship full dense updates
-            n_brokers=nb,
-            autotune=False,
-            deadline_s=480.0,
-        )
-        live = run_job(job)
-        ph = live["phase_s_mean"] or {}
-        rows.append(
-            {
-                "n_brokers": nb,
-                "measured_step_s_mean": live["measured_step_s"],
-                "wire_phase_s_mean": ph.get("wire"),
-                "phase_s_mean": ph,
-                "wire_bytes_total": live["wire_bytes_total"],
-                "update_bytes_per_shard": live[
-                    "broker_update_bytes_per_shard"
-                ],
-                "dup_mismatches": live["dup_mismatches"],
-                "faas_cost_usd": live["bill"]["total"],
-                "infra_cost_usd": live["bill"]["infra_cost"],
-                "n_redis_billed": live["bill"]["n_redis"],
-            }
-        )
+    job = FaaSJobConfig(
+        run_dir=tempfile.mkdtemp(prefix=f"bench_{transport}{n_brokers}_"),
+        workload="pmf",
+        workload_cfg=dict(SWEEP_WCFG),
+        n_workers=SWEEP_P,
+        total_steps=SWEEP_STEPS,
+        checkpoint_every=100,
+        optimizer="nesterov",
+        lr=0.1,
+        isp_v=0.7,
+        wire_scheme="dense",  # store-bound: ship full dense updates
+        n_brokers=n_brokers,
+        transport=transport,
+        shard_split_bytes=SWEEP_SPLIT_BYTES,
+        autotune=False,
+        deadline_s=480.0,
+    )
+    live = run_job(job)
+    steady = _steady(live["history"])
+    phase_mean, phase_quant = _phase_stats(steady)
+    wire_q = phase_quant.get("wire", {})
+    return {
+        "n_brokers": n_brokers,
+        "transport": transport,
+        "measured_step_s_mean": (
+            sum(r["dur_s"] for r in steady) / len(steady) if steady
+            else live["measured_step_s"]
+        ),
+        "wire_phase_s_mean": phase_mean.get("wire"),
+        "wire_phase_s_p50": wire_q.get("p50"),
+        "wire_phase_s_p95": wire_q.get("p95"),
+        "phase_s_mean": phase_mean,
+        "phase_s_quantiles": phase_quant,
+        "wire_bytes_total": live["wire_bytes_total"],
+        "update_bytes_per_shard": live["broker_update_bytes_per_shard"],
+        "dup_mismatches": live["dup_mismatches"],
+        "faas_cost_usd": live["bill"]["total"],
+        "infra_cost_usd": live["bill"]["infra_cost"],
+        "n_redis_billed": live["bill"]["n_redis"],
+        "final_params_sha256": final_params_digest(job),
+    }
+
+
+def _sweep_header() -> dict:
     return {
         "workload": dict(SWEEP_WCFG),
         "n_workers": SWEEP_P,
         "steps": SWEEP_STEPS,
         "wire_scheme": "dense",
+        # PMF's two leaves are split into ~128 KiB chunks so every shard
+        # owns bytes (topology-independent: bytes identical across rows)
+        "shard_split_bytes": SWEEP_SPLIT_BYTES,
         # shard processes only parallelize up to the host's spare cores
         "host_cpus": os.cpu_count(),
+    }
+
+
+def _run_shard_sweep() -> dict:
+    """The store-bound job at each update-store shard count
+    (``runtime.sharding``): the wire phase (broker-side serialization,
+    split and parallelized across shard processes) and the infra bill
+    move; the bytes may not."""
+    return {
+        **_sweep_header(),
+        "rows": [_run_store_bound(nb, "tcp") for nb in SWEEP_BROKERS],
+    }
+
+
+def _run_transport_sweep(tcp_rows: Optional[dict] = None) -> dict:
+    """The store-bound job over {tcp, shm} x n_brokers (DESIGN.md §12.4):
+    the zero-copy same-host claim as a measured number.  Every cell must
+    ship bit-identical wire bytes, per-shard splits, and final params —
+    asserted here, recorded in the payload.  ``tcp_rows`` (by broker
+    count) lets the caller reuse the shard sweep's tcp runs instead of
+    repeating them."""
+    tcp_rows = tcp_rows or {}
+    rows = [
+        tcp_rows[nb] if tr == "tcp" and nb in tcp_rows
+        else _run_store_bound(nb, tr)
+        for tr in TRANSPORT_SWEEP
+        for nb in TRANSPORT_SWEEP_BROKERS
+    ]
+    ref = rows[0]
+    by = {(r["transport"], r["n_brokers"]): r for r in rows}
+    bit_identical = all(
+        r["wire_bytes_total"] == ref["wire_bytes_total"]
+        and r["final_params_sha256"] == ref["final_params_sha256"]
+        and sum(r["update_bytes_per_shard"]) == int(r["wire_bytes_total"])
+        # the transport may never MOVE bytes between shards either
+        and r["update_bytes_per_shard"]
+        == by[("tcp", r["n_brokers"])]["update_bytes_per_shard"]
+        and r["dup_mismatches"] == 0
+        for r in rows
+    )
+    shm_wire_over_tcp = {
+        str(nb): (
+            by[("shm", nb)]["wire_phase_s_mean"]
+            / max(by[("tcp", nb)]["wire_phase_s_mean"], 1e-12)
+        )
+        for nb in TRANSPORT_SWEEP_BROKERS
+    }
+    return {
+        **_sweep_header(),
         "rows": rows,
+        "bit_identical_across_cells": bit_identical,
+        "shm_wire_over_tcp": shm_wire_over_tcp,
     }
 
 
@@ -329,5 +467,20 @@ def report(out: dict) -> list[str]:
                 f"fig6,shard_sweep_b{row['n_brokers']},{w*1e6:.0f},"
                 f"wire={w*1e3:.1f}ms,step={row['measured_step_s_mean']*1e3:.0f}ms,"
                 f"n_redis={row['n_redis_billed']}"
+            )
+        ts = rt.get("transport_sweep") or {}
+        for row in ts.get("rows", []):
+            w = row["wire_phase_s_mean"] or 0.0
+            p95 = row["wire_phase_s_p95"] or 0.0
+            lines.append(
+                f"fig6,transport_{row['transport']}_b{row['n_brokers']},"
+                f"{w*1e6:.0f},wire={w*1e3:.1f}ms,p95={p95*1e3:.1f}ms,"
+                f"step={row['measured_step_s_mean']*1e3:.0f}ms"
+            )
+        for nb, ratio in (ts.get("shm_wire_over_tcp") or {}).items():
+            lines.append(
+                f"fig6,shm_wire_over_tcp_b{nb},{ratio*1e6:.0f},"
+                f"shm/tcp={ratio:.2f}x,bit_identical="
+                f"{ts.get('bit_identical_across_cells')}"
             )
     return lines

@@ -1,9 +1,10 @@
-"""CI wire-bytes regression guard (DESIGN.md §10.5, §11.5).
+"""CI wire-bytes regression guard (DESIGN.md §10.5, §11.5, §12.5).
 
-Runs the PMF smoke workload on the LIVE FaaS runtime — once single-broker
-and once sharded over two broker processes (``--n-brokers 2``) — plus the
-simulator's cost model for each topology, then compares against the
-checked-in baseline (``benchmarks/wire_baseline.json``):
+Runs the PMF smoke workload on the LIVE FaaS runtime — single-broker,
+sharded over two broker processes (``--n-brokers 2``), and sharded over
+the shared-memory transport (``--transport shm``) — plus the simulator's
+cost model for each topology, then compares against the checked-in
+baseline (``benchmarks/wire_baseline.json``):
 
 * ``wire_bytes_total`` — bit-deterministic at a fixed seed with the
   auto-tuner off (same updates -> same nnz -> same codec bytes), so ANY
@@ -12,10 +13,15 @@ checked-in baseline (``benchmarks/wire_baseline.json``):
   (the leaf-key partition moves bytes between shards, it never changes
   them) and its per-shard broker-measured split must sum to the total —
   the topology-invariance guard;
-* ``cost_measured_over_predicted`` (and its ``_sharded`` twin, whose
-  prediction bills ``n_redis == 2``) — the live/model cost calibration; a
-  >10% regression over the baseline (which carries documented headroom for
-  host variance) means the live data path got structurally slower.
+* the SHM run's accounted wire bytes, per-shard split AND final
+  parameters must be bit-identical to the TCP runs' — the transport
+  must never change a byte or a bit of the math (§12's invariant);
+* ``cost_measured_over_predicted`` (its ``_sharded`` twin billing
+  ``n_redis == 2``, and its ``_shm`` twin on the same topology) — the
+  live/model cost calibration; a >10% regression over the baseline
+  (which carries documented headroom for host variance) means the live
+  data path got structurally slower.  The gate applies to BOTH
+  transports.
 
 Exit codes: 0 pass, 1 regression, 2 could not run.
 
@@ -50,7 +56,7 @@ SMOKE_SHARDS = 2  # the sharded leg of the guard
 COLD_START_S = 2.0  # same runtime-init constant as benchmarks/fig6
 
 
-def run_smoke(n_brokers: int = 1) -> dict:
+def run_smoke(n_brokers: int = 1, transport: str = "tcp") -> dict:
     from functools import partial
 
     from repro import optim
@@ -59,10 +65,14 @@ def run_smoke(n_brokers: int = 1) -> dict:
     from repro.core.simulator import (
         Platform, ServerlessSimulator, SimulatorConfig,
     )
-    from repro.runtime import FaaSJobConfig, build_workload, run_job
+    from repro.runtime import (
+        FaaSJobConfig, build_workload, final_params_digest, run_job,
+    )
 
     job = FaaSJobConfig(
-        run_dir=tempfile.mkdtemp(prefix=f"wire_guard{n_brokers}_"),
+        run_dir=tempfile.mkdtemp(
+            prefix=f"wire_guard_{transport}{n_brokers}_"
+        ),
         workload="pmf",
         workload_cfg=dict(SMOKE_WCFG),
         n_workers=SMOKE_P,
@@ -72,6 +82,7 @@ def run_smoke(n_brokers: int = 1) -> dict:
         lr=0.08,
         isp_v=0.7,
         n_brokers=n_brokers,
+        transport=transport,
         autotune=False,
         deadline_s=240.0,
     )
@@ -106,9 +117,11 @@ def run_smoke(n_brokers: int = 1) -> dict:
 
     simres = sim.run(batch_fn, wl.cfg["batch_size"], SMOKE_STEPS)
     return {
+        "transport": transport,
         "wire_bytes_total": float(live["wire_bytes_total"]),
         "update_bytes_per_shard": live["broker_update_bytes_per_shard"],
         "dup_mismatches": live["dup_mismatches"],
+        "final_params_sha256": final_params_digest(job),
         "cost_measured_over_predicted": (
             live["bill"]["total"] / max(simres.total_cost, 1e-12)
         ),
@@ -133,6 +146,7 @@ def main() -> int:
     try:
         single = run_smoke(n_brokers=1)
         sharded = run_smoke(n_brokers=SMOKE_SHARDS)
+        shm = run_smoke(n_brokers=SMOKE_SHARDS, transport="shm")
     except Exception as e:  # noqa: BLE001 - CI wants a clean signal
         print(f"wire_guard: smoke run failed: {e}", file=sys.stderr)
         return 2
@@ -146,32 +160,62 @@ def main() -> int:
         "cost_measured_over_predicted_sharded": (
             sharded["cost_measured_over_predicted"]
         ),
+        "wire_bytes_total_shm": shm["wire_bytes_total"],
+        "cost_measured_over_predicted_shm": (
+            shm["cost_measured_over_predicted"]
+        ),
     }
-    print(json.dumps({"single": single, "sharded": sharded}, indent=1))
+    print(json.dumps(
+        {"single": single, "sharded": sharded, "shm": shm}, indent=1
+    ))
 
-    # structural invariants need no baseline: the sharded topology must
-    # ship bit-identical bytes, split exactly across its shards, with a
-    # clean replay ledger
+    # structural invariants need no baseline: neither the topology nor the
+    # transport may change a byte (or a bit of the final parameters), the
+    # per-shard split must be exact, and the replay ledger clean
     ok = True
-    if sharded["wire_bytes_total"] != single["wire_bytes_total"]:
+    for name, run in (("sharded", sharded), ("shm", shm)):
+        if run["wire_bytes_total"] != single["wire_bytes_total"]:
+            print(
+                f"wire_guard: REGRESSION: {name} wire_bytes_total "
+                f"{run['wire_bytes_total']} != single-broker "
+                f"{single['wire_bytes_total']} "
+                f"({'transport' if name == 'shm' else 'topology'} "
+                "changed the bytes)",
+                file=sys.stderr,
+            )
+            ok = False
+        if sum(run["update_bytes_per_shard"]) != int(
+            run["wire_bytes_total"]
+        ):
+            print(
+                f"wire_guard: REGRESSION: {name} per-shard broker-measured "
+                f"bytes {run['update_bytes_per_shard']} do not sum to "
+                f"{run['wire_bytes_total']}",
+                file=sys.stderr,
+            )
+            ok = False
+    if shm["update_bytes_per_shard"] != sharded["update_bytes_per_shard"]:
         print(
-            "wire_guard: REGRESSION: sharded wire_bytes_total "
-            f"{sharded['wire_bytes_total']} != single-broker "
-            f"{single['wire_bytes_total']} (topology changed the bytes)",
+            "wire_guard: REGRESSION: shm per-shard split "
+            f"{shm['update_bytes_per_shard']} != tcp sharded split "
+            f"{sharded['update_bytes_per_shard']}",
             file=sys.stderr,
         )
         ok = False
-    if sum(sharded["update_bytes_per_shard"]) != int(
-        sharded["wire_bytes_total"]
-    ):
+    digests = {
+        name: run["final_params_sha256"]
+        for name, run in (("single", single), ("sharded", sharded),
+                          ("shm", shm))
+    }
+    if len(set(digests.values())) != 1:
         print(
-            "wire_guard: REGRESSION: per-shard broker-measured bytes "
-            f"{sharded['update_bytes_per_shard']} do not sum to "
-            f"{sharded['wire_bytes_total']}",
+            "wire_guard: REGRESSION: final params differ across "
+            f"transports/topologies: {digests}",
             file=sys.stderr,
         )
         ok = False
-    if sharded["dup_mismatches"] or single["dup_mismatches"]:
+    if sharded["dup_mismatches"] or single["dup_mismatches"] \
+            or shm["dup_mismatches"]:
         print("wire_guard: REGRESSION: dup_mismatches != 0",
               file=sys.stderr)
         ok = False
@@ -185,11 +229,14 @@ def main() -> int:
             "cost_measured_over_predicted_sharded": (
                 cur["cost_measured_over_predicted_sharded"] * args.headroom
             ),
+            "cost_measured_over_predicted_shm": (
+                cur["cost_measured_over_predicted_shm"] * args.headroom
+            ),
             "note": (
                 "wire_bytes_total is exact (deterministic seed, no "
-                "auto-tuner; the sharded run must match it bit-for-bit); "
-                "the cost ratios carry the --headroom factor over the "
-                "recording host's run"
+                "auto-tuner; the sharded AND shm runs must match it "
+                "bit-for-bit); the cost ratios carry the --headroom "
+                "factor over the recording host's run"
             ),
         }
         with open(BASELINE, "w") as f:
@@ -207,13 +254,24 @@ def main() -> int:
         "cost_measured_over_predicted_sharded": (
             cur["cost_measured_over_predicted_sharded"]
         ),
-        # the sharded bytes gate against the SAME baseline entry — they
-        # are required to be bit-equal to the single-broker bytes
+        "cost_measured_over_predicted_shm": (
+            cur["cost_measured_over_predicted_shm"]
+        ),
+        # both alternate-leg byte totals gate against the SAME baseline
+        # entry — they are required to be bit-equal to the single-broker
+        # bytes
         "wire_bytes_total_sharded": cur["wire_bytes_total_sharded"],
+        "wire_bytes_total_shm": cur["wire_bytes_total_shm"],
     }
     for key, val in checks.items():
-        ref = base[key.replace("wire_bytes_total_sharded",
-                               "wire_bytes_total")]
+        base_key = ("wire_bytes_total" if key.startswith("wire_bytes_total")
+                    else key)
+        if base_key not in base:
+            print(f"wire_guard: baseline missing {base_key}; re-record "
+                  "with --update", file=sys.stderr)
+            ok = False
+            continue
+        ref = base[base_key]
         limit = ref * (1.0 + TOLERANCE)
         if val > limit:
             print(

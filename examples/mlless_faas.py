@@ -35,6 +35,9 @@ def main() -> int:
     ap.add_argument("--n-brokers", type=int, default=1,
                     help="update-store shards (one broker process each; "
                     "bills n_redis == n_brokers)")
+    ap.add_argument("--transport", default="tcp", choices=("tcp", "shm"),
+                    help="worker<->broker update path: loopback TCP or "
+                    "zero-copy shared-memory rings (repro.wire.shm)")
     ap.add_argument("--run-dir", default=None)
     ap.add_argument("--no-check", action="store_true",
                     help="skip the health assertions (exploratory runs)")
@@ -45,12 +48,13 @@ def main() -> int:
         n_workers=args.workers,
         total_steps=args.steps,
         n_brokers=args.n_brokers,
+        transport=args.transport,
     )
     wc = PMF_QUICKSTART_CFG
     print(f"PMF {wc['n_users']}x{wc['n_movies']} rank {wc['rank']}, "
           f"{args.workers} worker processes, {args.steps} steps, "
-          f"{cfg.n_brokers} broker shard(s), ISP v={cfg.isp_v} "
-          f"(run dir {cfg.run_dir})")
+          f"{cfg.n_brokers} broker shard(s) over {cfg.transport}, "
+          f"ISP v={cfg.isp_v} (run dir {cfg.run_dir})")
     res = run_job(cfg)
 
     hist = res["history"]

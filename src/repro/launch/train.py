@@ -483,6 +483,7 @@ def train_faas(args) -> dict:
         wire_scheme=args.wire_scheme or "auto",
         wire_quant=args.wire_quant,
         n_brokers=getattr(args, "n_brokers", 1),
+        transport=getattr(args, "transport", "tcp"),
         autotune=args.autotune,
         tuner=AutoTunerConfig(
             sched_interval_s=args.sched_interval,
@@ -549,6 +550,10 @@ def main() -> None:
                     help="update-store shards (runtime.sharding): faas "
                     "spawns one broker process per shard; both runtimes "
                     "bill n_redis == n_brokers")
+    ap.add_argument("--transport", default="tcp", choices=("tcp", "shm"),
+                    help="faas: worker<->shard update-path channel "
+                    "(repro.wire): persistent loopback TCP or zero-copy "
+                    "shared-memory rings (same accounted bytes)")
     ap.add_argument("--run-dir", default=None,
                     help="faas: checkpoints + worker logs directory")
     args = ap.parse_args()

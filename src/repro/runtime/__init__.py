@@ -21,6 +21,7 @@ from repro.runtime.supervisor import (  # noqa: F401
     FaaSJobConfig,
     PMF_QUICKSTART_CFG,
     Supervisor,
+    final_params_digest,
     pmf_quickstart_config,
     run_job,
 )

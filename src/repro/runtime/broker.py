@@ -26,6 +26,15 @@ Responsibilities of every shard:
   a SIGKILL loses at most unacknowledged requests, which the workers'
   idempotent RPC layer retries.
 
+The request/response loop itself is *transport-generic* (DESIGN.md §12):
+the same handler loop serves a persistent TCP connection (one thread per
+socket) or a shared-memory ring-buffer channel (one thread per
+``wire.shm`` segment, attached on a ``shm_serve`` control request from
+the supervisor).  ``BrokerCore`` never sees the difference — headers,
+payload bytes, WAL records and byte accounting are identical on both
+transports by construction.  The supervisor's control plane (poll /
+evict / shutdown / shm_serve itself) always rides TCP.
+
 The *coordinator* (shard 0) additionally owns everything that must be
 globally consistent — the paper's messaging-VM role:
 
@@ -539,22 +548,37 @@ def _mean(xs) -> Optional[float]:
     return sum(vals) / len(vals) if vals else None
 
 
-# -- TCP server shell ---------------------------------------------------------
+# -- transport-generic serve loop ---------------------------------------------
+
+
+def _account_request(core: BrokerCore, header: dict, payload: bytes,
+                     bytes_out: int) -> None:
+    """Identical byte accounting on every transport: the framed request
+    size a TCP socket would have carried (8-byte length prefix + header
+    JSON + payload) — transport-private overhead (shm rids/trailers, IP
+    headers) is never counted."""
+    hdr_len = len(json.dumps(header, separators=(",", ":")))
+    core.account(header.get("t", "?"), 8 + hdr_len + len(payload), bytes_out)
 
 
 class _Handler(socketserver.BaseRequestHandler):
     def handle(self) -> None:  # one persistent connection, many requests
         core: BrokerCore = self.server.core  # type: ignore[attr-defined]
+        broker: "Broker" = self.server.broker  # type: ignore[attr-defined]
         try:
             self.request.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             while True:
                 header, payload = protocol.recv_msg(self.request)
+                if header.get("t") == "shm_serve":
+                    # transport control plane, not shard state: the shell
+                    # attaches a shared-memory segment and serves it from
+                    # a dedicated thread (idempotent per segment)
+                    resp = broker.shm_serve(header)
+                    protocol.send_msg(self.request, resp)
+                    continue
                 resp, blob = core.handle(header, payload)
                 out = protocol.send_msg(self.request, resp, blob)
-                hdr_len = len(json.dumps(header, separators=(",", ":")))
-                core.account(
-                    header.get("t", "?"), 8 + hdr_len + len(payload), out
-                )
+                _account_request(core, header, payload, out)
                 if core.shutting_down:
                     # signal process exit only AFTER the (shutdown)
                     # response reached the wire — the requester must get
@@ -571,7 +595,13 @@ class _Server(socketserver.ThreadingTCPServer):
 
 
 class Broker:
-    """Socket-server shell around ``BrokerCore``; in-thread or standalone.
+    """Server shell around ``BrokerCore``; in-thread or standalone.
+
+    Always binds a TCP port (the supervisor's control plane and the
+    default worker data path); additionally serves any number of
+    shared-memory segments handed to it via ``shm_serve`` requests —
+    one daemon thread per segment running the same handler loop the TCP
+    connections run (DESIGN.md §12.3).
 
     With ``wal_path`` the core replays any existing log BEFORE the port is
     bound (a respawned shard never serves from partial state) and appends
@@ -593,7 +623,67 @@ class Broker:
             self.replayed = self.core.attach_wal(wal_path)
         self._server = _Server((host, port), _Handler)
         self._server.core = self.core  # type: ignore[attr-defined]
+        self._server.broker = self  # type: ignore[attr-defined]
         self._thread: Optional[threading.Thread] = None
+        self._shm_threads: dict[str, threading.Thread] = {}
+        self._shm_lock = threading.Lock()
+
+    # -- shared-memory data path ----------------------------------------------
+
+    def shm_serve(self, header: dict) -> dict:
+        """Attach one ``wire.shm`` segment and serve it from a dedicated
+        thread.  Idempotent: a retried request for a segment this process
+        already serves is acked without a second (ring-resetting) attach —
+        two servers on one ring would corrupt the stream."""
+        name = str(header["seg"])
+        with self._shm_lock:
+            # dead threads (prior invocations' segments) would otherwise
+            # accumulate one entry per invocation x shard for the job's
+            # lifetime
+            self._shm_threads = {
+                n: th for n, th in self._shm_threads.items() if th.is_alive()
+            }
+            t = self._shm_threads.get(name)
+            if t is not None:
+                return {"ok": True, "seg": name, "already": True}
+            t = threading.Thread(
+                target=self._serve_shm_segment, args=(name,), daemon=True,
+                name=f"shm-{name}",
+            )
+            self._shm_threads[name] = t
+            t.start()
+        return {"ok": True, "seg": name, "already": False}
+
+    def _serve_shm_segment(self, name: str) -> None:
+        from repro.wire import shm
+
+        core = self.core
+
+        def stopping() -> bool:
+            return core.shutting_down
+
+        while not core.shutting_down:
+            try:
+                chan = shm.ShmServerChannel(name, stop=stopping)
+            except (ConnectionError, OSError, FileNotFoundError):
+                return  # segment gone (worker slot torn down)
+            try:
+                while not core.shutting_down:
+                    try:
+                        rid, header, payload = chan.recv()
+                    except shm.TornFrameError:
+                        # desynced stream (e.g. a client abandoned a
+                        # half-sent frame): heal by re-serving — the
+                        # ring reset + generation bump make the client
+                        # replay its request from a clean stream
+                        break
+                    resp, blob = core.handle(header, payload)
+                    out = chan.send(rid, resp, blob)
+                    _account_request(core, header, payload, out)
+            except (ConnectionError, OSError, TimeoutError, ValueError):
+                chan.close(mark_closed=core.shutting_down)
+                return  # peer death or shutdown: this channel is done
+            chan.close()  # torn-frame break: loop around and re-serve
 
     @property
     def addr(self) -> tuple[str, int]:
@@ -621,6 +711,11 @@ class Broker:
         if self._thread is not None:
             self._thread.join(timeout=timeout)
             joined = not self._thread.is_alive()
+        with self._shm_lock:
+            shm_threads = list(self._shm_threads.values())
+        for t in shm_threads:  # they exit within one wait slice (~50 ms)
+            t.join(timeout=timeout)
+            joined = joined and not t.is_alive()
         if self.core._wal is not None:
             self.core._wal.close()
         return joined

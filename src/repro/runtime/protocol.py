@@ -33,7 +33,10 @@ from repro.wire.codec import (  # noqa: F401
 )
 from repro.wire.framing import (  # noqa: F401
     MAX_MSG_BYTES,
+    TRANSPORTS,
     Connection,
+    Transport,
+    make_transport,
     pack_parts,
     pipelined,
     recv_msg,

@@ -27,11 +27,27 @@ across all shards.  ``predict_shard_nbytes`` is the simulator/test-side
 accountant: per-shard wire bytes through the same ``leaf_nbytes`` formula
 the encoder asserts against, so broker-measured == simulator-accounted
 bytes *per shard* by construction (§10's invariant, sharded).
+
+**Oversized-leaf splitting** (``split_bytes > 0``): a model like PMF has
+two embedding matrices and nothing else, so beyond two shards the greedy
+partition degenerates — extra shards own zero update bytes.  With a split
+threshold every leaf whose dense bytes exceed it is carved into
+fixed-size flat chunks (element counts a multiple of 8, so bitmap masks
+pack to identical totals) and the chunks are assigned independently.
+The chunking is a pure function of the parameter template and the
+threshold — NOT of the shard count — so wire bytes stay bit-identical
+across topologies, and each *element* still lives on exactly one shard
+with peers arriving in ascending worker order there: the per-element
+float32 summation order, and therefore the final parameters, remain
+bit-exact for any ``n_shards``.  ``tree_assignment`` warns when a shard
+ends up owning zero bytes (raise the shard count past the chunk count
+and the warning tells you the sweep is degenerate).
 """
 
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence
+import warnings
+from typing import Any, Iterator, Optional, Sequence
 
 import numpy as np
 
@@ -69,18 +85,74 @@ def assign_shards(
     return out
 
 
-def tree_assignment(tree: PyTree, n_shards: int) -> dict[str, int]:
+def chunk_elems(itemsize: int, split_bytes: int) -> int:
+    """Elements per chunk for a split leaf: ``split_bytes`` worth, rounded
+    down to a multiple of 8 so every chunk boundary falls on a bitmap-mask
+    byte boundary — chunked bitmap bytes sum EXACTLY to the unsplit
+    leaf's (``ceil(n/8)`` per chunk loses nothing when n % 8 == 0).
+    A pure function of (itemsize, threshold): per-leaf or per-topology
+    inputs here would break the cross-``n_shards`` byte invariance."""
+    return max((split_bytes // max(itemsize, 1)) // 8 * 8, 8)
+
+
+def iter_subleaves(
+    key: str, leaf: Any, split_bytes: int
+) -> Iterator[tuple[str, int, int]]:
+    """Yield ``(subkey, offset_elems, n_elems)`` chunks of one leaf.
+
+    A pure function of (leaf template, split_bytes) — never of the shard
+    count — so the chunking, and with it every wire byte, is identical
+    across topologies.  Unsplit leaves yield themselves with
+    ``subkey == key``.
+    """
+    a = np.asarray(leaf)
+    n = int(a.size)
+    nbytes = n * a.dtype.itemsize
+    if split_bytes <= 0 or nbytes <= split_bytes:
+        yield key, 0, n
+        return
+    step = chunk_elems(a.dtype.itemsize, split_bytes)
+    for i, off in enumerate(range(0, n, step)):
+        yield f"{key}#{i:04d}", off, min(step, n - off)
+
+
+def tree_assignment(
+    tree: PyTree, n_shards: int, split_bytes: int = 0
+) -> dict[str, int]:
     """The canonical assignment for a parameter template: keys are the
-    checkpoint-store path keys (``wire.codec.tree_keys``), weights the
-    dense leaf bytes — the quantity the balance bound is stated in."""
+    checkpoint-store path keys (``wire.codec.tree_keys``) — or their
+    ``key#chunk`` subkeys when ``split_bytes`` carves oversized leaves —
+    weights the dense bytes, the quantity the balance bound is stated in.
+
+    Warns when any shard ends up owning ZERO bytes: every update round
+    still pays that shard a round trip for nothing, and a sweep over
+    shard counts silently stops measuring anything past that point.
+    """
     import jax
 
     keys = wire_codec.tree_keys(tree)
-    sizes = [
-        int(np.asarray(leaf).size) * np.dtype(np.asarray(leaf).dtype).itemsize
-        for leaf in jax.tree_util.tree_leaves(tree)
-    ]
-    return assign_shards(keys, sizes, n_shards)
+    leaves = jax.tree_util.tree_leaves(tree)
+    subkeys: list[str] = []
+    sizes: list[int] = []
+    for key, leaf in zip(keys, leaves):
+        itemsize = np.dtype(np.asarray(leaf).dtype).itemsize
+        for subkey, _off, n in iter_subleaves(key, leaf, split_bytes):
+            subkeys.append(subkey)
+            sizes.append(n * itemsize)
+    assignment = assign_shards(subkeys, sizes, n_shards)
+    load = [0] * n_shards
+    for subkey, size in zip(subkeys, sizes):
+        load[assignment[subkey]] += size
+    empty = [s for s, b in enumerate(load) if b == 0]
+    if empty:
+        warnings.warn(
+            f"shard(s) {empty} own zero update bytes: the tree has only "
+            f"{len(subkeys)} assignable leaves/chunks for {n_shards} "
+            "shards — split oversized leaves (shard_split_bytes) or use "
+            "a leafier workload",
+            stacklevel=2,
+        )
+    return assignment
 
 
 def encode_tree_sharded(
@@ -90,14 +162,18 @@ def encode_tree_sharded(
     scheme: str = wire_codec.AUTO,
     quant: str = "none",
     with_residual: bool = False,
+    split_bytes: int = 0,
 ) -> tuple[list[tuple[list[dict], list]], Optional[PyTree]]:
     """Encode a pytree into one (meta, buffer-views) message per shard.
 
-    Leaves keep the global ``tree_keys`` order *within* each shard, so a
-    peer decoding shard by shard reassembles every leaf in a fixed order
-    regardless of ``n_shards`` — the bit-exactness across shard counts
-    rests on this.  Returns ``(per_shard, residual_tree)`` where
-    ``per_shard[s]`` feeds ``publish``/``flush`` to shard ``s`` directly.
+    Leaves (and, under ``split_bytes``, their chunks in ascending offset
+    order) keep the global ``tree_keys`` order *within* each shard, so a
+    peer decoding shard by shard reassembles every element in a fixed
+    order regardless of ``n_shards`` — the bit-exactness across shard
+    counts rests on this.  Chunk metas carry the full leaf key in ``k``
+    plus the flat element offset in ``o``; ``LeafBuffers`` is the decode
+    twin.  Returns ``(per_shard, residual_tree)`` where ``per_shard[s]``
+    feeds ``publish``/``flush`` to shard ``s`` directly.
     """
     import jax
 
@@ -108,14 +184,30 @@ def encode_tree_sharded(
     ]
     residuals: list = []
     for key, leaf in zip(keys, leaves):
-        m, parts, r = wire_codec.encode_leaf(
-            leaf, scheme=scheme, quant=quant, key=key,
-            with_residual=with_residual,
+        a = np.asarray(leaf)
+        flat = np.ascontiguousarray(a).reshape(-1)
+        res_flat: Optional[np.ndarray] = None
+        for subkey, off, n in iter_subleaves(key, leaf, split_bytes):
+            m, parts, r = wire_codec.encode_leaf(
+                flat[off: off + n] if subkey != key else leaf,
+                scheme=scheme, quant=quant, key=key,
+                with_residual=with_residual,
+            )
+            if subkey != key:
+                m["o"] = off
+            meta_s, parts_s = per_shard[assignment[subkey]]
+            meta_s.append(m)
+            parts_s.extend(parts)
+            if with_residual:
+                if subkey == key:
+                    res_flat = r.reshape(-1)
+                else:
+                    if res_flat is None:
+                        res_flat = np.zeros(flat.size, np.float32)
+                    res_flat[off: off + n] = r
+        residuals.append(
+            res_flat.reshape(a.shape) if res_flat is not None else None
         )
-        meta_s, parts_s = per_shard[assignment[key]]
-        meta_s.append(m)
-        parts_s.extend(parts)
-        residuals.append(r)
     res_tree = None
     if with_residual:
         treedef = jax.tree_util.tree_structure(tree)
@@ -129,21 +221,77 @@ def predict_shard_nbytes(
     n_shards: int,
     scheme: str = wire_codec.AUTO,
     quant: str = "none",
+    split_bytes: int = 0,
 ) -> list[int]:
     """Simulator-side per-shard accounting: wire bytes each shard WOULD
     measure for this tree — the per-leaf accountant is the codec's own
     ``predict_leaf_nbytes`` (same ``leaf_nbytes`` formula + ``auto``
-    resolution the encoder asserts against), just bucketed by the
-    assignment, so ``== broker-measured`` per shard by construction."""
+    resolution the encoder asserts against), chunked and bucketed by the
+    same assignment the encoder uses, so ``== broker-measured`` per shard
+    by construction."""
     import jax
 
     keys = wire_codec.tree_keys(tree)
     out = [0] * n_shards
     for key, leaf in zip(keys, jax.tree_util.tree_leaves(tree)):
-        out[assignment[key]] += wire_codec.predict_leaf_nbytes(
-            leaf, scheme, quant
-        )
+        flat = np.ascontiguousarray(np.asarray(leaf)).reshape(-1)
+        for subkey, off, n in iter_subleaves(key, leaf, split_bytes):
+            out[assignment[subkey]] += wire_codec.predict_leaf_nbytes(
+                flat[off: off + n] if subkey != key else leaf,
+                scheme, quant,
+            )
     return out
+
+
+class LeafBuffers:
+    """Per-leaf-key accumulation buffers — the ONE decode-side assembler
+    for sharded (and possibly split) update payloads.
+
+    ``add`` folds a decoded leaf or chunk into its buffer at the chunk's
+    flat offset, in arrival order: within a shard that is ascending
+    worker then ascending ``tree_keys``/offset order, and every element
+    is owned by exactly one shard — the fixed per-element float32
+    summation order the cross-topology bit-exactness claim rests on.
+    Flush reassembly uses the same ``add`` (chunks of one worker's flush
+    are disjoint, so summing into zeros reproduces the exact values).
+    """
+
+    def __init__(self, leaf_like: dict[str, tuple[Any, Any]]):
+        self._bufs = {
+            k: np.zeros(shape, dtype)
+            for k, (shape, dtype) in leaf_like.items()
+        }
+        self._added = {k: 0 for k in self._bufs}
+
+    def add(self, meta: dict, decoded: Any) -> None:
+        buf = self._bufs[meta["k"]].reshape(-1)
+        arr = np.asarray(decoded).reshape(-1)
+        off = int(meta.get("o", 0))
+        buf[off: off + arr.size] += arr
+        self._added[meta["k"]] += arr.size
+
+    def assert_complete(self, copies: int = 1, what: str = "tree") -> None:
+        """Every element must have arrived exactly ``copies`` times —
+        the all-or-nothing witness for flush/dump reassembly, which
+        would otherwise silently read as zeros where a shard's slice
+        went missing (the pre-LeafBuffers dict lookup was a loud
+        KeyError; this keeps that property)."""
+        bad = {
+            k: (got, self._bufs[k].size * copies)
+            for k, got in self._added.items()
+            if got != self._bufs[k].size * copies
+        }
+        if bad:
+            raise ValueError(
+                f"incomplete {what} reassembly: got/expected elements "
+                f"per leaf {bad}"
+            )
+
+    def __getitem__(self, key: str) -> np.ndarray:
+        return self._bufs[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._bufs
 
 
 def iter_part_leaves(descs: list[dict], payload):

@@ -76,6 +76,17 @@ class FaaSJobConfig:
     # update-store shards (paper: Redis instances) — the leaf-key partition
     # of runtime.sharding; bills as n_redis == n_brokers
     n_brokers: int = 1
+    # worker<->shard data-path transport (DESIGN.md §12): 'tcp' is the
+    # persistent loopback socket, 'shm' the supervisor-allocated
+    # shared-memory ring segments (same framing/codec/accounted bytes);
+    # the supervisor's own control plane always rides TCP
+    transport: str = "tcp"
+    shm_ring_bytes: int = 4 << 20  # per-direction ring capacity
+    # split leaves denser than this many bytes into flat chunks before
+    # shard assignment (0 = off) — topology-independent, so wire bytes
+    # stay bit-identical across n_brokers; fixes the degenerate partition
+    # of few-leaf models (PMF) at high shard counts
+    shard_split_bytes: int = 0
     autotune: bool = False
     tuner: Optional[AutoTunerConfig] = None
     # deterministic test hooks
@@ -106,6 +117,8 @@ class FaaSJobConfig:
             "wire_scheme": self.wire_scheme,
             "wire_quant": self.wire_quant,
             "n_brokers": self.n_brokers,
+            "transport": self.transport,
+            "shard_split_bytes": self.shard_split_bytes,
             "n_batches": n_batches,
             "run_dir": self.run_dir,
             "pull_deadline_s": self.pull_deadline_s,
@@ -122,6 +135,9 @@ class _Slot:
     spawned_at: float = 0.0
     invocations: int = 0
     terminal: Optional[str] = None  # 'done' | 'evicted'
+    # shm transport: current per-shard segment names (fresh per
+    # invocation — the shm analogue of 'a new connection per invocation')
+    shm_segs: list = dataclasses.field(default_factory=list)
 
     @property
     def alive(self) -> bool:
@@ -144,6 +160,10 @@ class _BrokerShard:
 
 class Supervisor:
     def __init__(self, cfg: FaaSJobConfig):
+        if cfg.transport not in ("tcp", "shm"):
+            raise ValueError(
+                f"transport must be 'tcp' or 'shm', got {cfg.transport!r}"
+            )
         self.cfg = cfg
         self.wl = workload_lib.build(cfg.workload, cfg.workload_cfg)
         self.shards = [_BrokerShard(shard=s) for s in range(cfg.n_brokers)]
@@ -163,6 +183,12 @@ class Supervisor:
         self._killed_once = False
         self._broker_killed_once = False
         self._stopping = False  # end-of-job: shard exits are intentional
+        # shm transport: job-unique segment namespace + live segments
+        # (the supervisor is the single owner of create/unlink)
+        import secrets
+
+        self._shm_token = f"ml{os.getpid():x}{secrets.token_hex(2)}"
+        self._shm_segments: dict[str, Any] = {}  # name -> wire.shm.Segment
         self.tuner: Optional[ScaleInAutoTuner] = None
         if cfg.autotune:
             self.tuner = ScaleInAutoTuner(
@@ -296,6 +322,78 @@ class Supervisor:
                     self._conns[bs.shard].close()
                     self._conns[bs.shard] = None
                 self._spawn_broker(bs)
+                if self.cfg.transport == "shm":
+                    # the shard's shm serving threads died with it: hand
+                    # it every live worker's segment again (each re-serve
+                    # resets that ring pair and bumps its generation, so
+                    # in-flight workers replay through the same retry
+                    # window TCP reconnects use)
+                    self._reserve_shard_shm(bs)
+
+    # -- shared-memory segment lifecycle --------------------------------------
+    #
+    # The supervisor is the single owner of segment create/unlink (workers
+    # and brokers only ever attach): one segment per (worker, shard),
+    # recreated FRESH for every worker invocation — the shm analogue of
+    # 'a new connection per invocation', which is what makes respawn after
+    # a SIGKILL race-free (a dying invocation's half-written rings are
+    # never reused; its broker-side threads exit on client-death
+    # detection and the supervisor unlinks the memory).
+
+    def _teardown_worker_shm(self, slot: _Slot) -> None:
+        from repro.wire import shm
+
+        for name in slot.shm_segs:
+            seg = self._shm_segments.pop(name, None)
+            if seg is not None:
+                seg.unlink()
+            else:  # pragma: no cover - belt and braces
+                shm.Segment.unlink_by_name(name)
+        slot.shm_segs = []
+
+    def _setup_worker_shm(self, slot: _Slot) -> str:
+        """(Re)allocate fresh segments for this slot's next invocation and
+        hand them to every shard to serve; returns the worker's segment
+        base name (shard s attaches '<base>s<s>')."""
+        from repro.wire import shm
+
+        self._teardown_worker_shm(slot)
+        base = f"{self._shm_token}w{slot.worker}i{slot.invocations}"
+        names = [f"{base}s{s}" for s in range(self.cfg.n_brokers)]
+        for name in names:
+            self._shm_segments[name] = shm.Segment.create(
+                name, ring_bytes=self.cfg.shm_ring_bytes
+            )
+        for s, name in enumerate(names):
+            resp, _ = self._rpc({"t": "shm_serve", "seg": name}, shard=s)
+            if not resp.get("ok"):  # pragma: no cover - defensive
+                raise RuntimeError(f"shard {s} refused shm_serve: {resp}")
+        slot.shm_segs = names
+        return base
+
+    def _reserve_shard_shm(self, bs: "_BrokerShard") -> None:
+        """After a broker-shard respawn: hand the fresh process every live
+        worker's segment for this shard again (its serving threads died
+        with it).  Direct one-shot RPCs to the just-bound port — this is
+        called from inside ``_rpc``'s retry path, so it must not recurse
+        into ``_rpc`` itself."""
+        for slot in self.slots:
+            if slot.terminal is not None or not slot.shm_segs:
+                continue
+            name = slot.shm_segs[bs.shard]
+            for attempt in range(3):
+                try:
+                    protocol.request(
+                        bs.addr, {"t": "shm_serve", "seg": name},
+                        timeout=10.0,
+                    )
+                    break
+                except (ConnectionError, OSError, TimeoutError):
+                    if attempt == 2:
+                        # workers ride it out: their shm connect wait +
+                        # RPC retries outlast the next reap cycle
+                        break
+                    time.sleep(0.2)
 
     # -- worker lifecycle -----------------------------------------------------
 
@@ -310,16 +408,22 @@ class Supervisor:
         )
         brokers = ",".join(f"{h}:{p}" for h, p in
                            (bs.addr for bs in self.shards))
+        cmd = [
+            sys.executable,
+            "-m",
+            "repro.runtime.worker",
+            "--brokers",
+            brokers,
+            "--worker-id",
+            str(slot.worker),
+        ]
+        if self.cfg.transport == "shm":
+            cmd += [
+                "--transport", "shm",
+                "--shm-seg", self._setup_worker_shm(slot),
+            ]
         slot.proc = subprocess.Popen(
-            [
-                sys.executable,
-                "-m",
-                "repro.runtime.worker",
-                "--brokers",
-                brokers,
-                "--worker-id",
-                str(slot.worker),
-            ],
+            cmd,
             stdout=log,
             stderr=subprocess.STDOUT,
             env=self._worker_env(),
@@ -337,8 +441,10 @@ class Supervisor:
         slot.proc = None
         if status == "bye:done":
             slot.terminal = "done"
+            self._teardown_worker_shm(slot)
         elif status == "bye:evicted":
             slot.terminal = "evicted"
+            self._teardown_worker_shm(slot)
         elif status == "bye:invocation-end":
             self._spawn(slot)  # next invocation of the same function
         else:
@@ -532,6 +638,11 @@ class Supervisor:
                         bs.proc.wait(timeout=5.0)
                     except subprocess.TimeoutExpired:
                         bs.proc.kill()
+            # the supervisor owns every shm segment: none may outlive the
+            # job (they are named host-global resources, not fds)
+            for seg in self._shm_segments.values():
+                seg.unlink()
+            self._shm_segments.clear()
 
         wall = time.monotonic() - t_job0
         # the topology bills what it runs: one Redis-analogue VM per shard
@@ -541,31 +652,41 @@ class Supervisor:
     # -- results --------------------------------------------------------------
 
     def _dump_updates(self) -> list[dict]:
-        """Merge every shard's stored slices back into full update trees."""
+        """Merge every shard's stored slices back into full update trees
+        (``sharding.LeafBuffers`` reassembles split leaves too)."""
         import jax
+        import numpy as np
 
         leaf_keys = protocol.tree_keys(self.wl.params0)
         treedef = jax.tree_util.tree_structure(self.wl.params0)
         from repro.runtime import sharding
 
-        acc: dict[tuple[int, int], dict[str, Any]] = {}
+        leaf_like = {
+            k: (np.shape(leaf), np.asarray(leaf).dtype)
+            for k, leaf in zip(
+                leaf_keys, jax.tree_util.tree_leaves(self.wl.params0)
+            )
+        }
+        acc: dict[tuple[int, int], sharding.LeafBuffers] = {}
         for s in range(self.cfg.n_brokers):
             resp, blob = self._rpc({"t": "dump"}, shard=s)
             for desc, m, leaf in sharding.iter_part_leaves(
                 resp["parts"], blob
             ):
-                acc.setdefault(
-                    (int(desc["worker"]), int(desc["step"])), {}
-                )[m["k"]] = leaf
+                key = (int(desc["worker"]), int(desc["step"]))
+                if key not in acc:  # setdefault would zero-fill per leaf
+                    acc[key] = sharding.LeafBuffers(leaf_like)
+                acc[key].add(m, leaf)
         out = []
         for (worker, step) in sorted(acc):
-            leaves = acc[(worker, step)]
+            bufs = acc[(worker, step)]
+            bufs.assert_complete(what=f"dump (worker {worker}, step {step})")
             out.append(
                 {
                     "worker": worker,
                     "step": step,
                     "update": jax.tree_util.tree_unflatten(
-                        treedef, [leaves[k] for k in leaf_keys]
+                        treedef, [bufs[k] for k in leaf_keys]
                     ),
                 }
             )
@@ -627,6 +748,7 @@ class Supervisor:
             "workload": self.wl.name,
             "n_workers": self.cfg.n_workers,
             "n_brokers": self.cfg.n_brokers,
+            "transport": self.cfg.transport,
             "steps": self._frontier,
             "final_pool": sum(1 for s in self.slots if s.terminal == "done"),
             "final_loss": hist[-1]["loss"] if hist else None,
@@ -678,6 +800,37 @@ def run_job(cfg: FaaSJobConfig) -> dict:
     return Supervisor(cfg).run()
 
 
+def final_params_digest(cfg: FaaSJobConfig, worker: int = 0) -> str:
+    """sha256 over one worker's final checkpointed parameters from a
+    finished run — the bit-identity witness the transport/topology sweeps
+    and the wire guard compare across ``{tcp, shm} x n_brokers``."""
+    import hashlib
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import optim as optim_lib
+    from repro.checkpoint import store as ckpt
+
+    wl = workload_lib.build(cfg.workload, cfg.workload_cfg)
+    optimizer = optim_lib.make(cfg.optimizer, cfg.lr)
+    like = {
+        "params": wl.params0,
+        "opt": optimizer.init(wl.params0),
+        "residual": jax.tree.map(jnp.zeros_like, wl.params0),
+    }
+    d = os.path.join(cfg.run_dir, "ckpt", f"w{worker:03d}")
+    step = ckpt.latest_step(d)
+    if step is None:
+        raise FileNotFoundError(f"no final checkpoint under {d}")
+    tree = ckpt.restore(d, step, like)
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(tree["params"]):
+        h.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
+    return h.hexdigest()
+
+
 # the canonical quickstart job — examples/mlless_faas.py runs it and
 # benchmarks/fig6_autotuner.py calibrates the simulator against the SAME
 # configuration, so it lives in exactly one place
@@ -692,7 +845,7 @@ PMF_QUICKSTART_CFG = {
 
 def pmf_quickstart_config(
     run_dir: str, n_workers: int = 4, total_steps: int = 140,
-    n_brokers: int = 1,
+    n_brokers: int = 1, transport: str = "tcp",
 ) -> FaaSJobConfig:
     """PMF on 4 CPU workers with a live knee-driven scale-in (~1 min)."""
     return FaaSJobConfig(
@@ -707,6 +860,7 @@ def pmf_quickstart_config(
         lr=0.3,
         isp_v=0.7,
         n_brokers=n_brokers,
+        transport=transport,
         autotune=True,
         tuner=AutoTunerConfig(
             sched_interval_s=0.5,
@@ -728,6 +882,7 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--invocation-steps", type=int, default=1_000_000)
     ap.add_argument("--n-brokers", type=int, default=1)
+    ap.add_argument("--transport", default="tcp", choices=("tcp", "shm"))
     ap.add_argument("--autotune", action="store_true")
     ap.add_argument("--run-dir", default="/tmp/repro_faas")
     ap.add_argument("--out", default=None)
@@ -739,6 +894,7 @@ def main() -> None:
         total_steps=args.steps,
         invocation_steps=args.invocation_steps,
         n_brokers=args.n_brokers,
+        transport=args.transport,
         autotune=args.autotune,
     )
     res = run_job(cfg)

@@ -9,10 +9,14 @@ externally-checkpointed worker model of the paper (§5).
 
 The update store is sharded by leaf key over the N broker shards
 (``runtime.sharding``, DESIGN.md §11): the worker holds ONE persistent
-``wire.Connection`` per shard, publishes each shard its slice of every
-update, and pulls each shard's coalesced slice of the peers' updates —
-shard 0 (the coordinator) additionally serves minibatch keys, membership,
-and telemetry.
+``wire.Transport`` channel per shard, publishes each shard its slice of
+every update, and pulls each shard's coalesced slice of the peers'
+updates — shard 0 (the coordinator) additionally serves minibatch keys,
+membership, and telemetry.  The channel is pluggable (DESIGN.md §12):
+``--transport tcp`` (default) is the persistent loopback socket;
+``--transport shm`` rides the supervisor-allocated shared-memory ring
+segments (``--shm-seg`` base name, one segment per shard) — same
+framing, same codec, same accounted bytes, no kernel socket copy.
 
 Per step t the worker runs the *paper-faithful replica semantics* of
 ``core.isp`` (the same math ``core.simulator`` vmaps, here on a real
@@ -111,7 +115,12 @@ class _Membership:
         return self.evictions.get(worker)
 
 
-def run_worker(addrs: list[tuple[str, int]], worker_id: int) -> int:
+def run_worker(
+    addrs: list[tuple[str, int]],
+    worker_id: int,
+    transport: str = "tcp",
+    shm_seg: Optional[str] = None,
+) -> int:
     # jax and friends are imported lazily so ``--help`` stays instant — the
     # import cost is the measured FaaS cold-start of each invocation.
     import jax
@@ -125,11 +134,20 @@ def run_worker(addrs: list[tuple[str, int]], worker_id: int) -> int:
     from repro.runtime import protocol, sharding
     from repro.runtime import workload as workload_lib
 
-    # ONE persistent connection per broker shard for the whole invocation —
+    # ONE persistent channel per broker shard for the whole invocation —
     # the coalesced data path (DESIGN.md §10.3) instead of a TCP connect
-    # per message.  conns[0] is the coordinator.
+    # per message.  conns[0] is the coordinator.  The transport factory
+    # (wire.framing.make_transport) is the ONLY transport-aware line.
     n_shards = len(addrs)
-    conns = [protocol.Connection(a, timeout=30.0) for a in addrs]
+    conns = [
+        protocol.make_transport(
+            transport,
+            addr=a,
+            shm_name=f"{shm_seg}s{s}" if shm_seg else None,
+            timeout=30.0,
+        )
+        for s, a in enumerate(addrs)
+    ]
     # single-shard round trips (hello/batch/report/bye) go to the
     # coordinator; everything per-shard goes through the pipelined fanout
     rpc0 = _make_rpc(conns[0])
@@ -190,10 +208,14 @@ def run_worker(addrs: list[tuple[str, int]], worker_id: int) -> int:
     residual = jax.tree.map(jnp.zeros_like, params)
 
     # the leaf-key -> shard partition: a pure function of the parameter
-    # template and the shard count, so every worker, the supervisor, and
-    # the tests compute the identical assignment (runtime.sharding)
+    # template, the shard count and the (topology-independent) leaf-split
+    # threshold, so every worker, the supervisor, and the tests compute
+    # the identical assignment (runtime.sharding)
+    split_bytes = int(job.get("shard_split_bytes", 0))
     leaf_keys = protocol.tree_keys(params)
-    assignment = sharding.tree_assignment(params, n_shards)
+    assignment = sharding.tree_assignment(
+        params, n_shards, split_bytes=split_bytes
+    )
     leaves0 = [np.asarray(x) for x in jax.tree_util.tree_leaves(params)]
     treedef0 = jax.tree_util.tree_structure(params)
     leaf_like = {
@@ -273,7 +295,7 @@ def run_worker(addrs: list[tuple[str, int]], worker_id: int) -> int:
             # quantized: the hand-off must be exact.
             flushed = jax.tree.map(lambda x, r: x + r, params, residual)
             per_shard, _ = sharding.encode_tree_sharded(
-                flushed, assignment, n_shards
+                flushed, assignment, n_shards, split_bytes=split_bytes
             )
             fanout(
                 list(range(n_shards)),
@@ -325,6 +347,7 @@ def run_worker(addrs: list[tuple[str, int]], worker_id: int) -> int:
             sig, assignment, n_shards,
             scheme=wire_scheme, quant=wire_quant,
             with_residual=(wire_quant != "none"),
+            split_bytes=split_bytes,
         )
         if qerr is not None:
             res = jax.tree.map(
@@ -382,32 +405,35 @@ def run_worker(addrs: list[tuple[str, int]], worker_id: int) -> int:
                 return 5
         t_wire = tp()
         # -- decode: peers' update slices + eviction-flush slices back into
-        #    per-leaf accumulators.  Each leaf lives on exactly one shard
-        #    and arrives in ascending worker order there, so the per-leaf
+        #    per-leaf accumulators (sharding.LeafBuffers handles split
+        #    leaves).  Every element lives on exactly one shard and peers
+        #    arrive in ascending worker order there, so the per-element
         #    float32 summation order is fixed for ANY shard count — the
         #    replay path and every peer stay bit-identical
-        sums = {
-            k: np.zeros(shape, dtype)
-            for k, (shape, dtype) in leaf_like.items()
-        }
-        flush_acc: dict[int, dict[str, np.ndarray]] = {}
+        sums = sharding.LeafBuffers(leaf_like)
+        flush_acc: dict[int, sharding.LeafBuffers] = {}
         for descs, blob in shard_parts:
             for desc, m, leaf in sharding.iter_part_leaves(descs, blob):
                 if desc.get("flush"):
-                    flush_acc.setdefault(int(desc["worker"]), {})[
-                        m["k"]
-                    ] = leaf
+                    q = int(desc["worker"])
+                    if q not in flush_acc:  # setdefault would zero-fill
+                        flush_acc[q] = sharding.LeafBuffers(leaf_like)
+                    flush_acc[q].add(m, leaf)
                 else:
-                    sums[m["k"]] = sums[m["k"]] + leaf
+                    sums.add(m, leaf)
         peers_sum = jax.tree_util.tree_unflatten(
             treedef0, [sums[k] for k in leaf_keys]
         )
-        flushes = [
-            (q, jax.tree_util.tree_unflatten(
-                treedef0, [acc[k] for k in leaf_keys]
-            ))
-            for q, acc in flush_acc.items()
-        ]
+        flushes = []
+        for q, acc in flush_acc.items():
+            # a flush is a full replica: reintegrating one with a missing
+            # shard slice would silently fold zeros into every survivor
+            acc.assert_complete(what=f"flush from worker {q}")
+            flushes.append(
+                (q, jax.tree_util.tree_unflatten(
+                    treedef0, [acc[k] for k in leaf_keys]
+                ))
+            )
         t_decode = tp()
         # -- apply (counted as compute): own update + peers + reintegration
         params = apply_visible(params, u, peers_sum)
@@ -455,11 +481,26 @@ def main() -> None:
     ap.add_argument("--broker", default=None,
                     help="single-shard HOST:PORT (legacy alias)")
     ap.add_argument("--worker-id", type=int, required=True)
+    ap.add_argument("--transport", default="tcp", choices=("tcp", "shm"),
+                    help="update-path channel per shard (wire.framing."
+                    "make_transport); shm needs --shm-seg")
+    ap.add_argument("--shm-seg", default=None,
+                    help="shared-memory segment base name (supervisor-"
+                    "allocated); shard s attaches '<base>s<s>'")
     args = ap.parse_args()
     spec = args.brokers or args.broker
     if not spec:
         ap.error("--brokers (or --broker) is required")
-    raise SystemExit(run_worker(_parse_addrs(spec), args.worker_id))
+    if args.transport == "shm" and not args.shm_seg:
+        ap.error("--transport shm requires --shm-seg")
+    raise SystemExit(
+        run_worker(
+            _parse_addrs(spec),
+            args.worker_id,
+            transport=args.transport,
+            shm_seg=args.shm_seg,
+        )
+    )
 
 
 if __name__ == "__main__":

@@ -8,7 +8,10 @@ simulator's cost model (``core.simulator`` / ``core.billing``) all read
 bytes through here, so simulated bytes == measured bytes by construction.
 
     codec   — leaf/tree encode/decode, sizing formulas, quantization
-    framing — length-prefixed messages, vectored send, Connection
+    framing — length-prefixed messages, vectored send, the Transport
+              seam (make_transport) and its TCP Connection
+    shm     — shared-memory ring-buffer Transport (same-host zero-copy
+              update path, DESIGN.md §12)
 """
 
 from repro.wire.codec import (  # noqa: F401
@@ -34,7 +37,10 @@ from repro.wire.codec import (  # noqa: F401
 )
 from repro.wire.framing import (  # noqa: F401
     MAX_MSG_BYTES,
+    TRANSPORTS,
     Connection,
+    Transport,
+    make_transport,
     pack_parts,
     pipelined,
     recv_msg,

@@ -24,7 +24,7 @@ import json
 import os
 import socket
 import struct
-from typing import Optional, Union
+from typing import Optional, Protocol, Union, runtime_checkable
 
 _HDR = struct.Struct("<II")
 MAX_MSG_BYTES = 1 << 31  # sanity bound on a single message
@@ -114,8 +114,66 @@ def request(
         return recv_msg(sock)
 
 
+@runtime_checkable
+class Transport(Protocol):
+    """The pluggable client channel of the update path (DESIGN.md §12.1).
+
+    One persistent request/response stream to one broker shard; strictly
+    one outstanding request.  ``Connection`` (TCP) and ``shm.
+    ShmConnection`` (shared memory) both implement it, and everything
+    above the seam — ``pipelined``, the workers' retry loops, the
+    supervisor's RPC — is written against this surface only.  The
+    contract every implementation honours:
+
+    * ``request`` retries once through a transparent reconnect; all
+      broker ops are idempotent, so an ambiguous mid-round-trip failure
+      is safe to replay;
+    * ``send_only``/``recv_response`` split one round trip for the
+      multi-shard fan-out;
+    * failures surface as ``ConnectionError``/``OSError``/
+      ``TimeoutError`` — never transport-specific types — so callers'
+      retry windows are transport-agnostic.
+    """
+
+    def request(self, header: dict, payload: Payload = b"",
+                timeout: Optional[float] = None) -> tuple[dict, bytes]: ...
+
+    def send_only(self, header: dict, payload: Payload = b"",
+                  timeout: Optional[float] = None) -> None: ...
+
+    def recv_response(self, timeout: Optional[float] = None
+                      ) -> tuple[dict, bytes]: ...
+
+    def close(self) -> None: ...
+
+
+TRANSPORTS = ("tcp", "shm")
+
+
+def make_transport(
+    kind: str,
+    addr: Optional[tuple[str, int]] = None,
+    shm_name: Optional[str] = None,
+    timeout: float = 30.0,
+) -> "Transport":
+    """Transport factory: the ONE place a transport name becomes a
+    channel.  ``tcp`` needs ``addr``; ``shm`` needs ``shm_name`` (the
+    per-(worker, shard) segment the supervisor allocated)."""
+    if kind == "tcp":
+        if addr is None:
+            raise ValueError("tcp transport requires addr=(host, port)")
+        return Connection(addr, timeout=timeout)
+    if kind == "shm":
+        if shm_name is None:
+            raise ValueError("shm transport requires shm_name")
+        from repro.wire.shm import ShmConnection  # lazy: Linux-only bits
+
+        return ShmConnection(shm_name, timeout=timeout)
+    raise ValueError(f"unknown transport {kind!r}; known: {TRANSPORTS}")
+
+
 class Connection:
-    """Persistent framed request/response channel (client side).
+    """Persistent framed request/response channel (client side, TCP).
 
     One TCP connection, any number of sequential round trips.  On a
     connection failure the request is retried once over a fresh socket
@@ -214,14 +272,15 @@ class Connection:
 
 
 def pipelined(
-    conns: list["Connection"],
+    conns: list["Transport"],
     messages: list[tuple[dict, Payload]],
     timeout: Optional[float] = None,
 ) -> list[tuple[dict, bytes]]:
     """One round trip to N servers, overlapped: send every request, then
-    collect every response.  A connection that fails either half falls
-    back to a fresh-socket sequential ``request`` (idempotent servers make
-    the replay safe), so the result is positionally complete or raises.
+    collect every response.  Works over ANY ``Transport`` mix.  A channel
+    that fails either half falls back to a fresh sequential ``request``
+    (idempotent servers make the replay safe), so the result is
+    positionally complete or raises.
     """
     results: list[Optional[tuple[dict, bytes]]] = [None] * len(conns)
     failed: list[int] = []

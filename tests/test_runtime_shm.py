@@ -1,0 +1,266 @@
+"""Runtime-level shared-memory transport tests (DESIGN.md §12): the live
+FaaS job over ``transport='shm'`` must be indistinguishable from TCP in
+every accounted byte and every parameter bit — through worker SIGKILL
+(fresh segments per respawned invocation) and broker-shard SIGKILL (WAL
+replay + segment re-serve) — plus the oversized-leaf splitting that keeps
+high shard counts from degenerating (``runtime.sharding``)."""
+
+from __future__ import annotations
+
+import platform
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.wire import shm as wire_shm
+from runtime_harness import (
+    SMALL_PMF_WCFG,
+    final_params,
+    reference_updates,
+    run_small_pmf,
+    small_pmf_cfg,
+)
+
+pytestmark = pytest.mark.skipif(
+    not sys.platform.startswith("linux")
+    or platform.machine() not in wire_shm.SHM_MACHINES,
+    reason="shm transport targets same-host Linux on TSO machines",
+)
+
+
+def _leaves(tree):
+    import jax
+
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+def test_shm_bit_identical_to_tcp(tmp_path):
+    """Same job, both transports, 2 broker shards: accounted bytes,
+    per-shard splits, and final parameters must match bit-for-bit."""
+    from repro.runtime import run_job
+
+    runs = {}
+    cfgs = {}
+    for transport in ("tcp", "shm"):
+        cfg = small_pmf_cfg(
+            tmp_path / transport, transport=transport, n_brokers=2
+        )
+        runs[transport] = run_job(cfg)
+        cfgs[transport] = cfg
+    tcp, shm_run = runs["tcp"], runs["shm"]
+    assert shm_run["steps"] == tcp["steps"]
+    assert shm_run["wire_bytes_total"] == tcp["wire_bytes_total"]
+    assert (
+        shm_run["broker_update_bytes_per_shard"]
+        == tcp["broker_update_bytes_per_shard"]
+    )
+    assert shm_run["dup_mismatches"] == 0 and tcp["dup_mismatches"] == 0
+    assert shm_run["invariant_max_err"] == 0.0
+    for w in range(cfgs["tcp"].n_workers):
+        _, p_tcp = final_params(cfgs["tcp"], w)
+        _, p_shm = final_params(cfgs["shm"], w)
+        for a, b in zip(_leaves(p_tcp), _leaves(p_shm)):
+            assert np.array_equal(a, b)
+
+
+def test_shm_worker_sigkill_respawns_bit_exact(tmp_path):
+    """SIGKILL a worker mid-job under shm: the supervisor tears its
+    segments down, allocates fresh ones for the respawned invocation, and
+    the deterministic replay converges to the reference bit-exactly."""
+    res = run_small_pmf(
+        tmp_path,
+        transport="shm",
+        n_brokers=2,
+        kill_worker_at_step=(1, 3),
+        checkpoint_every=2,
+    )
+    assert res["steps"] == 8
+    assert res["n_respawns"] >= 1
+    assert res["dup_mismatches"] == 0
+    _, ref_params = reference_updates()
+    cfg = small_pmf_cfg(
+        tmp_path / "job", transport="shm", n_brokers=2,
+        kill_worker_at_step=(1, 3), checkpoint_every=2,
+    )
+    _, p0 = final_params(cfg, 0)
+    for a, b in zip(_leaves(ref_params[0]), _leaves(p0)):
+        assert np.array_equal(a, b)
+
+
+def test_shm_broker_sigkill_wal_respawn(tmp_path):
+    """SIGKILL a broker shard mid-job under shm: WAL replay restores the
+    store, the supervisor re-serves every live worker's segment (ring
+    reset + generation bump), and the workers replay through the same
+    idempotent retry window TCP uses."""
+    res = run_small_pmf(
+        tmp_path,
+        transport="shm",
+        n_brokers=2,
+        kill_broker_at_step=(1, 3),
+    )
+    assert res["steps"] == 8
+    assert len(res["broker_respawns"]) >= 1
+    assert res["dup_mismatches"] == 0
+    assert res["invariant_max_err"] == 0.0
+
+
+def test_shm_eviction_flush_and_split(tmp_path):
+    """Eviction flush + oversized-leaf splitting over shm at 4 shards:
+    every shard owns bytes (the degenerate-partition fix) and the final
+    pool shrinks through the mean-preserving hand-off."""
+    # evict early in a longer job: the coordinator grants the eviction at
+    # max_published + 2, so a loaded host that lets the pool race ahead
+    # before the supervisor's next poll must still land it before the end
+    res = run_small_pmf(
+        tmp_path,
+        transport="shm",
+        n_brokers=4,
+        shard_split_bytes=1024,
+        total_steps=16,
+        scripted_evict_steps=(2,),
+    )
+    assert res["steps"] == 16
+    assert res["final_pool"] == 2
+    assert res["dup_mismatches"] == 0
+    assert all(b > 0 for b in res["broker_update_bytes_per_shard"])
+
+
+# -- oversized-leaf splitting (pure, no processes) ----------------------------
+
+
+def _toy_tree(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {
+        "U": rng.normal(size=(300, 16)).astype(np.float32),
+        "M": rng.normal(size=(16, 500)).astype(np.float32),
+        "b": rng.normal(size=(7,)).astype(np.float32),
+    }
+
+
+def test_zero_byte_shard_warns():
+    from repro.runtime import sharding
+
+    with pytest.warns(UserWarning, match="zero update bytes"):
+        sharding.tree_assignment(_toy_tree(), 8)
+
+
+def test_split_removes_zero_byte_shards():
+    from repro.runtime import sharding
+
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # any warning fails the test
+        a = sharding.tree_assignment(_toy_tree(), 8, split_bytes=4096)
+    per = sharding.predict_shard_nbytes(
+        _toy_tree(), a, 8, scheme="dense", split_bytes=4096
+    )
+    assert all(b > 0 for b in per)
+
+
+@settings(max_examples=10)
+@given(
+    n_shards=st.integers(min_value=1, max_value=6),
+    split_kib=st.integers(min_value=1, max_value=64),
+    scheme=st.sampled_from(["dense", "bitmap", "sparse"]),
+)
+def test_split_bytes_topology_invariant(n_shards, split_kib, scheme):
+    """The chunking is a function of (template, threshold) only — total
+    wire bytes are identical for every shard count AND identical to the
+    unsplit encoding for every fixed-size scheme (chunk boundaries are
+    multiples of 8 elements, so even bitmap masks pack to the same
+    total)."""
+    from repro.runtime import sharding
+
+    rng = np.random.default_rng(split_kib)
+    tree = {
+        k: np.where(rng.random(v.shape) < 0.2, v, 0)
+        for k, v in _toy_tree(1).items()
+    }
+    split = split_kib * 1024
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        a1 = sharding.tree_assignment(tree, 1)
+        unsplit = sum(sharding.predict_shard_nbytes(tree, a1, 1, scheme))
+        an = sharding.tree_assignment(tree, n_shards, split_bytes=split)
+    per = sharding.predict_shard_nbytes(
+        tree, an, n_shards, scheme, split_bytes=split
+    )
+    assert sum(per) == unsplit
+
+
+@settings(max_examples=8)
+@given(
+    n_shards=st.integers(min_value=1, max_value=5),
+    split_bytes=st.sampled_from([0, 1024, 4096, 1 << 20]),
+)
+def test_split_encode_decode_roundtrip_bit_exact(n_shards, split_bytes):
+    """encode_tree_sharded -> iter_part_leaves -> LeafBuffers reassembles
+    the exact tree for any (shard count, threshold) — including the
+    degenerate no-split and everything-splits corners."""
+    import warnings
+
+    from repro.runtime import sharding
+    from repro.wire.framing import pack_parts
+
+    rng = np.random.default_rng(n_shards * 131 + split_bytes % 97)
+    tree = {
+        k: np.where(rng.random(v.shape) < 0.3, v, 0)
+        for k, v in _toy_tree(2).items()
+    }
+    leaf_like = {k: (v.shape, v.dtype) for k, v in tree.items()}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        a = sharding.tree_assignment(tree, n_shards, split_bytes=split_bytes)
+    per_shard, _ = sharding.encode_tree_sharded(
+        tree, a, n_shards, scheme="auto", split_bytes=split_bytes
+    )
+    bufs = sharding.LeafBuffers(leaf_like)
+    for metas, parts in per_shard:
+        descs, payload = pack_parts([({"worker": 0, "meta": metas}, parts)])
+        blob = b"".join(bytes(p) for p in payload)
+        for _desc, m, leaf in sharding.iter_part_leaves(descs, blob):
+            bufs.add(m, leaf)
+    for k, v in tree.items():
+        assert np.array_equal(bufs[k], v), k
+
+
+def test_split_quant_residual_assembles_full_leaves():
+    """fp16 quantization with splitting: the error-feedback residual must
+    reassemble to full leaf shape with the exact per-chunk errors."""
+    import warnings
+
+    from repro.runtime import sharding
+    from repro.wire import codec
+
+    tree = _toy_tree(3)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        a = sharding.tree_assignment(tree, 3, split_bytes=2048)
+    _, res = sharding.encode_tree_sharded(
+        tree, a, 3, scheme="dense", quant="fp16", with_residual=True,
+        split_bytes=2048,
+    )
+    for k, v in tree.items():
+        expect = v.astype(np.float32) - v.astype(np.float16).astype(
+            np.float32
+        )
+        assert res[k].shape == v.shape
+        assert np.array_equal(res[k], expect), k
+    # unsplit reference: identical residual
+    a1 = sharding.tree_assignment(tree, 1)
+    _, res1 = sharding.encode_tree_sharded(
+        tree, a1, 1, scheme="dense", quant="fp16", with_residual=True
+    )
+    for k in tree:
+        assert np.array_equal(res[k], res1[k])
+    assert codec.predict_tree_nbytes(tree, "dense", "fp16") == sum(
+        sharding.predict_shard_nbytes(
+            tree, a, 3, "dense", "fp16", split_bytes=2048
+        )
+    )

@@ -1,0 +1,358 @@
+"""Shared-memory transport tests (DESIGN.md §12): ring-buffer stream
+round trips (wrap-around, oversized frames), full-ring backpressure,
+concurrent writer/reader interleavings, generation-based reader-respawn
+reattachment, torn-frame detection, and a real SIGKILL-mid-publish
+process test asserting no torn frame is ever decoded."""
+
+from __future__ import annotations
+
+import os
+import platform
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.wire import shm
+
+pytestmark = pytest.mark.skipif(
+    not sys.platform.startswith("linux")
+    or platform.machine() not in shm.SHM_MACHINES,
+    reason="shm transport targets same-host Linux on TSO machines",
+)
+
+
+def _seg_name(tag: str) -> str:
+    return f"mlt{os.getpid():x}{tag}"
+
+
+class _Harness:
+    """One segment + a server thread answering every request with an echo."""
+
+    def __init__(self, tag: str, ring_bytes: int = 1 << 12):
+        self.name = _seg_name(tag)
+        self.seg = shm.Segment.create(self.name, ring_bytes=ring_bytes)
+        self.errors: list = []
+        self._stop = False
+        self.thread = threading.Thread(target=self._serve, daemon=True)
+        self.thread.start()
+
+    def _serve(self) -> None:
+        try:
+            chan = shm.ShmServerChannel(self.name, stop=lambda: self._stop)
+            while not self._stop:
+                try:
+                    rid, hdr, payload = chan.recv(timeout_s=10.0)
+                except (ConnectionError, TimeoutError):
+                    break
+                chan.send(rid, {"ok": True, "echo": hdr, "n": len(payload)},
+                          payload)
+            chan.close()
+        except Exception as e:  # pragma: no cover - surfaced by the test
+            self.errors.append(e)
+
+    def close(self) -> None:
+        self._stop = True
+        self.thread.join(timeout=10.0)
+        assert not self.thread.is_alive(), "server thread wedged"
+        self.seg.unlink()
+        assert not self.errors, self.errors
+
+
+@pytest.fixture
+def harness(request):
+    h = _Harness(tag=str(abs(hash(request.node.name)) % 10**6))
+    yield h
+    h.close()
+
+
+def test_roundtrip_small(harness):
+    with shm.ShmConnection(harness.name, timeout=10.0) as conn:
+        hdr, payload = conn.request({"t": "ping", "x": 1}, b"hello")
+        assert hdr["ok"] and hdr["echo"]["x"] == 1
+        assert payload == b"hello"
+
+
+def test_roundtrip_oversized_frame_streams_through(harness):
+    # 4x the ring capacity: the frame must stream through in chunks
+    big = bytes(range(256)) * 64
+    with shm.ShmConnection(harness.name, timeout=10.0) as conn:
+        hdr, payload = conn.request({"t": "big"}, big)
+        assert hdr["n"] == len(big)
+        assert payload == big
+
+
+def test_vectored_payload_roundtrip(harness):
+    with shm.ShmConnection(harness.name, timeout=10.0) as conn:
+        hdr, payload = conn.request(
+            {"t": "vec"}, [b"abc", b"", memoryview(b"defg")]
+        )
+        assert payload == b"abcdefg"
+
+
+@settings(max_examples=15)
+@given(
+    sizes=st.lists(
+        st.integers(min_value=0, max_value=12_000), min_size=1, max_size=8
+    )
+)
+def test_stream_roundtrip_wraparound(sizes):
+    """Random frame sizes through a tiny ring: every boundary (empty
+    payload, exact ring multiples, many-times-capacity frames) must wrap
+    and reassemble bit-exactly, in order."""
+    h = _Harness(tag=f"w{abs(hash(tuple(sizes))) % 10**6}", ring_bytes=1 << 10)
+    try:
+        with shm.ShmConnection(h.name, timeout=20.0) as conn:
+            for i, n in enumerate(sizes):
+                blob = bytes([(i + j) % 251 for j in range(n)])
+                hdr, payload = conn.request({"i": i}, blob)
+                assert hdr["echo"]["i"] == i
+                assert payload == blob
+    finally:
+        h.close()
+
+
+def test_backpressure_blocks_writer_until_reader_drains():
+    name = _seg_name("bp")
+    seg = shm.Segment.create(name, ring_bytes=1 << 10)
+    try:
+        chan = shm.ShmServerChannel(name)
+        client = shm.Segment.attach(name)
+        req = shm.Ring(client, shm._REQ_HDR, "producer")
+        payload = b"z" * 4096  # 4x capacity: cannot fit without draining
+        state = {"sent": None}
+
+        def writer():
+            state["sent"] = shm.send_frame(
+                req, 1, {"t": "bp"}, payload, time.monotonic() + 20.0
+            )
+
+        t = threading.Thread(target=writer, daemon=True)
+        t.start()
+        time.sleep(0.3)
+        # the ring is full and the writer is parked on the space futex
+        assert t.is_alive(), "writer finished without a reader draining"
+        assert state["sent"] is None
+        rid, hdr, got = chan.recv(timeout_s=10.0)
+        assert rid == 1 and got == payload
+        t.join(timeout=10.0)
+        assert not t.is_alive() and state["sent"] is not None
+        req.release()
+        client.close()
+        chan.close()
+    finally:
+        seg.unlink()
+
+
+def test_full_ring_times_out_without_reader():
+    name = _seg_name("to")
+    seg = shm.Segment.create(name, ring_bytes=1 << 10)
+    try:
+        chan = shm.ShmServerChannel(name)  # resets + publishes a generation
+        client = shm.Segment.attach(name)
+        req = shm.Ring(client, shm._REQ_HDR, "producer")
+        with pytest.raises(TimeoutError):
+            shm.send_frame(
+                req, 1, {"t": "stuck"}, b"z" * 4096,
+                time.monotonic() + 0.3,
+            )
+        req.release()
+        client.close()
+        chan.close()
+    finally:
+        seg.unlink()
+
+
+@settings(max_examples=10)
+@given(
+    delays_ms=st.lists(
+        st.integers(min_value=0, max_value=20), min_size=2, max_size=6
+    )
+)
+def test_concurrent_interleavings(delays_ms):
+    """A reader that stalls between (and within) frames interleaves with
+    a writer pushing frames bigger than the ring — every frame arrives
+    intact regardless of scheduling."""
+    name = _seg_name(f"ci{abs(hash(tuple(delays_ms))) % 10**6}")
+    seg = shm.Segment.create(name, ring_bytes=1 << 10)
+    try:
+        chan = shm.ShmServerChannel(name)
+        client = shm.Segment.attach(name)
+        req = shm.Ring(client, shm._REQ_HDR, "producer")
+        frames = [
+            bytes([(i * 37 + j) % 256 for j in range(1500 + 700 * i)])
+            for i in range(len(delays_ms))
+        ]
+
+        def writer():
+            for i, blob in enumerate(frames):
+                shm.send_frame(
+                    req, i, {"i": i}, blob, time.monotonic() + 30.0
+                )
+
+        t = threading.Thread(target=writer, daemon=True)
+        t.start()
+        for i, delay in enumerate(delays_ms):
+            time.sleep(delay / 1000.0)
+            rid, hdr, got = chan.recv(timeout_s=20.0)
+            assert rid == i and hdr["i"] == i
+            assert got == frames[i]
+        t.join(timeout=10.0)
+        assert not t.is_alive()
+        req.release()
+        client.close()
+        chan.close()
+    finally:
+        seg.unlink()
+
+
+def test_reader_respawn_reattaches_and_replays():
+    """Broker-respawn protocol: a new server resets the rings and bumps
+    the generation; the client's in-flight request dies with a
+    ConnectionError (never a wrong answer) and the replay lands on the
+    new server."""
+    name = _seg_name("rs")
+    seg = shm.Segment.create(name, ring_bytes=1 << 12)
+    try:
+        ch1 = shm.ShmServerChannel(name)
+        conn = shm.ShmConnection(name, timeout=5.0, connect_wait_s=5.0)
+        conn.send_only({"t": "lost"}, b"x")
+        ch2 = shm.ShmServerChannel(name)  # the respawn
+        assert ch2.gen > ch1.gen
+        with pytest.raises(ConnectionError):
+            conn.recv_response(timeout=5.0)
+
+        def serve_one():
+            rid, hdr, payload = ch2.recv(timeout_s=10.0)
+            ch2.send(rid, {"ok": True, "srv": 2}, payload)
+
+        t = threading.Thread(target=serve_one, daemon=True)
+        t.start()
+        hdr, payload = conn.request({"t": "retry"}, b"abc")
+        assert hdr["srv"] == 2 and payload == b"abc"
+        t.join(timeout=10.0)
+        conn.close()
+        ch1.close()
+        ch2.close()
+    finally:
+        seg.unlink()
+
+
+def test_connect_requires_a_serving_generation():
+    name = _seg_name("ng")
+    seg = shm.Segment.create(name, ring_bytes=1 << 10)
+    try:
+        conn = shm.ShmConnection(name, timeout=1.0, connect_wait_s=0.3)
+        with pytest.raises(ConnectionError):
+            conn.request({"t": "nobody-home"})
+    finally:
+        seg.unlink()
+
+
+def test_trailer_mismatch_raises_torn_frame():
+    """A frame whose trailer word does not check out must raise — never
+    surface bytes to the codec."""
+    name = _seg_name("tf")
+    seg = shm.Segment.create(name, ring_bytes=1 << 10)
+    try:
+        chan = shm.ShmServerChannel(name)
+        client = shm.Segment.attach(name)
+        req = shm.Ring(client, shm._REQ_HDR, "producer")
+        raw = b"{}"
+        frame = (
+            shm._FRAME.pack(7, len(raw), 0)
+            + raw
+            + shm._TRAILER.pack(0xDEADBEEF)  # wrong trailer
+        )
+        req.write_bytes([memoryview(frame)], time.monotonic() + 5.0)
+        with pytest.raises(shm.TornFrameError):
+            chan.recv(timeout_s=5.0)
+        req.release()
+        client.close()
+        chan.close()
+    finally:
+        seg.unlink()
+
+
+_KILL_CHILD = r"""
+import os, sys, time
+from repro.wire import shm
+
+name = sys.argv[1]
+seg = shm.Segment.attach(name)
+seg.set_client(os.getpid())
+req = shm.Ring(seg, shm._REQ_HDR, "producer")
+rid = 0
+while True:  # frames >> ring size: a SIGKILL lands mid-frame w.h.p.
+    rid += 1
+    payload = bytes([rid % 256]) * 10_000
+    shm.send_frame(req, rid, {"rid": rid}, payload,
+                   time.monotonic() + 30.0)
+"""
+
+
+def test_sigkill_mid_publish_never_decodes_a_torn_frame():
+    """A real worker process SIGKILLed mid-publish: every frame the
+    reader decodes must be complete and content-exact; the partial frame
+    at the kill point must surface as a connection/timeout error, never
+    as data."""
+    name = _seg_name("kp")
+    seg = shm.Segment.create(name, ring_bytes=1 << 12)
+    try:
+        chan = shm.ShmServerChannel(name)
+        env = dict(os.environ)
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        env["PYTHONPATH"] = (
+            os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+        )
+        proc = subprocess.Popen(
+            [sys.executable, "-c", _KILL_CHILD, name], env=env
+        )
+        try:
+            got = 0
+            # let a few frames through, then kill mid-stream
+            while got < 3:
+                rid, hdr, payload = chan.recv(timeout_s=30.0)
+                assert payload == bytes([rid % 256]) * 10_000, (
+                    f"torn frame decoded at rid {rid}"
+                )
+                got += 1
+            proc.send_signal(signal.SIGKILL)
+            proc.wait(timeout=10.0)
+            # drain whatever was fully committed; the torn tail must
+            # raise, not decode
+            while True:
+                try:
+                    rid, hdr, payload = chan.recv(timeout_s=2.0)
+                except (ConnectionError, TimeoutError):
+                    break  # client-death detection or drained ring
+                assert payload == bytes([rid % 256]) * 10_000, (
+                    f"torn frame decoded at rid {rid} after SIGKILL"
+                )
+                got += 1
+            assert got >= 3
+        finally:
+            if proc.poll() is None:
+                proc.kill()
+                proc.wait(timeout=10.0)
+        chan.close()
+    finally:
+        seg.unlink()
+
+
+def test_segment_attach_rejects_garbage():
+    name = _seg_name("bad")
+    from multiprocessing import shared_memory
+
+    raw = shared_memory.SharedMemory(name=name, create=True, size=4096)
+    try:
+        with pytest.raises(ConnectionError):
+            shm.Segment.attach(name)
+    finally:
+        raw.close()
+        raw.unlink()

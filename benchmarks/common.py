@@ -220,3 +220,23 @@ def summarize(name: str, res: SimResult) -> dict:
         "final_workers": res.summary["final_workers"],
         "steps": len(res.records),
     }
+
+
+def attach_speedups(rows: list, base_model: str = "bsp",
+                    key: str = "speedup_vs_bsp") -> list:
+    """Annotate per-P speedup vs the base model's time-to-loss, in place.
+
+    ``summarize()`` falls back to ``total_wall_s`` for a cell that never
+    reached the loss target, so a ratio against a non-converged baseline is
+    an inflated "speedup" against a step-capped run, not a measurement.
+    Speedup is reported only when BOTH cells converged; otherwise ``None``
+    (the per-cell ``converged`` flag says which side failed).
+    """
+    base = {r["P"]: r for r in rows if r["model"] == base_model}
+    for r in rows:
+        b = base.get(r["P"])
+        if b is None or not b["converged"] or not r["converged"]:
+            r[key] = None
+        else:
+            r[key] = b["time_to_loss_s"] / max(r["time_to_loss_s"], 1e-9)
+    return rows

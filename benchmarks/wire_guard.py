@@ -6,9 +6,12 @@ the shared-memory transport (``--transport shm``) — plus the simulator's
 cost model for each topology, then compares against the checked-in
 baseline (``benchmarks/wire_baseline.json``):
 
-* ``wire_bytes_total`` — bit-deterministic at a fixed seed with the
-  auto-tuner off (same updates -> same nnz -> same codec bytes), so ANY
-  increase >10% means an encoding regression, not noise;
+* ``wire_bytes_total`` and ``final_params_sha256`` — bit-deterministic
+  at a fixed seed with the auto-tuner off (same updates -> same nnz ->
+  same codec bytes -> same replicas), so the default ISP path must match
+  the checked-in baseline EXACTLY: an opt-in feature (SSP, a new codec,
+  a transport) that shifts a single byte or bit of the default path
+  fails here;
 * the SHARDED run's wire bytes must equal the single-broker run's EXACTLY
   (the leaf-key partition moves bytes between shards, it never changes
   them) and its per-shard broker-measured split must sum to the total —
@@ -223,6 +226,7 @@ def main() -> int:
     if args.update or not os.path.exists(BASELINE):
         base = {
             "wire_bytes_total": cur["wire_bytes_total"],
+            "final_params_sha256": single["final_params_sha256"],
             "cost_measured_over_predicted": (
                 cur["cost_measured_over_predicted"] * args.headroom
             ),
@@ -246,8 +250,30 @@ def main() -> int:
 
     with open(BASELINE) as f:
         base = json.load(f)
+    # the bit-identity gates: the DEFAULT (isp) data path must reproduce
+    # the recorded bytes and final parameters exactly — features that are
+    # opt-in (SSP slack, codecs, transports) may add paths, never perturb
+    # this one
+    exact = {
+        "wire_bytes_total": single["wire_bytes_total"],
+        "final_params_sha256": single["final_params_sha256"],
+    }
+    for key, val in exact.items():
+        if key not in base:
+            print(f"wire_guard: baseline missing {key}; re-record "
+                  "with --update", file=sys.stderr)
+            ok = False
+        elif val != base[key]:
+            print(
+                f"wire_guard: REGRESSION: default-path {key} {val!r} != "
+                f"baseline {base[key]!r} (the default ISP data path must "
+                "be bit-identical to the recorded baseline)",
+                file=sys.stderr,
+            )
+            ok = False
+        else:
+            print(f"wire_guard: {key} bit-identical to baseline")
     checks = {
-        "wire_bytes_total": cur["wire_bytes_total"],
         "cost_measured_over_predicted": (
             cur["cost_measured_over_predicted"]
         ),

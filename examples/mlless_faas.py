@@ -38,6 +38,11 @@ def main() -> int:
     ap.add_argument("--transport", default="tcp", choices=("tcp", "shm"),
                     help="worker<->broker update path: loopback TCP or "
                     "zero-copy shared-memory rings (repro.wire.shm)")
+    ap.add_argument("--consistency", default="isp", choices=("isp", "ssp"),
+                    help="pull-barrier model: full per-step ISP barrier "
+                    "(default) or bounded staleness (DESIGN.md §13)")
+    ap.add_argument("--slack", type=int, default=3,
+                    help="SSP staleness bound (ignored under isp)")
     ap.add_argument("--run-dir", default=None)
     ap.add_argument("--no-check", action="store_true",
                     help="skip the health assertions (exploratory runs)")
@@ -49,12 +54,16 @@ def main() -> int:
         total_steps=args.steps,
         n_brokers=args.n_brokers,
         transport=args.transport,
+        consistency=args.consistency,
+        slack=args.slack,
     )
     wc = PMF_QUICKSTART_CFG
+    barrier = ("ISP barrier" if cfg.consistency == "isp"
+               else f"SSP slack={cfg.slack}")
     print(f"PMF {wc['n_users']}x{wc['n_movies']} rank {wc['rank']}, "
           f"{args.workers} worker processes, {args.steps} steps, "
           f"{cfg.n_brokers} broker shard(s) over {cfg.transport}, "
-          f"ISP v={cfg.isp_v} (run dir {cfg.run_dir})")
+          f"{barrier}, ISP v={cfg.isp_v} (run dir {cfg.run_dir})")
     res = run_job(cfg)
 
     hist = res["history"]

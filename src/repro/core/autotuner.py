@@ -98,7 +98,12 @@ class ScaleInAutoTuner:
         t = np.asarray(self._steps, dtype=np.float64)
         y = self.smoothed_losses
         self.reference = curves.fit_reference(t, y)
-        self.d_P = float(np.mean(self._durations))
+        # Exclude the first observation from the reference step duration: it
+        # carries the XLA-compile warm-up (the same policy fig6 applies to
+        # measured_step_s_mean), which would inflate d_P and shrink the
+        # floor(Delta/d_P) horizon every later decision is scored against.
+        steady = self._durations[1:] or self._durations
+        self.d_P = float(np.mean(steady))
 
     def _estimate_current(self) -> tuple[Optional[curves.FittedCurve], float]:
         """Fit l_p(t) on observations since the last removal; estimate d_p."""
@@ -130,6 +135,10 @@ class ScaleInAutoTuner:
 
         ell, d_p = self._estimate_current()
         if ell is None or self.reference is None or self.d_P is None:
+            # Consume the interval like every other post-knee outcome:
+            # without this an under-observed tuner re-fires the fit on every
+            # call until min_points accumulate, ignoring sched_interval_s.
+            self._last_sched_time = self._time
             return Decision(False, None, "under-observed")
 
         t_now = float(self._steps[-1])

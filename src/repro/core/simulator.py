@@ -82,6 +82,13 @@ class SimulatorConfig:
     cold_start_s: float = 0.0
     invocations_per_worker: int = 1
     eval_every: int = 1
+    # injected intermittent straggler (mirrors FaaSJobConfig.straggler):
+    # worker `straggler_worker` takes an extra `straggler_delay_s` on every
+    # `straggler_every`-th step.  Off by default — the lognormal jitter
+    # above stays the only timing noise, so existing traces are unchanged.
+    straggler_worker: Optional[int] = None
+    straggler_delay_s: float = 0.0
+    straggler_every: int = 1
 
 
 @dataclasses.dataclass
@@ -162,6 +169,11 @@ class ServerlessSimulator:
         self._rng = np.random.default_rng(config.seed)
         self._lifetimes = np.zeros(P, dtype=np.float64)
         self._wall = 0.0
+        # SSP pipeline clocks (DESIGN.md §13 priced): per-worker finish
+        # times, the per-step "all stored" gate, and the pool frontier
+        self._ssp_finish = np.zeros(P, dtype=np.float64)
+        self._ssp_gate: dict[int, float] = {}
+        self._ssp_front = 0.0
         self._jit_step = jax.jit(self._multi_worker_step)
 
     # -- the jitted multi-worker step -----------------------------------------
@@ -224,12 +236,19 @@ class ServerlessSimulator:
     # -- timing + billing ------------------------------------------------------
 
     def _step_times(self, batch_size: int, comm_bytes_per_worker: float,
-                    p_active: int) -> tuple[float, np.ndarray]:
+                    p_active: int, step: int) -> tuple[float, np.ndarray]:
         """Returns (wall_s, per-worker busy seconds) for one step."""
         cfg = self.config
         compute = self.flops_per_sample * batch_size / cfg.worker_flops_rate
         jitter = self._rng.lognormal(0.0, cfg.straggler_sigma, size=p_active)
         per_worker_compute = compute * jitter
+        active_ids = np.nonzero(self.active)[0]
+        if (
+            cfg.straggler_worker is not None
+            and step % max(cfg.straggler_every, 1) == 0
+        ):
+            hit = np.nonzero(active_ids == cfg.straggler_worker)[0]
+            per_worker_compute[hit] += cfg.straggler_delay_s
         fetch = cfg.comm.cos_fetch_s
         if cfg.platform is Platform.SERVERFUL:
             comm = cfg.comm.allreduce_time(comm_bytes_per_worker, p_active)
@@ -255,9 +274,21 @@ class ServerlessSimulator:
         ):
             wall = float(np.max(busy))  # synchronous barrier
         else:
-            # SSP: slack hides stragglers up to s steps; steady-state wall
-            # advances at the mean pace rather than the max
-            wall = float(np.mean(busy))
+            # SSP: the bounded-staleness pipeline the live broker enforces
+            # (DESIGN.md §13).  A worker starts step t once it finished
+            # t-1 AND every worker has stored step t-slack-1 (the gate its
+            # pull at t waits on); the pool frontier advances at the pace
+            # of that pipeline, so a hiccup shorter than the accumulated
+            # slack lead costs nothing while a persistent laggard drags
+            # the gates — exactly the live tail behaviour.
+            gate = self._ssp_gate.get(step - cc.slack - 1, 0.0)
+            start = np.maximum(self._ssp_finish[active_ids], gate)
+            finish = start + busy
+            self._ssp_finish[active_ids] = finish
+            self._ssp_gate[step] = float(np.max(finish))
+            front = float(np.max(self._ssp_finish[active_ids]))
+            wall = front - self._ssp_front
+            self._ssp_front = front
         return wall, busy
 
     # -- update sizing ---------------------------------------------------------
@@ -353,7 +384,8 @@ class ServerlessSimulator:
             comm_frac = float(comm_frac)
             p_active = int(self.active.sum())
             bytes_out = self._bytes_out(comm_frac, batch_size)
-            wall, busy = self._step_times(batch_size, bytes_out, p_active)
+            wall, busy = self._step_times(batch_size, bytes_out, p_active,
+                                          step)
             self._wall += wall
             self._lifetimes[self.active] += busy
             active_steps[self.active] += 1

@@ -484,6 +484,8 @@ def train_faas(args) -> dict:
         wire_quant=args.wire_quant,
         n_brokers=getattr(args, "n_brokers", 1),
         transport=getattr(args, "transport", "tcp"),
+        consistency=getattr(args, "consistency", "isp"),
+        slack=getattr(args, "slack", 3),
         autotune=args.autotune,
         tuner=AutoTunerConfig(
             sched_interval_s=args.sched_interval,
@@ -554,6 +556,12 @@ def main() -> None:
                     help="faas: worker<->shard update-path channel "
                     "(repro.wire): persistent loopback TCP or zero-copy "
                     "shared-memory rings (same accounted bytes)")
+    ap.add_argument("--consistency", default="isp", choices=("isp", "ssp"),
+                    help="faas: pull-barrier model — 'isp' full per-step "
+                    "barrier (default), 'ssp' bounded staleness (a pull at "
+                    "step t waits only for steps <= t - slack - 1)")
+    ap.add_argument("--slack", type=int, default=3,
+                    help="faas: SSP staleness bound (ignored under isp)")
     ap.add_argument("--run-dir", default=None,
                     help="faas: checkpoints + worker logs directory")
     args = ap.parse_args()

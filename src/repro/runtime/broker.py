@@ -143,6 +143,12 @@ class BrokerCore:
         self.P = int(job["n_workers"])
         self.n_batches = int(job.get("n_batches", 1))
         self.total_steps = int(job["total_steps"])
+        # consistency model for the pull barrier: 'isp' (default) is the
+        # full per-step barrier; 'ssp' is bounded staleness — a pull at
+        # step t blocks only until every update from steps <= t - slack - 1
+        # is stored (DESIGN.md §13)
+        self.consistency = str(job.get("consistency", "isp"))
+        self.slack = int(job.get("slack", 3))
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         # step -> worker -> (meta, payload, digest)
@@ -152,6 +158,12 @@ class BrokerCore:
         # (step, worker) -> telemetry dict   (coordinator only)
         self.telemetry: dict[tuple[int, int], dict] = {}
         self.evictions: dict[int, int] = {}  # worker -> effective step
+        # per-worker publish clocks: highest step each worker has stored
+        # here.  Publishes from one worker are sequential over its
+        # persistent connection (and WAL replay preserves that order), so
+        # the max is also the contiguous durable frontier — the quantity
+        # the SSP release rule is stated in.
+        self.clocks: dict[int, int] = {}
         self.statuses: dict[int, str] = {w: "spawned" for w in range(self.P)}
         self.max_published = 0
         self.dup_mismatches = 0
@@ -221,6 +233,39 @@ class BrokerCore:
         return all(
             q in fl for q, e in self.evictions.items() if e == step
         )
+
+    def _ssp_ready(self, d: int) -> bool:
+        """Staleness-bounded release: every update from steps <= d is
+        stored here.  Evicted workers stop publishing at e - 1 and hand
+        off via a flush at e, so their obligation is capped there."""
+        if d < 1:
+            return True
+        for w in range(self.P):
+            e = self.evictions.get(w)
+            lim = d if e is None else min(d, e - 1)
+            if self.clocks.get(w, 0) < lim:
+                return False
+            if e is not None and e <= d and w not in self.flushes.get(e, {}):
+                return False
+        return True
+
+    def _parts_at(self, step: int, worker: int) -> list:
+        """The deliverable parts of one step: peers' update slices (in
+        ascending worker order — the fixed float-summation order every
+        replica relies on) plus any eviction flush effective at it."""
+        parts = []
+        for w in sorted(self.active_at(step)):
+            if w == worker:
+                continue
+            meta, blob, _ = self.updates[step][w]
+            parts.append(({"worker": w, "meta": meta}, blob))
+        for q in sorted(self.flushes.get(step, {})):
+            if self.evictions.get(q) == step:
+                meta, blob, _ = self.flushes[step][q]
+                parts.append(
+                    ({"worker": q, "meta": meta, "flush": True}, blob)
+                )
+        return parts
 
     def _telemetry_complete(self, step: int) -> bool:
         return all(
@@ -294,6 +339,7 @@ class BrokerCore:
                 self._log(h, payload)
                 slot[worker] = (meta, payload, digest)
                 self.max_published = max(self.max_published, step)
+                self.clocks[worker] = max(self.clocks.get(worker, 0), step)
                 self.update_bytes += protocol.wire_bytes(meta)
             if self.is_coordinator:
                 # telemetry is a coordinator concern; the worker reports
@@ -336,6 +382,8 @@ class BrokerCore:
     def _op_pull(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
         step, worker = int(h["step"]), int(h["worker"])
         timeout = float(h.get("timeout_s", 2.0))
+        if self.consistency == "ssp":
+            return self._pull_ssp(step, worker, timeout)
         with self._cond:
             ready = self._cond.wait_for(
                 lambda: self._barrier_ready(step) or self.shutting_down,
@@ -345,19 +393,9 @@ class BrokerCore:
                 return {"ok": False, "abort": True}, b""
             if not ready or not self._barrier_ready(step):
                 return {"ok": True, "ready": False, **self._membership()}, b""
-            parts = []
-            for w in sorted(self.active_at(step)):
-                if w == worker:
-                    continue
-                meta, blob, _ = self.updates[step][w]
-                parts.append(({"worker": w, "meta": meta}, blob))
-            for q in sorted(self.flushes.get(step, {})):
-                if self.evictions.get(q) == step:
-                    meta, blob, _ = self.flushes[step][q]
-                    parts.append(
-                        ({"worker": q, "meta": meta, "flush": True}, blob)
-                    )
-            descs, payload = protocol.pack_parts(parts)
+            descs, payload = protocol.pack_parts(
+                self._parts_at(step, worker)
+            )
             resp = {
                 "ok": True,
                 "ready": True,
@@ -368,6 +406,37 @@ class BrokerCore:
                 # coalesced pull: piggyback the NEXT step's minibatch key so
                 # the steady-state worker loop is exactly 1 + n_shards round
                 # trips per ISP barrier (one publish + one pull per shard)
+                resp["key_next"] = self.batch_key(step + 1, worker)
+        return resp, payload
+
+    def _pull_ssp(self, step: int, worker: int,
+                  timeout: float) -> tuple[dict, bytes]:
+        """Bounded-staleness pull: a pull at step t is served exactly the
+        updates of the frontier step d = t - slack - 1 (empty, and ready
+        immediately, while d < 1), blocking only until every update from
+        steps <= d is stored.  The delivery schedule is a pure function
+        of t, so a respawned worker's replayed pulls return the identical
+        retained parts — replay stays deterministic (DESIGN.md §13)."""
+        d = step - self.slack - 1
+        with self._cond:
+            ready = self._cond.wait_for(
+                lambda: self._ssp_ready(d) or self.shutting_down,
+                timeout=timeout,
+            )
+            if self.shutting_down:
+                return {"ok": False, "abort": True}, b""
+            if not ready or not self._ssp_ready(d):
+                return {"ok": True, "ready": False, **self._membership()}, b""
+            parts = self._parts_at(d, worker) if d >= 1 else []
+            descs, payload = protocol.pack_parts(parts)
+            resp = {
+                "ok": True,
+                "ready": True,
+                "parts": descs,
+                "visible_step": d,
+                **self._membership(),
+            }
+            if self.is_coordinator:
                 resp["key_next"] = self.batch_key(step + 1, worker)
         return resp, payload
 
@@ -470,6 +539,13 @@ class BrokerCore:
                         sum(c["wire_bytes"] for c in cells)
                     ),
                     "p_active": len(active),
+                    # per-worker durations so a straggler's stalls are
+                    # attributable (fig9 --live scores the NON-straggler
+                    # p95 under each consistency model)
+                    "dur_s_by_worker": {
+                        str(w): float(self.telemetry[(step, w)]["dur_s"])
+                        for w in active
+                    },
                 }
                 phases = [c["phase"] for c in cells if "phase" in c]
                 if phases:
@@ -486,6 +562,7 @@ class BrokerCore:
                 "rows": rows,
                 "statuses": {str(k): v for k, v in self.statuses.items()},
                 "max_published": self.max_published,
+                "clocks": {str(k): v for k, v in self.clocks.items()},
                 "dup_mismatches": self.dup_mismatches,
                 **self._membership(),
             }

@@ -201,6 +201,16 @@ def run_worker(
     pull_deadline_s = float(job.get("pull_deadline_s", 120.0))
     wire_scheme = str(job.get("wire_scheme", "auto"))
     wire_quant = str(job.get("wire_quant", "none"))
+    # bounded-staleness mode (DESIGN.md §13): under 'ssp' a pull at step t
+    # is served exactly the peers' updates of step t - slack - 1, so the
+    # worker runs up to slack + 1 steps ahead of the slowest peer instead
+    # of barriering every step; 'isp' (default) is unchanged
+    consistency = str(job.get("consistency", "isp"))
+    slack = int(job.get("slack", 3))
+    # test/benchmark hook: {"worker": k, "delay_s": d, "every": n} makes
+    # worker k sleep d seconds on every n-th step, inside the measured
+    # compute phase — the injected straggler fig9 --live scores against
+    straggler = job.get("straggler") or None
     ckpt_dir = os.path.join(job["run_dir"], "ckpt", f"w{worker_id:03d}")
 
     params = wl.params0
@@ -262,6 +272,12 @@ def run_worker(
         )
     )
     reintegrate = jax.jit(reintegrate_into)
+    # catch-up merge: peers-only apply (no own update) for the SSP drain
+    apply_peers = jax.jit(
+        lambda p, peers: jax.tree.map(
+            lambda a, c: a + c.astype(a.dtype), p, peers
+        )
+    )
 
     def save_ckpt(step_done: int) -> None:
         nonlocal last_saved
@@ -279,6 +295,100 @@ def run_worker(
         rpc0({"t": "bye", "worker": worker_id, "reason": reason})
         for c in conns:
             c.close()
+
+    def pull_all(step: int):
+        """One barrier's worth of pipelined coalesced pulls (all shards'
+        long polls run server-side concurrently).  Returns (exit_code,
+        shard_parts): code is None on success, 3 on broker abort, 5 on
+        deadline."""
+        nonlocal key_next
+        deadline = time.monotonic() + pull_deadline_s
+        shard_parts: list[Optional[tuple[list, bytes]]] = [None] * n_shards
+        pending = list(range(n_shards))
+        while pending:
+            resps = fanout(
+                pending,
+                [{"t": "pull", "worker": worker_id, "step": step,
+                  "timeout_s": 2.0} for _ in pending],
+                timeout=10.0,
+            )
+            nxt = []
+            for s, (resp, blob) in zip(pending, resps):
+                if resp.get("abort"):
+                    return 3, None
+                members.update(resp)
+                if resp.get("ready"):
+                    if s == 0:
+                        key_next = resp.get("key_next")
+                    shard_parts[s] = (resp["parts"], blob)
+                else:
+                    nxt.append(s)
+            pending = nxt
+            if pending and time.monotonic() > deadline:
+                return 5, None
+        return None, shard_parts
+
+    def decode_parts(shard_parts):
+        """Peers' update slices + eviction-flush slices back into per-leaf
+        accumulators (sharding.LeafBuffers handles split leaves).  Every
+        element lives on exactly one shard and peers arrive in ascending
+        worker order there, so the per-element float32 summation order is
+        fixed for ANY shard count — the replay path and every peer stay
+        bit-identical."""
+        sums = sharding.LeafBuffers(leaf_like)
+        flush_acc: dict[int, sharding.LeafBuffers] = {}
+        for descs, blob in shard_parts:
+            for desc, m, leaf in sharding.iter_part_leaves(descs, blob):
+                if desc.get("flush"):
+                    q = int(desc["worker"])
+                    if q not in flush_acc:  # setdefault would zero-fill
+                        flush_acc[q] = sharding.LeafBuffers(leaf_like)
+                    flush_acc[q].add(m, leaf)
+                else:
+                    sums.add(m, leaf)
+        peers_sum = jax.tree_util.tree_unflatten(
+            treedef0, [sums[k] for k in leaf_keys]
+        )
+        flushes = []
+        for q, acc in flush_acc.items():
+            # a flush is a full replica: reintegrating one with a missing
+            # shard slice would silently fold zeros into every survivor
+            acc.assert_complete(what=f"flush from worker {q}")
+            flushes.append(
+                (q, jax.tree_util.tree_unflatten(
+                    treedef0, [acc[k] for k in leaf_keys]
+                ))
+            )
+        return peers_sum, flushes
+
+    def apply_flushes(params, flushes, deliver_step: int):
+        """Mean-preserving reintegration of leaving peers' replicas, in
+        ascending worker order, divided by the pool size just before the
+        step the flush is effective at (= delivered at, on both models)."""
+        pool_before = members.p_active(deliver_step - 1)
+        for _q, flushed in sorted(flushes, key=lambda kv: kv[0]):
+            params = reintegrate(
+                params, flushed, jnp.asarray(pool_before, jnp.float32)
+            )
+        return params
+
+    def ssp_drain(params):
+        """Catch-up merge: the last regular pull (step T) delivered the
+        frontier T - slack - 1, so the retained steps T - slack .. T are
+        still undelivered.  Pull them via the same schedule (a pull at td
+        delivers td - slack - 1) and apply peers-only, step-ascending —
+        the same per-leaf order a peer that saw them live used.  Returns
+        (exit_code, params); the caller checkpoints at the sentinel step
+        total_steps + 1 afterwards so a respawn never drains twice."""
+        for td in range(total_steps + 1, total_steps + slack + 2):
+            code, shard_parts = pull_all(td)
+            if code is not None:
+                return code, params
+            peers_sum, flushes = decode_parts(shard_parts)
+            params = apply_peers(params, peers_sum)
+            if flushes:
+                params = apply_flushes(params, flushes, td - slack - 1)
+        return None, jax.block_until_ready(params)
 
     t = start_step
     steps_this_invocation = 0
@@ -306,7 +416,18 @@ def run_worker(
             bye("evicted")
             return 0
         if t > total_steps:
-            save_ckpt(t - 1)
+            if consistency == "ssp" and t == total_steps + 1:
+                # drain exactly once: the sentinel checkpoint below makes
+                # a post-drain respawn resume at t = total_steps + 2 and
+                # skip straight to bye; a mid-drain SIGKILL restores a
+                # step <= total_steps, replays (publishes dup-check
+                # bit-identical), and drains again from scratch
+                code, params = ssp_drain(params)
+                if code is not None:
+                    return code
+                save_ckpt(total_steps + 1)
+            else:
+                save_ckpt(t - 1)
             bye("done")
             return 0
         if steps_this_invocation >= invocation_steps:
@@ -339,6 +460,15 @@ def run_worker(
                 jnp.asarray(t, jnp.int32),
             )
         )
+        if (
+            straggler is not None
+            and worker_id == int(straggler["worker"])
+            and t % max(int(straggler.get("every", 1)), 1) == 0
+        ):
+            # injected stall, counted into this worker's measured compute
+            # phase — the peers' barrier exposure to it is what the two
+            # consistency models price differently
+            time.sleep(float(straggler["delay_s"]))
         t_compute = tp()
         # -- encode: shared wire codec, sliced per shard; quantization
         #    error (if any) is error-feedback — it joins the residual,
@@ -379,70 +509,21 @@ def run_worker(
         ):
             members.update(ack)
 
-        deadline = time.monotonic() + pull_deadline_s
-        shard_parts: list[Optional[tuple[list, bytes]]] = [None] * n_shards
-        pending = list(range(n_shards))
-        while pending:
-            resps = fanout(
-                pending,
-                [{"t": "pull", "worker": worker_id, "step": t,
-                  "timeout_s": 2.0} for _ in pending],
-                timeout=10.0,
-            )
-            nxt = []
-            for s, (resp, blob) in zip(pending, resps):
-                if resp.get("abort"):
-                    return 3
-                members.update(resp)
-                if resp.get("ready"):
-                    if s == 0:
-                        key_next = resp.get("key_next")
-                    shard_parts[s] = (resp["parts"], blob)
-                else:
-                    nxt.append(s)
-            pending = nxt
-            if pending and time.monotonic() > deadline:
-                return 5
+        code, shard_parts = pull_all(t)
+        if code is not None:
+            return code
         t_wire = tp()
-        # -- decode: peers' update slices + eviction-flush slices back into
-        #    per-leaf accumulators (sharding.LeafBuffers handles split
-        #    leaves).  Every element lives on exactly one shard and peers
-        #    arrive in ascending worker order there, so the per-element
-        #    float32 summation order is fixed for ANY shard count — the
-        #    replay path and every peer stay bit-identical
-        sums = sharding.LeafBuffers(leaf_like)
-        flush_acc: dict[int, sharding.LeafBuffers] = {}
-        for descs, blob in shard_parts:
-            for desc, m, leaf in sharding.iter_part_leaves(descs, blob):
-                if desc.get("flush"):
-                    q = int(desc["worker"])
-                    if q not in flush_acc:  # setdefault would zero-fill
-                        flush_acc[q] = sharding.LeafBuffers(leaf_like)
-                    flush_acc[q].add(m, leaf)
-                else:
-                    sums.add(m, leaf)
-        peers_sum = jax.tree_util.tree_unflatten(
-            treedef0, [sums[k] for k in leaf_keys]
-        )
-        flushes = []
-        for q, acc in flush_acc.items():
-            # a flush is a full replica: reintegrating one with a missing
-            # shard slice would silently fold zeros into every survivor
-            acc.assert_complete(what=f"flush from worker {q}")
-            flushes.append(
-                (q, jax.tree_util.tree_unflatten(
-                    treedef0, [acc[k] for k in leaf_keys]
-                ))
-            )
+        # -- decode: under 'isp' the parts are the peers' step-t slices;
+        #    under 'ssp' the frontier step t - slack - 1's (empty while
+        #    that is < 1) — same codec, same fixed per-leaf order
+        peers_sum, flushes = decode_parts(shard_parts)
         t_decode = tp()
-        # -- apply (counted as compute): own update + peers + reintegration
+        # -- apply (counted as compute): own update + the delivered peers
+        #    + reintegration of any flush effective at the delivered step
         params = apply_visible(params, u, peers_sum)
         if flushes:
-            pool_before = members.p_active(t - 1)
-            for _q, flushed in sorted(flushes, key=lambda kv: kv[0]):
-                params = reintegrate(
-                    params, flushed, jnp.asarray(pool_before, jnp.float32)
-                )
+            deliver_step = t - slack - 1 if consistency == "ssp" else t
+            params = apply_flushes(params, flushes, deliver_step)
         params = jax.block_until_ready(params)
         residual = res
         t_apply = tp()

@@ -98,6 +98,30 @@ HAVE_FUTEX = _libc is not None
 # enough that peer-death/generation checks stay responsive
 _WAIT_SLICE_S = 0.05
 _POLL_SLEEP_S = 0.0002
+# adaptive spin-then-futex: before parking in the kernel, spin up to a
+# budget tuned from the MEASURED wait times of this word (2x the EWMA,
+# capped) — barrier wakeups that historically arrive within microseconds
+# are caught without paying the ~5-10 us futex syscall + thread switch,
+# while words that historically park for milliseconds skip straight to
+# the futex.  The cap bounds the cpu burned per wait and is overridable
+# for oversubscribed hosts (REPRO_SHM_SPIN_US=0 disables spinning).
+_SPIN_MAX_S = max(float(os.environ.get("REPRO_SHM_SPIN_US", "200")), 0.0) * 1e-6
+
+
+class _AdaptiveWaiter:
+    """Per-futex-word spin budget learned from measured wait durations."""
+
+    __slots__ = ("ewma_s",)
+    _ALPHA = 0.2  # EWMA smoothing of observed wait times
+
+    def __init__(self) -> None:
+        self.ewma_s = 0.0
+
+    def budget_s(self) -> float:
+        return min(2.0 * self.ewma_s, _SPIN_MAX_S)
+
+    def record(self, waited_s: float) -> None:
+        self.ewma_s += self._ALPHA * (waited_s - self.ewma_s)
 # producer commit granularity: one head-publish + wake per frame for
 # small messages, every _COMMIT_CHUNK bytes for large ones — small
 # frames pay ONE wakeup, large frames stream (the consumer's copy-out
@@ -258,6 +282,9 @@ class Segment:
                 self._ring_u64[base + off] = ctypes.c_uint64.from_buffer(
                     buf, base + off
                 )
+        # per-word adaptive spin budgets — process-local state (each side
+        # measures the waits IT experiences), not part of the shared layout
+        self._waiters: dict[int, _AdaptiveWaiter] = {}
 
     # -- lifecycle ------------------------------------------------------------
 
@@ -490,10 +517,29 @@ class Segment:
         w = self._ring_u32[base + futex_off]
         if w.value != captured:
             return  # already moved: don't sleep at all
+        waiter = self._waiters.get(base + futex_off)
+        if waiter is None:
+            waiter = self._waiters[base + futex_off] = _AdaptiveWaiter()
+        t0 = time.monotonic()
+        budget = waiter.budget_s()
+        spins = 0
+        while budget > 0.0:
+            if w.value != captured:
+                waiter.record(time.monotonic() - t0)
+                return
+            spins += 1
+            # monotonic() costs ~50 ns — amortize it across a batch of
+            # word loads so the spin actually spins
+            if spins % 64 == 0 and time.monotonic() - t0 >= budget:
+                break
         if HAVE_FUTEX:
             _futex_wait(ctypes.addressof(w), captured, _WAIT_SLICE_S)
         else:  # pragma: no cover
             time.sleep(_POLL_SLEEP_S)
+        # futex-path waits feed the EWMA too: a word that keeps parking
+        # for milliseconds drags its budget toward the cap ONLY (bounded
+        # spin), one that wakes in microseconds shrinks it back
+        waiter.record(time.monotonic() - t0)
 
 
 def _pid_alive(pid: int) -> bool:

@@ -126,6 +126,8 @@ def reference_updates(
     lr: float = SMALL_LR,
     workload: str = "pmf",
     optimizer: str = "nesterov",
+    consistency: str = "isp",
+    slack: int = 3,
 ) -> tuple[dict, list]:
     """In-process ``core.isp`` replica-semantics replay of a full job.
 
@@ -134,6 +136,14 @@ def reference_updates(
     published at that step (bit-exact reference), and ``final_params[w]``
     is worker w's replica after the last step — what its final checkpoint
     must contain.
+
+    Under ``consistency='ssp'`` the replay mirrors the live runtime's
+    bounded-staleness delivery schedule (DESIGN.md §13): at step t each
+    worker applies its own update plus the peers' updates of the frontier
+    step ``t - slack - 1`` (none while that is < 1), and after the last
+    step drains the still-undelivered tail ``steps - slack .. steps``
+    peers-only, step-ascending — the identical float-summation order the
+    live workers use, so the comparison stays bit-exact.
     """
     import jax
     import jax.numpy as jnp
@@ -160,14 +170,34 @@ def reference_updates(
             lambda a, b, c: a + b + c.astype(a.dtype), p, u, pe
         )
     )
+    apply_p = jax.jit(
+        lambda p, pe: jax.tree.map(
+            lambda a, c: a + c.astype(a.dtype), p, pe
+        )
+    )
 
     import numpy as np
+
+    def peers_acc(sigs: dict, w: int):
+        """np-accumulated peer sum in ascending worker order — the live
+        decode path's exact float order (sharding.LeafBuffers)."""
+        acc = jax.tree.map(
+            lambda x: np.zeros(np.shape(x), np.asarray(x).dtype),
+            wl.params0,
+        )
+        for w2 in sorted(sigs):
+            if w2 != w:
+                acc = jax.tree.map(
+                    lambda a, b: a + np.asarray(b), acc, sigs[w2]
+                )
+        return acc
 
     P = n_workers
     params = [wl.params0] * P
     opts = [opt.init(wl.params0) for _ in range(P)]
     residuals = [jax.tree.map(jnp.zeros_like, wl.params0) for _ in range(P)]
     published: dict[tuple[int, int], PyTree] = {}
+    sigs_hist: dict[int, dict] = {}
     for t in range(1, steps + 1):
         sigs, us = {}, {}
         for w in range(P):
@@ -180,17 +210,21 @@ def reference_updates(
             residuals[w] = r2
             sigs[w], us[w] = sig, u
             published[(w, t)] = sig
+        sigs_hist[t] = sigs
+        d = t if consistency == "isp" else t - slack - 1
         for w in range(P):
-            acc = jax.tree.map(
-                lambda x: np.zeros(np.shape(x), np.asarray(x).dtype),
-                wl.params0,
+            acc = (
+                peers_acc(sigs_hist[d], w) if d >= 1
+                else jax.tree.map(
+                    lambda x: np.zeros(np.shape(x), np.asarray(x).dtype),
+                    wl.params0,
+                )
             )
-            for w2 in sorted(sigs):
-                if w2 != w:
-                    acc = jax.tree.map(
-                        lambda a, b: a + np.asarray(b), acc, sigs[w2]
-                    )
             params[w] = apply_v(params[w], us[w], acc)
+    if consistency == "ssp":
+        for d in range(max(steps - slack, 1), steps + 1):
+            for w in range(P):
+                params[w] = apply_p(params[w], peers_acc(sigs_hist[d], w))
     return published, params
 
 

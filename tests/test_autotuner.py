@@ -106,6 +106,44 @@ def test_s_delta_formula():
     assert any(abs(d.s_delta) < 0.05 for d in scored)
 
 
+def test_d_p_excludes_compile_warmup():
+    """The reference step duration d_P must drop the first observation: it
+    carries the XLA-compile warm-up and would skew the s_Delta horizon."""
+    cfg = AutoTunerConfig(sched_interval_s=2.0, delta_s=1.0,
+                          knee_slope_threshold=0.05, min_points_for_fit=6)
+    tuner = ScaleInAutoTuner(cfg, initial_workers=8)
+    t = np.arange(1, 120, dtype=np.float64)
+    losses = synthetic_loss(t)
+    for i, l in enumerate(losses, start=1):
+        tuner.observe(i, float(l), 10.0 if i == 1 else 1.0)
+        tuner.decide()
+    assert tuner.knee_step is not None
+    assert tuner.d_P == pytest.approx(1.0)
+
+
+def test_under_observed_consumes_interval():
+    """Post-knee, an 'under-observed' decide() must advance the pacing clock
+    like every other outcome — not re-fire the fit on every call."""
+    cfg = AutoTunerConfig(sched_interval_s=5.0, delta_s=2.5,
+                          knee_slope_threshold=0.05, min_points_for_fit=50)
+    tuner = ScaleInAutoTuner(cfg, initial_workers=8)
+    t = np.arange(1, 120, dtype=np.float64)
+    _drive(tuner, synthetic_loss(t))
+    assert tuner.knee_step is not None
+    assert tuner.pool < 8  # knee-initial eviction has fired
+    # keep observing with too few points since the removal for a fit: each
+    # elapsed interval yields exactly one 'under-observed', never back-to-back
+    reasons = []
+    start = len(t)
+    for j in range(12):
+        i = start + 1 + j
+        tuner.observe(i, float(synthetic_loss(np.asarray([i], float))[0]), 1.0)
+        reasons.append(tuner.decide().reason)
+    assert "under-observed" in reasons
+    for a, b in zip(reasons, reasons[1:]):
+        assert not (a == b == "under-observed"), reasons
+
+
 def test_eviction_reintegration_average():
     import jax.numpy as jnp
 

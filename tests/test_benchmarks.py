@@ -1,0 +1,47 @@
+"""Pure-python benchmark helpers (benchmarks/common.py).
+
+Regression for the fig9 speedup bug: ``summarize()`` reports
+``total_wall_s`` for a cell that never reached the loss target, and the
+old speedup code divided by it anyway — a "speedup" against a step-capped
+run, not a measurement.  Speedup must be ``None`` unless BOTH cells
+converged.
+"""
+
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import attach_speedups
+
+
+def _row(P, model, t, converged):
+    return {"P": P, "model": model, "time_to_loss_s": t,
+            "converged": converged}
+
+
+def test_speedup_reported_only_when_both_cells_converged():
+    rows = [
+        _row(4, "bsp", 10.0, True),
+        _row(4, "isp", 5.0, True),
+        _row(4, "ssp", 8.0, False),     # capped, not converged
+        _row(8, "bsp", 20.0, False),    # baseline itself capped
+        _row(8, "isp", 4.0, True),
+    ]
+    attach_speedups(rows)
+    by = {(r["P"], r["model"]): r["speedup_vs_bsp"] for r in rows}
+    assert by[(4, "isp")] == pytest.approx(2.0)
+    assert by[(4, "bsp")] == pytest.approx(1.0)
+    # non-converged cell: no speedup claim
+    assert by[(4, "ssp")] is None
+    # non-converged BASELINE poisons the whole P group
+    assert by[(8, "bsp")] is None
+    assert by[(8, "isp")] is None
+
+
+def test_speedup_none_when_baseline_missing():
+    rows = [_row(16, "isp", 3.0, True)]
+    attach_speedups(rows)
+    assert rows[0]["speedup_vs_bsp"] is None

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core import consistency as cons
 from repro.core.isp import ISPConfig
@@ -57,6 +58,52 @@ def test_ssp_drain_flushes_queue():
     for p in range(P):
         np.testing.assert_allclose(np.asarray(total[p]), np.asarray(want),
                                    rtol=1e-5, atol=1e-6)
+
+
+@given(P=st.integers(min_value=2, max_value=4),
+       slack=st.integers(min_value=1, max_value=4),
+       seed=st.integers(min_value=0, max_value=50))
+@settings(max_examples=20)
+def test_ssp_visibility_bound_property(P, slack, seed):
+    """SSP contract, for ANY (P, slack): an update produced at step t is
+    fully visible by step t + slack."""
+    params = _stacked(P, jax.random.PRNGKey(seed))
+    state = cons.ssp_init(params, slack)
+    first = _stacked(P, jax.random.PRNGKey(seed + 1))
+    visible, state = cons.ssp_step(state, first)
+    seen = np.asarray(visible["w"])
+    zeros = _stacked(P, jax.random.PRNGKey(0), scale=0.0)
+    for _ in range(slack):
+        visible, state = cons.ssp_step(state, zeros)
+        seen = seen + np.asarray(visible["w"])
+    want = np.asarray(jnp.sum(first["w"], axis=0))
+    for p in range(P):
+        np.testing.assert_allclose(seen[p], want, rtol=1e-5, atol=1e-6)
+
+
+@given(P=st.integers(min_value=2, max_value=4),
+       slack=st.integers(min_value=1, max_value=4),
+       n_steps=st.integers(min_value=1, max_value=5),
+       seed=st.integers(min_value=0, max_value=50))
+@settings(max_examples=20)
+def test_ssp_drain_conserves_mass_property(P, slack, n_steps, seed):
+    """The delay queue never loses or duplicates update mass: everything
+    made visible across the steps plus ``ssp_drain``'s remainder equals
+    the sum of every update fed in, per replica row."""
+    params = _stacked(P, jax.random.PRNGKey(seed))
+    state = cons.ssp_init(params, slack)
+    total_in = np.zeros((P, 6), np.float32)
+    total_seen = np.zeros((P, 6), np.float32)
+    for k in range(n_steps):
+        upd = _stacked(P, jax.random.PRNGKey(seed + 10 + k))
+        total_in = total_in + np.asarray(jnp.sum(upd["w"], axis=0))
+        visible, state = cons.ssp_step(state, upd)
+        total_seen = total_seen + np.asarray(visible["w"])
+    rest = cons.ssp_drain(state)
+    total_seen = total_seen + np.asarray(rest["w"])
+    for p in range(P):
+        np.testing.assert_allclose(total_seen[p], total_in[p],
+                                   rtol=1e-4, atol=1e-5)
 
 
 def test_isp_exchange_bounds_divergence():

@@ -1,0 +1,214 @@
+"""Live bounded-staleness (SSP) pull path (DESIGN.md §13).
+
+Protocol-level: the broker's staleness-bounded release must never serve a
+pull at step t before every update from steps <= t - slack - 1 is stored,
+must serve exactly the frontier step t - slack - 1 when it releases, and
+must preserve both properties across a SIGKILL-style shard respawn (WAL
+replay rebuilds the per-worker clocks).
+
+End-to-end: the multi-process runtime under ``consistency='ssp'`` must be
+bit-identical to the in-process reference replay — including through a
+worker SIGKILL + checkpoint-respawn — while the default ISP path stays
+byte-for-byte what it always was (asserted by benchmarks/wire_guard.py).
+"""
+
+from __future__ import annotations
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import protocol, run_job
+
+from runtime_harness import (
+    SMALL_P as P,
+    SMALL_STEPS as STEPS,
+    BrokerCluster,
+    final_params,
+    reference_updates,
+    small_pmf_cfg,
+)
+
+SLACK = 2
+
+JOB = {
+    "workload": "pmf",
+    "workload_cfg": {},
+    "n_workers": 2,
+    "total_steps": 10,
+    "n_batches": 5,
+    "consistency": "ssp",
+    "slack": SLACK,
+}
+
+
+def _publish(cluster, worker, step, meta, payload, shard=0):
+    cluster.rpc(
+        {"t": "publish", "worker": worker, "step": step, "meta": meta,
+         "loss": 1.0, "sent_fraction": 1.0, "inv_err": 0.0},
+        payload, shard=shard,
+    )
+
+
+@pytest.fixture()
+def cluster():
+    with BrokerCluster(dict(JOB)) as c:
+        yield c
+
+
+def test_ssp_pull_ready_immediately_below_bound(cluster):
+    """While t - slack - 1 < 1 there is nothing a pull could owe: it
+    releases immediately with empty parts, even with NOTHING published."""
+    for step in range(1, SLACK + 2):
+        resp, blob = cluster.rpc(
+            {"t": "pull", "worker": 0, "step": step, "timeout_s": 0.2}
+        )
+        assert resp["ready"] is True
+        assert resp["visible_step"] == step - SLACK - 1
+        assert protocol.unpack_parts(resp["parts"], blob) == []
+
+
+def test_ssp_release_respects_staleness_bound(cluster):
+    """A pull at step t blocks until every worker's contiguous publish
+    frontier reaches t - slack - 1; a publish below the frontier is not
+    enough to release it."""
+    for s in (1, 2, 3):
+        meta, payload = protocol.encode_tree({"x": jnp.full(4, float(s))})
+        _publish(cluster, 0, s, meta, payload)
+    # worker 1 has published nothing: frontier step 2 is not stored yet
+    resp, _ = cluster.rpc(
+        {"t": "pull", "worker": 0, "step": SLACK + 3, "timeout_s": 0.2}
+    )
+    assert resp["ready"] is False
+    w1_step2 = protocol.encode_tree({"x": jnp.full(4, 12.0)})
+    done = {}
+
+    def late():
+        m1, p1 = protocol.encode_tree({"x": jnp.full(4, 11.0)})
+        _publish(cluster, 1, 1, m1, p1)
+        # clock(1) == 1 < frontier 2: the pull below must still be parked
+        _publish(cluster, 1, 2, *w1_step2)
+        done["ok"] = True
+
+    th = threading.Thread(target=late)
+    th.start()
+    resp, blob = cluster.rpc(
+        {"t": "pull", "worker": 0, "step": SLACK + 3, "timeout_s": 5.0}
+    )
+    th.join()
+    assert done.get("ok") and resp["ready"] is True
+    assert resp["visible_step"] == 2  # (SLACK+3) - SLACK - 1
+    parts = protocol.unpack_parts(resp["parts"], blob)
+    assert [p[0]["worker"] for p in parts] == [1]
+    got = protocol.decode_tree(
+        parts[0][0]["meta"], parts[0][1], {"x": jnp.zeros(4)}
+    )
+    np.testing.assert_array_equal(got["x"], np.full(4, 12.0))
+
+
+def test_ssp_serves_exactly_the_frontier_step(cluster):
+    metas = {}
+    for s in (1, 2, 3):
+        for w in (0, 1):
+            meta, payload = protocol.encode_tree(
+                {"x": jnp.full(4, float(10 * w + s))}
+            )
+            metas[(w, s)] = (meta, payload)
+            _publish(cluster, w, s, meta, payload)
+    resp, blob = cluster.rpc(
+        {"t": "pull", "worker": 0, "step": SLACK + 3, "timeout_s": 5.0}
+    )
+    assert resp["ready"] is True and resp["visible_step"] == 2
+    parts = protocol.unpack_parts(resp["parts"], blob)
+    assert [p[0]["worker"] for p in parts] == [1]
+    got = protocol.decode_tree(
+        parts[0][0]["meta"], parts[0][1], {"x": jnp.zeros(4)}
+    )
+    np.testing.assert_array_equal(got["x"], np.full(4, 12.0))
+
+
+def test_ssp_release_survives_shard_respawn(tmp_path):
+    """WAL replay must rebuild the per-worker clocks: a respawned shard
+    keeps blocking exactly where the dead one did."""
+    meta, payload = protocol.encode_tree({"x": jnp.ones(4)})
+    with BrokerCluster(dict(JOB), wal_dir=str(tmp_path)) as c1:
+        for s in (1, 2):
+            _publish(c1, 0, s, meta, payload)
+        _publish(c1, 1, 1, meta, payload)
+    with BrokerCluster(dict(JOB), wal_dir=str(tmp_path)) as c2:
+        core = c2.coordinator.core
+        assert core.clocks == {0: 2, 1: 1}
+        # frontier 1 is stored -> pull at 1 + slack + 1 releases
+        resp, _ = c2.rpc(
+            {"t": "pull", "worker": 0, "step": SLACK + 2, "timeout_s": 2.0}
+        )
+        assert resp["ready"] is True and resp["visible_step"] == 1
+        # frontier 2 is NOT (worker 1's clock is 1) -> still blocked,
+        # exactly as before the crash
+        resp, _ = c2.rpc(
+            {"t": "pull", "worker": 0, "step": SLACK + 3, "timeout_s": 0.2}
+        )
+        assert resp["ready"] is False
+
+
+# -- end-to-end: real processes ----------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def ssp_run(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("faas_ssp")
+    cfg = small_pmf_cfg(tmp / "job", consistency="ssp", slack=SLACK,
+                        retain_updates=True)
+    return cfg, run_job(cfg)
+
+
+def test_ssp_live_matches_reference_replay(ssp_run):
+    cfg, res = ssp_run
+    assert res["steps"] == STEPS and res["dup_mismatches"] == 0
+    ref, ref_final = reference_updates(consistency="ssp", slack=SLACK)
+    pub = {(u["worker"], u["step"]): u["update"] for u in res["updates"]}
+    assert len(pub) == P * STEPS
+    for (w, t), sig in sorted(ref.items()):
+        for a, b in zip(jax.tree.leaves(sig), jax.tree.leaves(pub[(w, t)])):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"worker {w} step {t} published update diverged",
+            )
+    for w in range(P):
+        step, live = final_params(cfg, w)
+        assert step == STEPS + 1  # the post-drain sentinel checkpoint
+        for a, b in zip(jax.tree.leaves(ref_final[w]), jax.tree.leaves(live)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"worker {w} final (drained) params diverged",
+            )
+
+
+def test_ssp_sigkill_respawn_stays_bit_identical(tmp_path):
+    """A SIGKILLed worker replays from its checkpoint through the SSP
+    schedule: re-publishes dup-check bit-identical and the drained final
+    params still equal the reference — the t - slack - 1 bound held
+    through the crash (a violation would change what the respawned
+    replica saw, and the bit-compare would catch it)."""
+    cfg = small_pmf_cfg(
+        tmp_path / "job", consistency="ssp", slack=SLACK,
+        checkpoint_every=4, kill_worker_at_step=(1, 5),
+        deadline_s=240.0,
+    )
+    res = run_job(cfg)
+    assert res["n_respawns"] >= 1
+    assert res["respawns"][0]["worker"] == 1
+    assert res["steps"] == STEPS
+    assert res["dup_mismatches"] == 0
+    _ref, ref_final = reference_updates(consistency="ssp", slack=SLACK)
+    for w in range(P):
+        step, live = final_params(cfg, w)
+        assert step == STEPS + 1
+        for a, b in zip(jax.tree.leaves(ref_final[w]), jax.tree.leaves(live)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"worker {w} final params diverged after respawn",
+            )

@@ -33,7 +33,7 @@ def test_faas_cheaper_when_scaled_in():
 
 
 def _mini_pmf(P=4, platform=Platform.MLLESS, model=cons.Model.BSP,
-              tuner=None, steps=30, seed=0):
+              tuner=None, steps=30, seed=0, slack=3, straggler=None):
     cfg = pmf.PMFConfig(n_users=200, n_movies=300, rank=8)
     params = pmf.init(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
@@ -49,12 +49,17 @@ def _mini_pmf(P=4, platform=Platform.MLLESS, model=cons.Model.BSP,
             rating=jnp.asarray(ratings[idx]),
         )
 
+    straggler = straggler or {}
     sim = ServerlessSimulator(
         SimulatorConfig(
             n_workers=P, platform=platform,
             consistency=cons.ConsistencyConfig(model=model,
-                                               isp=ISPConfig(v=0.7)),
+                                               isp=ISPConfig(v=0.7),
+                                               slack=slack),
             sparse_model=True, seed=seed,
+            straggler_worker=straggler.get("worker"),
+            straggler_delay_s=straggler.get("delay_s", 0.0),
+            straggler_every=straggler.get("every", 1),
         ),
         grad_fn=partial(pmf.grad_fn, cfg),
         optimizer=optim.make("nesterov", 0.05),
@@ -114,6 +119,35 @@ def test_eviction_masks_worker_inert():
     assert res.summary["final_workers"] == 4
     assert len(res.worker_lifetimes_s) == 4
     assert all(lt > 0 for lt in res.worker_lifetimes_s)
+
+
+def test_ssp_pipeline_pricing_is_physical():
+    """The modelled SSP wall prices the bounded-staleness pipeline
+    (DESIGN.md §13): per-step wall increments are frontier advances, so
+    they are non-negative, they sum to the pool frontier, and — since a
+    worker never waits for a barrier, only for its own chain and the
+    s-lagged gate — the pipelined wall can only beat the synchronous
+    barrier over the identical busy-time stream (BSP at the same seed
+    ships the same bytes and draws the same jitter)."""
+    bsp = _mini_pmf(model=cons.Model.BSP, steps=20)
+    ssp = _mini_pmf(model=cons.Model.SSP, steps=20, slack=3)
+    assert all(r.wall_s >= 0.0 for r in ssp.records)
+    assert ssp.total_wall_s == pytest.approx(
+        sum(r.wall_s for r in ssp.records)
+    )
+    assert ssp.total_wall_s <= bsp.total_wall_s + 1e-9
+
+
+def test_straggler_injection_prices_the_delay():
+    """An intermittent straggler (delay d every k-th step) under a
+    synchronous barrier costs exactly the injected delays: the hit worker
+    is the per-step max on each hit step."""
+    straggler = {"worker": 0, "delay_s": 0.5, "every": 4}
+    base = _mini_pmf(model=cons.Model.ISP, steps=20)
+    slow = _mini_pmf(model=cons.Model.ISP, steps=20, straggler=straggler)
+    n_hits = 20 // 4
+    excess = slow.total_wall_s - base.total_wall_s
+    assert excess == pytest.approx(n_hits * 0.5, rel=0.05)
 
 
 def test_comm_model_monotonicity():

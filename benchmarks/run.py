@@ -27,6 +27,7 @@ def main() -> None:
         fig8_cost_vs_loss,
         fig9_ssp_vs_isp,
         fig10_scalability,
+        fig11_multijob,
         table3_weak_scaling,
     )
 
@@ -37,6 +38,7 @@ def main() -> None:
         "fig8": fig8_cost_vs_loss,
         "fig9": fig9_ssp_vs_isp,
         "fig10": fig10_scalability,
+        "fig11": fig11_multijob,
         "table3": table3_weak_scaling,
     }
     argv = sys.argv[1:]

@@ -19,6 +19,10 @@ baseline (``benchmarks/wire_baseline.json``):
 * the SHM run's accounted wire bytes, per-shard split AND final
   parameters must be bit-identical to the TCP runs' — the transport
   must never change a byte or a bit of the math (§12's invariant);
+* the MULTIJOB leg packs the same smoke job with an LR co-tenant on one
+  fleet pool (DESIGN.md §14): job-namespaced keys mean the co-tenant may
+  not change a byte of the smoke job's update stream nor a bit of its
+  final parameters — both gate against the single-job leg;
 * ``cost_measured_over_predicted`` (its ``_sharded`` twin billing
   ``n_redis == 2``, and its ``_shm`` twin on the same topology) — the
   live/model cost calibration; a >10% regression over the baseline
@@ -134,6 +138,54 @@ def run_smoke(n_brokers: int = 1, transport: str = "tcp") -> dict:
     }
 
 
+def run_multijob_smoke() -> dict:
+    """The fleet leg (DESIGN.md §14): the SAME smoke job packed with a
+    second tenant on one shared pool.  Per-job key namespaces mean the
+    co-tenant may not perturb a byte of job A's update stream nor a bit
+    of its final parameters — both gate against the single-job leg."""
+    from repro.runtime import (
+        FaaSJobConfig, FleetConfig, final_params_digest, run_fleet,
+    )
+
+    root = tempfile.mkdtemp(prefix="wire_guard_fleet_")
+    job_a = FaaSJobConfig(
+        run_dir=os.path.join(root, "jobs", "a"),
+        workload="pmf",
+        workload_cfg=dict(SMOKE_WCFG),
+        n_workers=SMOKE_P,
+        total_steps=SMOKE_STEPS,
+        checkpoint_every=100,
+        optimizer="nesterov",
+        lr=0.08,
+        isp_v=0.7,
+        autotune=False,
+        deadline_s=240.0,
+    )
+    job_b = FaaSJobConfig(
+        run_dir=os.path.join(root, "jobs", "b"),
+        workload="lr",
+        workload_cfg={"n_samples": 2000, "batch_size": 128},
+        n_workers=2,
+        total_steps=6,
+        checkpoint_every=100,
+        optimizer="nesterov",
+        lr=0.05,
+        isp_v=0.7,
+        autotune=False,
+        deadline_s=240.0,
+    )
+    res = run_fleet(FleetConfig(
+        run_dir=root, jobs={"a": job_a, "b": job_b},
+    ))
+    a = res["jobs"]["a"]
+    return {
+        "wire_bytes_total": float(a["wire_bytes_total"]),
+        "dup_mismatches": res["dup_mismatches"],
+        "final_params_sha256": final_params_digest(job_a),
+        "packed_with": "lr",
+    }
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--update", action="store_true",
@@ -150,6 +202,7 @@ def main() -> int:
         single = run_smoke(n_brokers=1)
         sharded = run_smoke(n_brokers=SMOKE_SHARDS)
         shm = run_smoke(n_brokers=SMOKE_SHARDS, transport="shm")
+        multijob = run_multijob_smoke()
     except Exception as e:  # noqa: BLE001 - CI wants a clean signal
         print(f"wire_guard: smoke run failed: {e}", file=sys.stderr)
         return 2
@@ -169,7 +222,9 @@ def main() -> int:
         ),
     }
     print(json.dumps(
-        {"single": single, "sharded": sharded, "shm": shm}, indent=1
+        {"single": single, "sharded": sharded, "shm": shm,
+         "multijob": multijob},
+        indent=1,
     ))
 
     # structural invariants need no baseline: neither the topology nor the
@@ -218,9 +273,29 @@ def main() -> int:
         )
         ok = False
     if sharded["dup_mismatches"] or single["dup_mismatches"] \
-            or shm["dup_mismatches"]:
+            or shm["dup_mismatches"] or multijob["dup_mismatches"]:
         print("wire_guard: REGRESSION: dup_mismatches != 0",
               file=sys.stderr)
+        ok = False
+    # the fleet leg: packing a co-tenant onto the pool may not change a
+    # byte of the smoke job's update stream nor a bit of its parameters
+    if multijob["wire_bytes_total"] != single["wire_bytes_total"]:
+        print(
+            "wire_guard: REGRESSION: multijob wire_bytes_total "
+            f"{multijob['wire_bytes_total']} != single-job "
+            f"{single['wire_bytes_total']} (a co-tenant changed the "
+            "smoke job's bytes)",
+            file=sys.stderr,
+        )
+        ok = False
+    if multijob["final_params_sha256"] != single["final_params_sha256"]:
+        print(
+            "wire_guard: REGRESSION: multijob final params "
+            f"{multijob['final_params_sha256']} != single-job "
+            f"{single['final_params_sha256']} (a co-tenant perturbed "
+            "the smoke job's math)",
+            file=sys.stderr,
+        )
         ok = False
 
     if args.update or not os.path.exists(BASELINE):

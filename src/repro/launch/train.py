@@ -457,6 +457,71 @@ def register_runtime(name: str):
 register_runtime("inproc")(train)
 
 
+def _fleet_faas(args, run_dir: str) -> dict:
+    """--jobs: N concurrent jobs on ONE shared pool (runtime.scheduler).
+
+    The jobs file maps job id -> FaaSJobConfig field overrides (optionally
+    under a top-level "jobs" key, with "pool_budget" alongside)::
+
+        {"pool_budget": 4,
+         "jobs": {"pmf0": {"workload": "pmf", "n_workers": 3,
+                           "total_steps": 60},
+                  "lr0": {"workload": "lr", "n_workers": 2,
+                          "total_steps": 40, "consistency": "ssp"}}}
+
+    CLI flags (--n-brokers, --transport, --wire-quant, ...) are the fleet
+    defaults; per-job overrides win.  Pool topology must agree across jobs
+    (they share the broker processes).
+    """
+    from repro.runtime import FaaSJobConfig, FleetConfig, run_fleet
+
+    with open(args.jobs) as f:
+        doc = json.load(f)
+    specs = doc.get("jobs", doc) if isinstance(doc, dict) else None
+    if not isinstance(specs, dict) or not specs:
+        raise SystemExit(f"--jobs {args.jobs}: expected a job-id mapping")
+    pool_budget = args.pool_budget
+    if pool_budget is None and isinstance(doc, dict):
+        pool_budget = doc.get("pool_budget")
+    fields = {f.name for f in dataclasses.fields(FaaSJobConfig)}
+    jobs = {}
+    for jid, spec in specs.items():
+        unknown = set(spec) - fields
+        if unknown:
+            raise SystemExit(
+                f"--jobs job {jid!r}: unknown fields {sorted(unknown)}"
+            )
+        base = dict(
+            run_dir=os.path.join(run_dir, "jobs", str(jid)),
+            workload=args.workload,
+            n_workers=args.workers,
+            total_steps=args.steps,
+            invocation_steps=args.invocation_steps,
+            checkpoint_every=args.checkpoint_every,
+            optimizer=args.optimizer,
+            lr=args.lr,
+            isp_v=args.isp_v,
+            wire_scheme=args.wire_scheme or "auto",
+            wire_quant=args.wire_quant,
+            n_brokers=getattr(args, "n_brokers", 1),
+            transport=getattr(args, "transport", "tcp"),
+            consistency=getattr(args, "consistency", "isp"),
+            slack=getattr(args, "slack", 3),
+            autotune=args.autotune,
+            seed=args.seed,
+        )
+        base.update(spec)
+        jobs[str(jid)] = FaaSJobConfig(**base)
+    result = run_fleet(FleetConfig(
+        run_dir=run_dir, jobs=jobs, pool_budget=pool_budget,
+    ))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1, default=str)
+    return result
+
+
 @register_runtime("faas")
 def train_faas(args) -> dict:
     """Run the job on the multi-process FaaS runtime (repro.runtime)."""
@@ -468,6 +533,8 @@ def train_faas(args) -> dict:
     run_dir = args.run_dir or args.checkpoint_dir or tempfile.mkdtemp(
         prefix="repro_faas_"
     )
+    if getattr(args, "jobs", None):
+        return _fleet_faas(args, run_dir)
     cfg = FaaSJobConfig(
         run_dir=run_dir,
         workload=args.workload,
@@ -564,12 +631,22 @@ def main() -> None:
                     help="faas: SSP staleness bound (ignored under isp)")
     ap.add_argument("--run-dir", default=None,
                     help="faas: checkpoints + worker logs directory")
+    ap.add_argument("--jobs", default=None,
+                    help="faas: JSON file of N jobs to run CONCURRENTLY on "
+                    "one shared broker/worker pool (runtime.scheduler); "
+                    "maps job id -> FaaSJobConfig overrides")
+    ap.add_argument("--pool-budget", type=int, default=None,
+                    help="faas --jobs: max concurrent active (worker, job) "
+                    "pairs; the scheduler evicts fair-share beyond it")
     args = ap.parse_args()
     res = RUNTIMES[args.runtime](args)
-    print(json.dumps(
-        {k: v for k, v in res.items() if k not in ("history", "updates")},
-        indent=1, default=str,
-    ))
+    slim = {k: v for k, v in res.items() if k not in ("history", "updates")}
+    if isinstance(slim.get("jobs"), dict):  # fleet: per-job histories too
+        slim["jobs"] = {
+            j: {k: v for k, v in r.items() if k != "history"}
+            for j, r in slim["jobs"].items()
+        }
+    print(json.dumps(slim, indent=1, default=str))
 
 
 if __name__ == "__main__":

@@ -13,10 +13,17 @@ meters real per-worker lifetimes at the FaaS billing quantum.
     worker      — stateless ISP worker entrypoint (subprocess)
     supervisor  — spawn/evict/respawn controller (workers AND broker
                   shards), billing with n_redis == n_brokers, results
+    scheduler   — fleet control plane: N concurrent jobs bin-packed on
+                  ONE shared broker/worker pool (§14), merged billing
     protocol    — thin veneer over repro.wire (codec + framing, §10)
     workload    — named deterministic workloads (pmf, lr)
 """
 
+from repro.runtime.scheduler import (  # noqa: F401
+    FleetConfig,
+    FleetScheduler,
+    run_fleet,
+)
 from repro.runtime.supervisor import (  # noqa: F401
     FaaSJobConfig,
     PMF_QUICKSTART_CFG,

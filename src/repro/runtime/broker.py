@@ -134,10 +134,21 @@ class WriteAheadLog:
 
 
 class BrokerCore:
-    """All shard state + request handling, guarded by one lock/condition."""
+    """All shard state + request handling, guarded by one lock/condition.
 
-    def __init__(self, job: dict, shard_id: int = 0, n_shards: int = 1):
+    One core holds ONE job's store/barrier/telemetry state.  Under the
+    multi-job control plane (DESIGN.md §14) the shard process hosts one
+    core per admitted job and routes requests by their ``job`` header;
+    ``job_tag`` is that routing id — it is stamped onto every WAL record
+    this core writes (so a shared per-shard log replays back into the
+    right core) and is ``None`` for a solo job, whose records stay
+    byte-identical to the single-job build's.
+    """
+
+    def __init__(self, job: dict, shard_id: int = 0, n_shards: int = 1,
+                 job_tag: Optional[str] = None):
         self.job = dict(job)
+        self.job_tag = job_tag
         self.shard_id = int(shard_id)
         self.n_shards = int(n_shards)
         self.P = int(job["n_workers"])
@@ -214,6 +225,12 @@ class BrokerCore:
 
     def _log(self, header: dict, payload: bytes = b"") -> None:
         if self._wal is not None and not self._replaying:
+            if self.job_tag is not None and "job" not in header:
+                # coordinator-minted records (evict_apply grants,
+                # dup_mismatch markers) have no worker-supplied job
+                # header; stamp the core's tag so a shared fleet WAL
+                # replays them back into this core
+                header = {**header, "job": self.job_tag}
             self._wal.append(header, payload)
 
     # -- membership -----------------------------------------------------------
@@ -294,7 +311,12 @@ class BrokerCore:
     def _op_hello(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
         with self._lock:
             w = int(h["worker"])
-            self.statuses[w] = "running"
+            if not h.get("warm"):
+                # a warm hello (pre-warmed respawn) only fetches the job
+                # config — the PREVIOUS invocation still owns the slot's
+                # status until it says bye, or the reaper would
+                # misclassify its clean exit as a crash
+                self.statuses[w] = "running"
             resp = {
                 "ok": True,
                 "job": self.job,
@@ -640,7 +662,6 @@ def _account_request(core: BrokerCore, header: dict, payload: bytes,
 
 class _Handler(socketserver.BaseRequestHandler):
     def handle(self) -> None:  # one persistent connection, many requests
-        core: BrokerCore = self.server.core  # type: ignore[attr-defined]
         broker: "Broker" = self.server.broker  # type: ignore[attr-defined]
         try:
             self.request.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
@@ -653,14 +674,16 @@ class _Handler(socketserver.BaseRequestHandler):
                     resp = broker.shm_serve(header)
                     protocol.send_msg(self.request, resp)
                     continue
-                resp, blob = core.handle(header, payload)
+                core, resp, blob = broker.dispatch(header, payload)
                 out = protocol.send_msg(self.request, resp, blob)
                 _account_request(core, header, payload, out)
-                if core.shutting_down:
-                    # signal process exit only AFTER the (shutdown)
-                    # response reached the wire — the requester must get
-                    # its final stats back
-                    core.shutdown_event.set()
+                if core.shutting_down and broker.all_shutting_down():
+                    # signal process exit only AFTER the last job's
+                    # (shutdown) response reached the wire — the
+                    # requester must get its final stats back; with
+                    # other jobs still live the connection stays up
+                    for c in broker.cores.values():
+                        c.shutdown_event.set()
                     break
         except (ConnectionError, ValueError, OSError):
             pass  # client vanished mid-stream; nothing to clean up
@@ -680,9 +703,17 @@ class Broker:
     one daemon thread per segment running the same handler loop the TCP
     connections run (DESIGN.md §12.3).
 
-    With ``wal_path`` the core replays any existing log BEFORE the port is
-    bound (a respawned shard never serves from partial state) and appends
+    With ``wal_path`` the cores replay any existing log BEFORE the port is
+    bound (a respawned shard never serves from partial state) and append
     every subsequent mutation to it.
+
+    Multi-job (DESIGN.md §14): a config with a ``"jobs"`` key —
+    ``{"jobs": {job_id: job_dict, ...}}`` — hosts one independent
+    ``BrokerCore`` per job in this process, all sharing one TCP port,
+    one WAL file, and the shm segments.  Requests route by their
+    ``job`` header; a request without one goes to the sole core (so
+    single-job traffic is byte-identical to the single-core build).
+    ``self.core`` remains the sole/first core for solo-path callers.
     """
 
     def __init__(
@@ -694,16 +725,77 @@ class Broker:
         n_shards: int = 1,
         wal_path: Optional[str] = None,
     ):
-        self.core = BrokerCore(job, shard_id=shard_id, n_shards=n_shards)
+        jobs = job.get("jobs") if isinstance(job, dict) else None
+        if jobs:
+            self.cores: dict[Optional[str], BrokerCore] = {
+                str(jid): BrokerCore(
+                    jdict, shard_id=shard_id, n_shards=n_shards,
+                    job_tag=str(jid),
+                )
+                for jid, jdict in jobs.items()
+            }
+        else:
+            self.cores = {
+                None: BrokerCore(job, shard_id=shard_id, n_shards=n_shards)
+            }
+        self.core = next(iter(self.cores.values()))
         self.replayed = 0
         if wal_path:
-            self.replayed = self.core.attach_wal(wal_path)
+            self.replayed = self._attach_shared_wal(wal_path)
         self._server = _Server((host, port), _Handler)
         self._server.core = self.core  # type: ignore[attr-defined]
         self._server.broker = self  # type: ignore[attr-defined]
         self._thread: Optional[threading.Thread] = None
         self._shm_threads: dict[str, threading.Thread] = {}
         self._shm_lock = threading.Lock()
+
+    # -- multi-core routing ----------------------------------------------------
+
+    def dispatch(
+        self, header: dict, payload: bytes
+    ) -> tuple[BrokerCore, dict, bytes]:
+        """Route a request to its job's core by the ``job`` header and
+        handle it there; returns the core too so the caller accounts the
+        bytes on the right job's meter."""
+        jid = header.get("job")
+        core = self.cores.get(jid)
+        if core is None and jid is None and len(self.cores) == 1:
+            core = self.core
+        if core is None:
+            return self.core, {"ok": False, "error": f"unknown job {jid!r}"}, b""
+        resp, blob = core.handle(header, payload)
+        return core, resp, blob
+
+    def all_shutting_down(self) -> bool:
+        return all(c.shutting_down for c in self.cores.values())
+
+    def _attach_shared_wal(self, path: str) -> int:
+        """Replay one shared per-shard WAL into every core (records route
+        by their ``job`` header), truncate any torn tail, then append all
+        cores' subsequent mutations to the same (thread-safe) log.
+        Identical to ``BrokerCore.attach_wal`` when there is one core."""
+        replayed = 0
+        if os.path.exists(path):
+            valid_end = 0
+            for c in self.cores.values():
+                c._replaying = True
+            try:
+                for header, payload, end in (
+                    WriteAheadLog.iter_records_with_end(path)
+                ):
+                    self.dispatch(header, payload)
+                    replayed += 1
+                    valid_end = end
+            finally:
+                for c in self.cores.values():
+                    c._replaying = False
+            if valid_end < os.path.getsize(path):
+                with open(path, "r+b") as f:
+                    f.truncate(valid_end)
+        wal = WriteAheadLog(path)
+        for c in self.cores.values():
+            c._wal = wal
+        return replayed
 
     # -- shared-memory data path ----------------------------------------------
 
@@ -734,18 +826,16 @@ class Broker:
     def _serve_shm_segment(self, name: str) -> None:
         from repro.wire import shm
 
-        core = self.core
-
         def stopping() -> bool:
-            return core.shutting_down
+            return self.all_shutting_down()
 
-        while not core.shutting_down:
+        while not self.all_shutting_down():
             try:
                 chan = shm.ShmServerChannel(name, stop=stopping)
             except (ConnectionError, OSError, FileNotFoundError):
                 return  # segment gone (worker slot torn down)
             try:
-                while not core.shutting_down:
+                while not self.all_shutting_down():
                     try:
                         rid, header, payload = chan.recv()
                     except shm.TornFrameError:
@@ -754,11 +844,11 @@ class Broker:
                         # ring reset + generation bump make the client
                         # replay its request from a clean stream
                         break
-                    resp, blob = core.handle(header, payload)
+                    core, resp, blob = self.dispatch(header, payload)
                     out = chan.send(rid, resp, blob)
                     _account_request(core, header, payload, out)
             except (ConnectionError, OSError, TimeoutError, ValueError):
-                chan.close(mark_closed=core.shutting_down)
+                chan.close(mark_closed=self.all_shutting_down())
                 return  # peer death or shutdown: this channel is done
             chan.close()  # torn-frame break: loop around and re-serve
 
@@ -778,10 +868,11 @@ class Broker:
     def stop(self, timeout: float = 5.0) -> bool:
         """Stop serving; returns False if the server thread failed to join
         within ``timeout`` (a wedged handler the caller should surface)."""
-        with self.core._cond:
-            self.core.shutting_down = True
-            self.core._cond.notify_all()
-        self.core.shutdown_event.set()
+        for core in self.cores.values():
+            with core._cond:
+                core.shutting_down = True
+                core._cond.notify_all()
+            core.shutdown_event.set()
         self._server.shutdown()
         self._server.server_close()
         joined = True
@@ -793,8 +884,12 @@ class Broker:
         for t in shm_threads:  # they exit within one wait slice (~50 ms)
             t.join(timeout=timeout)
             joined = joined and not t.is_alive()
-        if self.core._wal is not None:
-            self.core._wal.close()
+        # cores share one WAL in fleet mode — close each distinct log once
+        closed: set[int] = set()
+        for core in self.cores.values():
+            if core._wal is not None and id(core._wal) not in closed:
+                closed.add(id(core._wal))
+                core._wal.close()
         return joined
 
 
@@ -831,7 +926,10 @@ def main() -> None:
         flush=True,
     )
     try:
-        broker.core.shutdown_event.wait()
+        # fleet configs host several cores; the process exits only once
+        # every job's core has been shut down
+        for core in broker.cores.values():
+            core.shutdown_event.wait()
     except KeyboardInterrupt:
         pass
     broker.stop()

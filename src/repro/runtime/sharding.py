@@ -116,13 +116,36 @@ def iter_subleaves(
         yield f"{key}#{i:04d}", off, min(step, n - off)
 
 
+def job_namespace(job_id: Optional[str]) -> str:
+    """The per-job leaf-key prefix of the multi-job control plane
+    (DESIGN.md §14): ``'j<id>/'`` for a fleet job, ``''`` for a solo job —
+    the empty prefix keeps the single-job wire metadata byte-identical.
+    ``'/'`` cannot occur in a job id (ids are validated by the scheduler)
+    and terminates the prefix, so two distinct jobs can never collide on a
+    key and a prefixed key can never equal an unprefixed one."""
+    if job_id is None or job_id == "":
+        return ""
+    jid = str(job_id)
+    if "/" in jid or "#" in jid:
+        raise ValueError(f"job id must not contain '/' or '#': {jid!r}")
+    return f"j{jid}/"
+
+
 def tree_assignment(
-    tree: PyTree, n_shards: int, split_bytes: int = 0
+    tree: PyTree, n_shards: int, split_bytes: int = 0, namespace: str = ""
 ) -> dict[str, int]:
     """The canonical assignment for a parameter template: keys are the
     checkpoint-store path keys (``wire.codec.tree_keys``) — or their
     ``key#chunk`` subkeys when ``split_bytes`` carves oversized leaves —
     weights the dense bytes, the quantity the balance bound is stated in.
+
+    With a ``namespace`` (``job_namespace(job_id)``, multi-job control
+    plane) every key is prefixed before placement.  Because the prefix is
+    uniform across one job's keys, the (size desc, key asc) placement
+    order — and therefore the partition itself — is IDENTICAL to the
+    unprefixed one: a job sharded inside a fleet owns exactly the
+    slices-per-shard it owns solo (property-tested in
+    ``tests/test_runtime_multijob.py``).
 
     Warns when any shard ends up owning ZERO bytes: every update round
     still pays that shard a round trip for nothing, and a sweep over
@@ -137,7 +160,7 @@ def tree_assignment(
     for key, leaf in zip(keys, leaves):
         itemsize = np.dtype(np.asarray(leaf).dtype).itemsize
         for subkey, _off, n in iter_subleaves(key, leaf, split_bytes):
-            subkeys.append(subkey)
+            subkeys.append(namespace + subkey)
             sizes.append(n * itemsize)
     assignment = assign_shards(subkeys, sizes, n_shards)
     load = [0] * n_shards
@@ -163,6 +186,7 @@ def encode_tree_sharded(
     quant: str = "none",
     with_residual: bool = False,
     split_bytes: int = 0,
+    namespace: str = "",
 ) -> tuple[list[tuple[list[dict], list]], Optional[PyTree]]:
     """Encode a pytree into one (meta, buffer-views) message per shard.
 
@@ -172,8 +196,11 @@ def encode_tree_sharded(
     order regardless of ``n_shards`` — the bit-exactness across shard
     counts rests on this.  Chunk metas carry the full leaf key in ``k``
     plus the flat element offset in ``o``; ``LeafBuffers`` is the decode
-    twin.  Returns ``(per_shard, residual_tree)`` where ``per_shard[s]``
-    feeds ``publish``/``flush`` to shard ``s`` directly.
+    twin.  Under a job ``namespace`` the meta keys and the assignment
+    lookups are both prefixed — a fleet worker's ``LeafBuffers`` is keyed
+    by the same prefixed keys, so one job can never decode into another
+    job's accumulators.  Returns ``(per_shard, residual_tree)`` where
+    ``per_shard[s]`` feeds ``publish``/``flush`` to shard ``s`` directly.
     """
     import jax
 
@@ -190,12 +217,12 @@ def encode_tree_sharded(
         for subkey, off, n in iter_subleaves(key, leaf, split_bytes):
             m, parts, r = wire_codec.encode_leaf(
                 flat[off: off + n] if subkey != key else leaf,
-                scheme=scheme, quant=quant, key=key,
+                scheme=scheme, quant=quant, key=namespace + key,
                 with_residual=with_residual,
             )
             if subkey != key:
                 m["o"] = off
-            meta_s, parts_s = per_shard[assignment[subkey]]
+            meta_s, parts_s = per_shard[assignment[namespace + subkey]]
             meta_s.append(m)
             parts_s.extend(parts)
             if with_residual:
@@ -222,6 +249,7 @@ def predict_shard_nbytes(
     scheme: str = wire_codec.AUTO,
     quant: str = "none",
     split_bytes: int = 0,
+    namespace: str = "",
 ) -> list[int]:
     """Simulator-side per-shard accounting: wire bytes each shard WOULD
     measure for this tree — the per-leaf accountant is the codec's own
@@ -236,7 +264,7 @@ def predict_shard_nbytes(
     for key, leaf in zip(keys, jax.tree_util.tree_leaves(tree)):
         flat = np.ascontiguousarray(np.asarray(leaf)).reshape(-1)
         for subkey, off, n in iter_subleaves(key, leaf, split_bytes):
-            out[assignment[subkey]] += wire_codec.predict_leaf_nbytes(
+            out[assignment[namespace + subkey]] += wire_codec.predict_leaf_nbytes(
                 flat[off: off + n] if subkey != key else leaf,
                 scheme, quant,
             )

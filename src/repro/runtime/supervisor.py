@@ -96,6 +96,14 @@ class FaaSJobConfig:
     # stay bit-identical across n_brokers; fixes the degenerate partition
     # of few-leaf models (PMF) at high shard counts
     shard_split_bytes: int = 0
+    # pre-warmed invocation respawn (DESIGN.md §14.5): as a slot nears its
+    # invocation boundary the supervisor pre-spawns the NEXT invocation
+    # with --prewarm-gate — it connects, JIT-warms, and holds before
+    # touching any state; at the boundary the supervisor opens the gate
+    # instead of paying a cold start inside the barrier stall.  The
+    # pre-spawned process's full lifetime is billed (it is a live
+    # function), and the measured init overlap lands in the result.
+    prewarm: bool = False
     autotune: bool = False
     tuner: Optional[AutoTunerConfig] = None
     # deterministic test hooks
@@ -147,9 +155,19 @@ class _Slot:
     spawned_at: float = 0.0
     invocations: int = 0
     terminal: Optional[str] = None  # 'done' | 'evicted'
+    # first training step of the current invocation (restored + 1) — the
+    # prewarm trigger predicts the boundary from it
+    inv_start: int = 1
     # shm transport: current per-shard segment names (fresh per
     # invocation — the shm analogue of 'a new connection per invocation')
     shm_segs: list = dataclasses.field(default_factory=list)
+    # pre-warmed next invocation (cfg.prewarm): a live process holding at
+    # its gate, plus its own segment family and spawn timestamps
+    pre_proc: Optional[subprocess.Popen] = None
+    pre_gate: Optional[str] = None
+    pre_spawned_mono: float = 0.0
+    pre_spawned_wall: float = 0.0
+    pre_shm_segs: list = dataclasses.field(default_factory=list)
 
     @property
     def alive(self) -> bool:
@@ -195,6 +213,7 @@ class Supervisor:
         self.scale_events: list[dict] = []
         self.respawns: list[dict] = []
         self.broker_respawns: list[dict] = []
+        self.cold_start_overlaps: list[dict] = []
         self.evictions: dict[int, int] = {}
         self._frontier = 0
         self._poll_since = 1  # next telemetry step this supervisor hasn't seen
@@ -450,6 +469,159 @@ class Supervisor:
         log.close()
         slot.spawned_at = time.monotonic()
         slot.invocations += 1
+        slot.inv_start = self._restored_step(slot) + 1
+
+    def _restored_step(self, slot: _Slot) -> int:
+        from repro.checkpoint import store as ckpt
+
+        return ckpt.latest_step(
+            os.path.join(self.cfg.run_dir, "ckpt", f"w{slot.worker:03d}")
+        ) or 0
+
+    # -- pre-warmed respawn (DESIGN.md §14.5) ----------------------------------
+
+    def _setup_prewarm_shm(self, slot: _Slot) -> str:
+        """Fresh segments for the NEXT invocation, created alongside the
+        current invocation's live ones (never torn down here)."""
+        from repro.wire import shm
+
+        base = f"{self._shm_token}w{slot.worker}i{slot.invocations}"
+        names = [f"{base}s{s}" for s in range(self.cfg.n_brokers)]
+        for name in names:
+            self._shm_segments[name] = shm.Segment.create(
+                name, ring_bytes=self.cfg.shm_ring_bytes
+            )
+        for s, name in enumerate(names):
+            resp, _ = self._rpc({"t": "shm_serve", "seg": name}, shard=s)
+            if not resp.get("ok"):  # pragma: no cover - defensive
+                raise RuntimeError(f"shard {s} refused shm_serve: {resp}")
+        slot.pre_shm_segs = names
+        return base
+
+    def _prespawn(self, slot: _Slot) -> None:
+        """Spawn the slot's next invocation gated: it imports, connects,
+        JIT-warms and then holds at ``pre_gate`` — runtime init runs
+        under the tail of the current invocation instead of inside the
+        respawn stall."""
+        logdir = os.path.join(self.cfg.run_dir, "logs")
+        gatedir = os.path.join(self.cfg.run_dir, "gate")
+        os.makedirs(logdir, exist_ok=True)
+        os.makedirs(gatedir, exist_ok=True)
+        gate = os.path.join(
+            gatedir, f"w{slot.worker:03d}.inv{slot.invocations:03d}.gate"
+        )
+        for p in (gate, gate + ".ready"):
+            if os.path.exists(p):  # pragma: no cover - stale reuse
+                os.unlink(p)
+        log = open(
+            os.path.join(
+                logdir,
+                f"w{slot.worker:03d}.inv{slot.invocations:03d}.pre.log",
+            ),
+            "wb",
+        )
+        brokers = ",".join(f"{h}:{p}" for h, p in
+                           (bs.addr for bs in self.shards))
+        cmd = [
+            sys.executable,
+            "-m",
+            "repro.runtime.worker",
+            "--brokers", brokers,
+            "--worker-id", str(slot.worker),
+            "--prewarm-gate", gate,
+        ]
+        if self.cfg.transport == "shm":
+            cmd += ["--transport", "shm",
+                    "--shm-seg", self._setup_prewarm_shm(slot)]
+        slot.pre_proc = subprocess.Popen(
+            cmd,
+            stdout=log,
+            stderr=subprocess.STDOUT,
+            env=self._worker_env(),
+        )
+        log.close()
+        slot.pre_gate = gate
+        slot.pre_spawned_mono = time.monotonic()
+        slot.pre_spawned_wall = time.time()
+
+    def _promote_prewarmed(self, slot: _Slot) -> None:
+        """The current invocation ended and a pre-warmed successor is
+        holding at its gate: open the gate and make it THE invocation.
+        Records the measured init overlap — the cold-start seconds the
+        barrier never saw."""
+        ready = slot.pre_gate + ".ready"
+        now_wall = time.time()
+        warm = os.path.exists(ready)
+        # overlapped cold-start seconds: init time the successor spent
+        # under the previous invocation — up to the ready marker when it
+        # finished warming in time, else everything it got so far (it is
+        # still warming, but those seconds were still hidden)
+        end = min(os.path.getmtime(ready), now_wall) if warm else now_wall
+        overlap = max(0.0, end - slot.pre_spawned_wall)
+        self.cold_start_overlaps.append(
+            {
+                "worker": slot.worker,
+                "invocation": slot.invocations,
+                "overlap_s": overlap,
+                "ready_at_promotion": warm,
+            }
+        )
+        # open the gate (atomic create): the held process restores the
+        # newest checkpoint — written by the invocation that just exited —
+        # and starts training
+        tmp = slot.pre_gate + ".tmp"
+        with open(tmp, "w"):
+            pass
+        os.replace(tmp, slot.pre_gate)
+        # the old invocation's segments die with it; the promoted one
+        # already owns a served family
+        self._teardown_worker_shm(slot)
+        slot.shm_segs, slot.pre_shm_segs = slot.pre_shm_segs, []
+        slot.proc = slot.pre_proc
+        slot.spawned_at = slot.pre_spawned_mono
+        slot.pre_proc = None
+        slot.pre_gate = None
+        slot.invocations += 1
+        slot.inv_start = self._restored_step(slot) + 1
+
+    def _abort_prewarmed(self, slot: _Slot) -> None:
+        """The slot went terminal with a successor still holding at its
+        gate: kill it and bill its (real, live-function) lifetime."""
+        if slot.pre_proc is None:
+            return
+        if slot.pre_proc.poll() is None:
+            slot.pre_proc.kill()
+            slot.pre_proc.wait()
+        self.lifetimes.append(time.monotonic() - slot.pre_spawned_mono)
+        slot.pre_proc = None
+        slot.pre_gate = None
+        for name in slot.pre_shm_segs:
+            seg = self._shm_segments.pop(name, None)
+            if seg is not None:
+                seg.unlink()
+        slot.pre_shm_segs = []
+
+    def _maybe_prespawn(self) -> None:
+        """Fire a gated successor for every slot within one step of its
+        invocation boundary (predicted from the invocation's start step
+        and budget) that doesn't have one yet."""
+        if not self.cfg.prewarm:
+            return
+        if self.cfg.invocation_steps > self.cfg.total_steps:
+            return  # single-invocation job: no boundary to warm for
+        for slot in self.slots:
+            if (
+                slot.terminal is not None
+                or not slot.alive
+                or slot.pre_proc is not None
+                or slot.worker in self.evictions
+            ):
+                continue
+            boundary = slot.inv_start + self.cfg.invocation_steps - 1
+            if boundary > self.cfg.total_steps:
+                continue  # final invocation: nothing follows it
+            if self._frontier >= boundary - 1:
+                self._prespawn(slot)
 
     def _reap(self, slot: _Slot, statuses: dict) -> None:
         """Classify an exited process and respawn when the slot lives on."""
@@ -461,30 +633,38 @@ class Supervisor:
         if status == "bye:done":
             slot.terminal = "done"
             self._teardown_worker_shm(slot)
+            self._abort_prewarmed(slot)
         elif status == "bye:evicted":
             slot.terminal = "evicted"
             self._teardown_worker_shm(slot)
+            self._abort_prewarmed(slot)
         elif status == "bye:invocation-end":
-            self._spawn(slot)  # next invocation of the same function
+            # next invocation of the same function — pre-warmed and held
+            # at its gate when cfg.prewarm got it ready in time
+            if slot.pre_proc is not None and slot.pre_proc.poll() is None:
+                self._promote_prewarmed(slot)
+            else:
+                self._abort_prewarmed(slot)
+                self._spawn(slot)
         else:
             # no goodbye: the process died (e.g. SIGKILL) — respawn; the
-            # worker restores its newest checkpoint and replays forward
-            from repro.checkpoint import store as ckpt
-
-            restored = ckpt.latest_step(
-                os.path.join(
-                    self.cfg.run_dir, "ckpt", f"w{slot.worker:03d}"
-                )
-            )
+            # worker restores its newest checkpoint and replays forward.
+            # A held pre-warmed successor is an equally valid respawn: it
+            # restores the newest checkpoint only after its gate opens.
+            restored = self._restored_step(slot)
             self.respawns.append(
                 {
                     "worker": slot.worker,
                     "exit_code": code,
-                    "restored_step": restored or 0,
+                    "restored_step": restored,
                     "at_frontier": self._frontier,
                 }
             )
-            self._spawn(slot)
+            if slot.pre_proc is not None and slot.pre_proc.poll() is None:
+                self._promote_prewarmed(slot)
+            else:
+                self._abort_prewarmed(slot)
+                self._spawn(slot)
 
     # -- broker RPC -----------------------------------------------------------
 
@@ -609,6 +789,8 @@ class Supervisor:
                         statuses = self._poll()["statuses"]
                         self._reap(slot, statuses)
 
+                self._maybe_prespawn()
+
                 all_alive = all(
                     s.alive for s in self.slots if s.terminal is None
                 )
@@ -646,6 +828,8 @@ class Supervisor:
             for slot in self.slots:
                 if slot.alive:
                     slot.proc.kill()
+                if slot.pre_proc is not None and slot.pre_proc.poll() is None:
+                    slot.pre_proc.kill()
             for conn in self._conns:
                 if conn is not None:
                     conn.close()
@@ -786,6 +970,9 @@ class Supervisor:
             "respawns": self.respawns,
             "n_respawns": len(self.respawns),
             "broker_respawns": self.broker_respawns,
+            # pre-warmed respawn telemetry (cfg.prewarm): measured seconds
+            # of runtime/XLA init that overlapped the previous invocation
+            "cold_start_overlaps": self.cold_start_overlaps,
             "n_invocations": len(self.lifetimes),
             "lifetimes_s": list(self.lifetimes),
             "dup_mismatches": dup_mismatches,
@@ -914,6 +1101,7 @@ def main() -> None:
     ap.add_argument("--consistency", default="isp", choices=("isp", "ssp"))
     ap.add_argument("--slack", type=int, default=3)
     ap.add_argument("--autotune", action="store_true")
+    ap.add_argument("--prewarm", action="store_true")
     ap.add_argument("--run-dir", default="/tmp/repro_faas")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -928,6 +1116,7 @@ def main() -> None:
         consistency=args.consistency,
         slack=args.slack,
         autotune=args.autotune,
+        prewarm=args.prewarm,
     )
     res = run_job(cfg)
     slim = {k: v for k, v in res.items() if k not in ("history", "updates")}

@@ -63,7 +63,9 @@ abort, 4 broker unreachable, 5 barrier deadline exceeded.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import os
+import threading
 import time
 from typing import Any, Optional
 
@@ -120,7 +122,33 @@ def run_worker(
     worker_id: int,
     transport: str = "tcp",
     shm_seg: Optional[str] = None,
+    job_id: Optional[str] = None,
+    stop_event: Optional["threading.Event"] = None,
+    compute_lock: Optional["threading.Lock"] = None,
+    prewarm_gate: Optional[str] = None,
+    _ready_cb=None,
 ) -> int:
+    """One worker's life for one job.
+
+    Solo (``job_id is None``) this is the single-job path, byte-identical
+    to the pre-fleet build: no ``job`` header on any RPC, no key prefix.
+    Under the multi-job control plane (DESIGN.md §14) one *process* runs
+    one ``run_worker`` thread per admitted job: ``job_id`` tags every RPC
+    (the broker routes it to that job's core) and prefixes every leaf key
+    (``sharding.job_namespace``); ``compute_lock`` serializes the compute
+    phases so one job's barrier stall is absorbed by another job's
+    compute inside the same invocation (the bin-packing claim);
+    ``stop_event`` is the shared invocation boundary — the first thread
+    to hit its step budget sets it and every sibling winds down at its
+    next barrier slice, so the process exits as one billable unit.
+
+    ``prewarm_gate`` is the pre-warmed respawn path: connect, fetch the
+    job config with a status-neutral warm hello, build + JIT-warm the
+    step functions, signal readiness (``<gate>.ready``), then block until
+    the supervisor opens the gate file — only THEN restore the newest
+    checkpoint and run, so runtime/XLA init overlaps the tail of the
+    previous invocation without ever racing its checkpoints.
+    """
     # jax and friends are imported lazily so ``--help`` stays instant — the
     # import cost is the measured FaaS cold-start of each invocation.
     import jax
@@ -171,7 +199,19 @@ def run_worker(
                 last = e
                 time.sleep(_RPC_BACKOFF_S * (i + 1))
         raise SystemExit(4) from last
-    hello, _ = rpc0({"t": "hello", "worker": worker_id})
+
+    # fleet mode: tag every RPC with the job id (broker-side core routing)
+    # and prefix every leaf key (store/WAL namespace).  Solo mode adds
+    # NOTHING — headers and keys stay byte-identical to the pre-fleet
+    # build, which is what the wire-guard byte gate pins.
+    jtag = {} if job_id is None else {"job": str(job_id)}
+    ns = sharding.job_namespace(job_id)
+    # a warm hello (prewarm path) fetches the job config without touching
+    # the worker's status — the previous invocation still owns it
+    hello, _ = rpc0(
+        {"t": "hello", "worker": worker_id, **jtag,
+         **({"warm": True} if prewarm_gate is not None else {})}
+    )
     job = hello["job"]
     members = _Membership(int(job["n_workers"]))
     members.update(hello)
@@ -224,28 +264,36 @@ def run_worker(
     split_bytes = int(job.get("shard_split_bytes", 0))
     leaf_keys = protocol.tree_keys(params)
     assignment = sharding.tree_assignment(
-        params, n_shards, split_bytes=split_bytes
+        params, n_shards, split_bytes=split_bytes, namespace=ns
     )
     leaves0 = [np.asarray(x) for x in jax.tree_util.tree_leaves(params)]
     treedef0 = jax.tree_util.tree_structure(params)
+    # decode accumulators are keyed by the (namespaced) wire keys the
+    # shard metas carry — one job can never decode into another's buffers
     leaf_like = {
-        k: (leaf.shape, leaf.dtype) for k, leaf in zip(leaf_keys, leaves0)
+        ns + k: (leaf.shape, leaf.dtype) for k, leaf in zip(leaf_keys, leaves0)
     }
 
     start_step = 1
     last_saved = 0
-    latest = ckpt.latest_step(ckpt_dir)
-    if latest is not None:
-        tree = ckpt.restore(
-            ckpt_dir,
-            latest,
-            {"params": params, "opt": opt_state, "residual": residual},
-        )
-        params, opt_state, residual = (
-            tree["params"], tree["opt"], tree["residual"],
-        )
-        start_step = latest + 1
-        last_saved = latest
+
+    def restore_latest() -> None:
+        """Resume from the newest checkpoint (deferred past the prewarm
+        gate: a pre-warmed process must not read checkpoints the previous
+        invocation is still writing)."""
+        nonlocal params, opt_state, residual, start_step, last_saved
+        latest = ckpt.latest_step(ckpt_dir)
+        if latest is not None:
+            tree = ckpt.restore(
+                ckpt_dir,
+                latest,
+                {"params": params, "opt": opt_state, "residual": residual},
+            )
+            params, opt_state, residual = (
+                tree["params"], tree["opt"], tree["residual"],
+            )
+            start_step = latest + 1
+            last_saved = latest
 
     def compute(params, opt_state, residual, batch, inv_p, t):
         loss, grads = wl.grad_fn(params, batch)
@@ -292,7 +340,7 @@ def run_worker(
         last_saved = step_done
 
     def bye(reason: str) -> None:
-        rpc0({"t": "bye", "worker": worker_id, "reason": reason})
+        rpc0({"t": "bye", "worker": worker_id, "reason": reason, **jtag})
         for c in conns:
             c.close()
 
@@ -300,16 +348,20 @@ def run_worker(
         """One barrier's worth of pipelined coalesced pulls (all shards'
         long polls run server-side concurrently).  Returns (exit_code,
         shard_parts): code is None on success, 3 on broker abort, 5 on
-        deadline."""
+        deadline, 7 when a sibling job thread declared the invocation
+        boundary mid-barrier (fleet mode; checked between 2 s poll
+        slices, never mid-RPC)."""
         nonlocal key_next
         deadline = time.monotonic() + pull_deadline_s
         shard_parts: list[Optional[tuple[list, bytes]]] = [None] * n_shards
         pending = list(range(n_shards))
         while pending:
+            if stop_event is not None and stop_event.is_set():
+                return 7, None
             resps = fanout(
                 pending,
                 [{"t": "pull", "worker": worker_id, "step": step,
-                  "timeout_s": 2.0} for _ in pending],
+                  "timeout_s": 2.0, **jtag} for _ in pending],
                 timeout=10.0,
             )
             nxt = []
@@ -347,7 +399,7 @@ def run_worker(
                 else:
                     sums.add(m, leaf)
         peers_sum = jax.tree_util.tree_unflatten(
-            treedef0, [sums[k] for k in leaf_keys]
+            treedef0, [sums[ns + k] for k in leaf_keys]
         )
         flushes = []
         for q, acc in flush_acc.items():
@@ -356,7 +408,7 @@ def run_worker(
             acc.assert_complete(what=f"flush from worker {q}")
             flushes.append(
                 (q, jax.tree_util.tree_unflatten(
-                    treedef0, [acc[k] for k in leaf_keys]
+                    treedef0, [acc[ns + k] for k in leaf_keys]
                 ))
             )
         return peers_sum, flushes
@@ -390,6 +442,41 @@ def run_worker(
                 params = apply_flushes(params, flushes, td - slack - 1)
         return None, jax.block_until_ready(params)
 
+    if prewarm_gate is not None:
+        # pre-warmed respawn (DESIGN.md §14.5): pay the jax import, XLA
+        # backend init and step-function compile NOW, overlapping the
+        # tail of the previous invocation, then hold at the gate.  The
+        # warm-up runs on the initial template (identical shapes/dtypes
+        # to the live state) and discards its outputs — no job state is
+        # touched before the gate opens.
+        warm_batch = wl.batch(0)
+        jax.block_until_ready(
+            compute(
+                params, opt_state, residual, warm_batch,
+                jnp.asarray(1.0, jnp.float32), jnp.asarray(1, jnp.int32),
+            )
+        )
+        zeros_p = jax.tree.map(jnp.zeros_like, params)
+        zeros_f = jax.tree.map(
+            lambda a: jnp.zeros(a.shape, jnp.float32), params
+        )
+        jax.block_until_ready(apply_visible(params, zeros_p, zeros_f))
+        if _ready_cb is not None:
+            _ready_cb()  # fleet: last job thread signals for the process
+        else:
+            with open(prewarm_gate + ".ready", "w"):
+                pass
+        while not os.path.exists(prewarm_gate):
+            if stop_event is not None and stop_event.is_set():
+                for c in conns:
+                    c.close()
+                return 0
+            time.sleep(0.02)
+        # NOW this invocation owns the worker slot: announce for real
+        hello2, _ = rpc0({"t": "hello", "worker": worker_id, **jtag})
+        members.update(hello2)
+    restore_latest()
+
     t = start_step
     steps_this_invocation = 0
     key_next: Optional[int] = None  # piggybacked by the previous pull
@@ -401,16 +488,24 @@ def run_worker(
             # eviction effective at step ev: publish replica + residual (the
             # paper's leaving-worker hand-off, error-feedback form: no
             # accumulated update mass is lost) and end this worker's life.
-            # Flushes are full replicas — always 'auto' (dense wins), never
-            # quantized: the hand-off must be exact.
+            # Flushes are full replicas, so the scheme stays 'auto' (dense
+            # wins); under --wire-quant the VALUES ride the job's fp16/bf16
+            # quantizer — an explicit opt-in to a lossy hand-off that
+            # halves the largest single messages in the system (the
+            # survivors' mean-preserving pull folds the quantized replica
+            # exactly as published, so replay stays bit-identical).  The
+            # default 'none' ships the exact dense bytes of the pre-fleet
+            # build.
             flushed = jax.tree.map(lambda x, r: x + r, params, residual)
             per_shard, _ = sharding.encode_tree_sharded(
-                flushed, assignment, n_shards, split_bytes=split_bytes
+                flushed, assignment, n_shards,
+                quant=wire_quant,
+                split_bytes=split_bytes, namespace=ns,
             )
             fanout(
                 list(range(n_shards)),
                 [{"t": "flush", "worker": worker_id, "step": ev,
-                  "meta": meta} for meta, _ in per_shard],
+                  "meta": meta, **jtag} for meta, _ in per_shard],
                 [parts for _, parts in per_shard],
             )
             bye("evicted")
@@ -423,6 +518,13 @@ def run_worker(
                 # step <= total_steps, replays (publishes dup-check
                 # bit-identical), and drains again from scratch
                 code, params = ssp_drain(params)
+                if code == 7:
+                    # invocation boundary mid-drain: do NOT checkpoint the
+                    # partially drained params — the respawn restores a
+                    # pre-drain step and re-drains from scratch (pulls are
+                    # read-only, so the replay is exact)
+                    bye("invocation-end")
+                    return 0
                 if code is not None:
                     return code
                 save_ckpt(total_steps + 1)
@@ -430,7 +532,14 @@ def run_worker(
                 save_ckpt(t - 1)
             bye("done")
             return 0
-        if steps_this_invocation >= invocation_steps:
+        if steps_this_invocation >= invocation_steps or (
+            stop_event is not None and stop_event.is_set()
+        ):
+            if stop_event is not None:
+                # first thread to hit its budget declares the boundary for
+                # the whole process — sibling jobs wind down at their next
+                # barrier slice, and the supervisor respawns ONE invocation
+                stop_event.set()
             save_ckpt(t - 1)
             bye("invocation-end")
             return 0
@@ -440,7 +549,9 @@ def run_worker(
         # -- fetch: minibatch key (piggybacked except on the first step of
         #    an invocation) + local batch materialization
         if key_next is None:
-            resp, _ = rpc0({"t": "batch", "worker": worker_id, "step": t})
+            resp, _ = rpc0(
+                {"t": "batch", "worker": worker_id, "step": t, **jtag}
+            )
             members.update(resp)
             key = int(resp["key"])
         else:
@@ -448,18 +559,27 @@ def run_worker(
         batch = wl.batch(key)
         t_fetch = tp()
         # -- compute: grads -> optimizer -> ISP split (block for honest
-        #    phase attribution; jax dispatch is asynchronous)
+        #    phase attribution; jax dispatch is asynchronous).  In fleet
+        #    mode the process-wide lock serializes sibling jobs' compute
+        #    phases — the invocation models one billable vCPU, and a job
+        #    only computes while its siblings are stalled on barriers
+        #    (the bin-packing the cost rollup prices)
         p_act = members.p_active(t)
-        u, sig, res, opt_state, loss, sent, inv_err = jax.block_until_ready(
-            compute(
-                params,
-                opt_state,
-                residual,
-                batch,
-                jnp.asarray(1.0 / p_act, jnp.float32),
-                jnp.asarray(t, jnp.int32),
+        with compute_lock if compute_lock is not None else (
+            contextlib.nullcontext()
+        ):
+            u, sig, res, opt_state, loss, sent, inv_err = (
+                jax.block_until_ready(
+                    compute(
+                        params,
+                        opt_state,
+                        residual,
+                        batch,
+                        jnp.asarray(1.0 / p_act, jnp.float32),
+                        jnp.asarray(t, jnp.int32),
+                    )
+                )
             )
-        )
         if (
             straggler is not None
             and worker_id == int(straggler["worker"])
@@ -477,7 +597,7 @@ def run_worker(
             sig, assignment, n_shards,
             scheme=wire_scheme, quant=wire_quant,
             with_residual=(wire_quant != "none"),
-            split_bytes=split_bytes,
+            split_bytes=split_bytes, namespace=ns,
         )
         if qerr is not None:
             res = jax.tree.map(
@@ -494,7 +614,7 @@ def run_worker(
         pub_hdrs = []
         for s, (meta, _parts) in enumerate(per_shard):
             hdr = {"t": "publish", "worker": worker_id, "step": t,
-                   "meta": meta}
+                   "meta": meta, **jtag}
             if s == 0:
                 hdr.update(
                     loss=float(loss),
@@ -510,6 +630,14 @@ def run_worker(
             members.update(ack)
 
         code, shard_parts = pull_all(t)
+        if code == 7:
+            # sibling-declared invocation boundary mid-barrier: step t's
+            # publish is durable but its pull never completed, and
+            # opt_state is already advanced locally — exit WITHOUT a
+            # checkpoint, so the respawn restores the last consistent
+            # step and replays forward (publishes dup-check bit-identical)
+            bye("invocation-end")
+            return 0
         if code is not None:
             return code
         t_wire = tp()
@@ -529,7 +657,7 @@ def run_worker(
         t_apply = tp()
         rpc0(
             {
-                "t": "report", "worker": worker_id, "step": t,
+                "t": "report", "worker": worker_id, "step": t, **jtag,
                 "dur_s": float(t_apply - t0),
                 "phase": {
                     "fetch": t_fetch - t0,
@@ -544,6 +672,71 @@ def run_worker(
         if t % checkpoint_every == 0:
             save_ckpt(t)
         t += 1
+
+
+def run_worker_fleet(
+    addrs: list[tuple[str, int]],
+    worker_id: int,
+    job_ids: list[str],
+    transport: str = "tcp",
+    shm_seg: Optional[str] = None,
+    prewarm_gate: Optional[str] = None,
+) -> int:
+    """One invocation hosting several jobs: one ``run_worker`` thread per
+    job, bin-packed onto one billable process (DESIGN.md §14.3).
+
+    Each thread owns its own per-shard connections (the framed transports
+    are not thread-safe) — under shm each job rides its own segment family
+    ``<base>g<job>s<shard>``.  A shared stop event makes the invocation
+    boundary process-wide, and a shared compute lock serializes the
+    compute phases so one job computes exactly while its siblings stall
+    on barriers.  A thread that crashes (nonzero code) also declares the
+    boundary: sibling jobs wind down cleanly as ``bye:invocation-end``
+    while the crashed job's status stays ``running``, which is precisely
+    the signal the scheduler's reaper classifies per job.  Exit code is
+    the max across threads (0 when every job ended cleanly).
+    """
+    stop_event = threading.Event()
+    compute_lock = threading.Lock()
+    codes: dict[str, int] = {}
+    ready_lock = threading.Lock()
+    ready_n = [0]
+
+    def _ready() -> None:
+        # the process is warm only once EVERY job's step functions are:
+        # the last thread through signals the supervisor
+        with ready_lock:
+            ready_n[0] += 1
+            if ready_n[0] == len(job_ids) and prewarm_gate is not None:
+                with open(prewarm_gate + ".ready", "w"):
+                    pass
+
+    def _one(jid: str) -> None:
+        seg = f"{shm_seg}g{jid}" if shm_seg else None
+        try:
+            code = run_worker(
+                addrs, worker_id, transport=transport, shm_seg=seg,
+                job_id=jid, stop_event=stop_event,
+                compute_lock=compute_lock, prewarm_gate=prewarm_gate,
+                _ready_cb=_ready if prewarm_gate is not None else None,
+            )
+        except SystemExit as e:
+            code = int(e.code or 0)
+        except BaseException:
+            code = 1
+        codes[jid] = code
+        if code != 0:
+            stop_event.set()
+
+    threads = [
+        threading.Thread(target=_one, args=(jid,), name=f"job-{jid}")
+        for jid in job_ids
+    ]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    return max(codes.values()) if codes else 1
 
 
 def _parse_addrs(spec: str) -> list[tuple[str, int]]:
@@ -567,19 +760,41 @@ def main() -> None:
                     "make_transport); shm needs --shm-seg")
     ap.add_argument("--shm-seg", default=None,
                     help="shared-memory segment base name (supervisor-"
-                    "allocated); shard s attaches '<base>s<s>'")
+                    "allocated); shard s attaches '<base>s<s>' (fleet "
+                    "mode: '<base>g<job>s<s>')")
+    ap.add_argument("--jobs", default=None,
+                    help="comma-separated job ids — run one training "
+                    "thread per job, bin-packed onto this one invocation "
+                    "(fleet mode; every RPC is job-tagged)")
+    ap.add_argument("--prewarm-gate", default=None,
+                    help="pre-warmed respawn: JIT-warm, touch "
+                    "'<gate>.ready', then hold until the gate file "
+                    "appears before restoring state and training")
     args = ap.parse_args()
     spec = args.brokers or args.broker
     if not spec:
         ap.error("--brokers (or --broker) is required")
     if args.transport == "shm" and not args.shm_seg:
         ap.error("--transport shm requires --shm-seg")
+    addrs = _parse_addrs(spec)
+    if args.jobs:
+        raise SystemExit(
+            run_worker_fleet(
+                addrs,
+                args.worker_id,
+                [j.strip() for j in args.jobs.split(",") if j.strip()],
+                transport=args.transport,
+                shm_seg=args.shm_seg,
+                prewarm_gate=args.prewarm_gate,
+            )
+        )
     raise SystemExit(
         run_worker(
-            _parse_addrs(spec),
+            addrs,
             args.worker_id,
             transport=args.transport,
             shm_seg=args.shm_seg,
+            prewarm_gate=args.prewarm_gate,
         )
     )
 

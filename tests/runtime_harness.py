@@ -68,6 +68,76 @@ def run_small_pmf(tmp_path, **overrides) -> dict:
     return run_job(small_pmf_cfg(tmp_path / "job", **overrides))
 
 
+# -- fleet (multi-job) fixtures (DESIGN.md §14) -------------------------------
+
+# a second tiny workload so fleet tests pack two DIFFERENT models: a small
+# dense logistic regression (single leaf, different shapes/batch cadence)
+SMALL_LR_WCFG = {
+    "n_samples": 4000,
+    "batch_size": 128,
+}
+SMALL_LR_P = 2
+SMALL_LR_STEPS = 6
+
+
+def small_lr_cfg(run_dir, **overrides) -> FaaSJobConfig:
+    """A tiny deterministic LR job (the fleet's second tenant)."""
+    base = dict(
+        run_dir=str(run_dir),
+        workload="lr",
+        workload_cfg=dict(SMALL_LR_WCFG),
+        n_workers=SMALL_LR_P,
+        total_steps=SMALL_LR_STEPS,
+        checkpoint_every=100,
+        optimizer="nesterov",
+        lr=0.05,
+        isp_v=SMALL_V,
+        deadline_s=180.0,
+    )
+    base.update(overrides)
+    return FaaSJobConfig(**base)
+
+
+def small_fleet(run_dir, jobs: dict, **fleet_overrides):
+    """Build a ``FleetConfig`` from per-job override dicts::
+
+        small_fleet(tmp, {"a": {}, "b": {"workload": "lr", ...}})
+
+    Jobs default to the canonical small PMF config (pass ``workload='lr'``
+    plus LR fields to get the LR tenant); the scheduler pins each job's
+    run_dir under ``<run_dir>/jobs/<id>`` itself.
+    """
+    from repro.runtime import FleetConfig
+
+    built = {}
+    for jid, ov in jobs.items():
+        ov = dict(ov)
+        maker = (
+            small_lr_cfg if ov.pop("workload", "pmf") == "lr"
+            else small_pmf_cfg
+        )
+        built[jid] = maker(str(run_dir) + f"/jobs/{jid}", **ov)
+    return FleetConfig(run_dir=str(run_dir), jobs=built, **fleet_overrides)
+
+
+def run_small_fleet(tmp_path, jobs: dict, **fleet_overrides) -> dict:
+    """Run a small fleet (real processes) and return the fleet result."""
+    from repro.runtime import run_fleet
+
+    return run_fleet(small_fleet(tmp_path / "fleet", jobs, **fleet_overrides))
+
+
+def fleet_job_cfg(fleet_result: dict, jid: str, maker=None,
+                  **overrides) -> FaaSJobConfig:
+    """Rebuild the effective per-job config of a finished fleet run (its
+    run_dir pinned where the scheduler put it) so ``final_params`` /
+    ``final_params_digest`` work unchanged on fleet jobs."""
+    job = fleet_result["jobs"][jid]
+    maker = maker or (small_lr_cfg if job["workload"] == "lr"
+                      else small_pmf_cfg)
+    return maker(job["run_dir"], **overrides)
+
+
 class BrokerCluster:
     """In-thread broker shards for protocol-level tests.
 

@@ -1,0 +1,307 @@
+"""Multi-job fleet scheduler tests (DESIGN.md §14).
+
+The fleet's load-bearing claim is that concurrency is observationally
+invisible: a job packed with strangers onto one shared broker/worker pool
+must end with final parameters BIT-identical to the same job run solo —
+through transports, shard counts, mixed isp/ssp consistency and real
+SIGKILLs — while the pool pays one merged bill.
+
+Layers covered here:
+
+* property tests (``sharding.job_namespace`` + namespaced
+  ``tree_assignment``): job prefixes can never collide across jobs or
+  with the solo namespace, and a job's partition is IDENTICAL to its
+  solo partition (the uniform prefix preserves the (-size, key) order) —
+  the invariant the bit-identity gate rests on;
+* fleet admission validation (topology agreement, id charset, prewarm);
+* live two-job end-to-end cells vs solo digests, including the
+  worker-SIGKILL + broker-shard-SIGKILL cell;
+* fair-share arbitration under ``pool_budget``;
+* quantized eviction-flush payloads (``--wire-quant``, satellite of this
+  PR): flush bytes shrink, replay stays deterministic;
+* pre-warmed invocation respawn (solo supervisor): bit-identity plus a
+  measured cold-start overlap.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.runtime import FaaSJobConfig, FleetConfig, FleetScheduler
+from repro.runtime import run_job
+from repro.runtime.sharding import job_namespace, tree_assignment
+from repro.runtime.supervisor import final_params_digest
+from runtime_harness import (
+    fleet_job_cfg,
+    run_small_fleet,
+    run_small_pmf,
+    small_lr_cfg,
+    small_pmf_cfg,
+)
+
+
+def _tree(leaf_sizes):
+    """A params-like tree with one leaf per requested element count."""
+    return {
+        f"layer{i}": np.zeros((max(n, 1),), np.float32)
+        for i, n in enumerate(leaf_sizes)
+    }
+
+
+_IDS = st.lists(
+    st.integers(0, 9).map(lambda i: f"job{i}"),
+    min_size=1, max_size=4,
+).map(lambda xs: sorted(set(xs)))
+
+
+# -- properties: namespaced partition ----------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ids=_IDS,
+    sizes=st.lists(st.integers(1, 5000), min_size=1, max_size=6),
+    n_shards=st.integers(1, 4),
+    split_bytes=st.sampled_from([0, 4096]),
+)
+def test_job_namespaces_never_collide(ids, sizes, n_shards, split_bytes):
+    """Across any set of jobs (and the solo job), the union of namespaced
+    key sets is disjoint: no fleet can alias two jobs' state."""
+    tree = _tree(sizes)
+    keysets = []
+    for ns in [""] + [job_namespace(j) for j in ids]:
+        keysets.append(set(
+            tree_assignment(tree, n_shards, split_bytes, namespace=ns)
+        ))
+    union = set().union(*keysets)
+    assert len(union) == sum(len(k) for k in keysets)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    jid=st.integers(0, 99).map(lambda i: f"j{i}"),
+    sizes=st.lists(st.integers(1, 5000), min_size=1, max_size=6),
+    n_shards=st.integers(1, 4),
+    split_bytes=st.sampled_from([0, 4096]),
+)
+def test_namespaced_partition_equals_solo(jid, sizes, n_shards, split_bytes):
+    """A job's shard partition under its namespace is EXACTLY its solo
+    partition with the prefix glued on — the uniform prefix preserves the
+    (-size, key) sort, so per-shard slices, byte balance and summation
+    order are independent of which other jobs share the pool.  This is
+    what makes fleet final params bit-identical to solo."""
+    tree = _tree(sizes)
+    ns = job_namespace(jid)
+    solo = tree_assignment(tree, n_shards, split_bytes)
+    fleet = tree_assignment(tree, n_shards, split_bytes, namespace=ns)
+    assert fleet == {ns + k: s for k, s in solo.items()}
+
+
+@settings(max_examples=10, deadline=None)
+@given(ids=_IDS)
+def test_job_namespace_shape(ids):
+    for jid in ids:
+        ns = job_namespace(jid)
+        assert ns == f"j{jid}/" and ns.count("/") == 1
+    assert job_namespace(None) == ""
+
+
+def test_job_namespace_rejects_delimiters():
+    for bad in ("a/b", "a#b", "x/"):
+        with pytest.raises(ValueError):
+            job_namespace(bad)
+
+
+# -- admission validation -----------------------------------------------------
+
+
+def test_fleet_rejects_mismatched_pool_topology(tmp_path):
+    jobs = {
+        "a": small_pmf_cfg(tmp_path / "a", n_brokers=1),
+        "b": small_pmf_cfg(tmp_path / "b", n_brokers=2),
+    }
+    with pytest.raises(ValueError, match="n_brokers"):
+        FleetScheduler(FleetConfig(run_dir=str(tmp_path), jobs=jobs))
+    jobs = {
+        "a": small_pmf_cfg(tmp_path / "a", transport="tcp"),
+        "b": small_pmf_cfg(tmp_path / "b", transport="shm"),
+    }
+    with pytest.raises(ValueError, match="transport"):
+        FleetScheduler(FleetConfig(run_dir=str(tmp_path), jobs=jobs))
+    with pytest.raises(ValueError):
+        FleetScheduler(FleetConfig(
+            run_dir=str(tmp_path),
+            jobs={"a/b": small_pmf_cfg(tmp_path / "x")},
+        ))
+    with pytest.raises(ValueError, match="prewarm"):
+        FleetScheduler(FleetConfig(
+            run_dir=str(tmp_path),
+            jobs={"a": small_pmf_cfg(tmp_path / "a", prewarm=True)},
+        ))
+    with pytest.raises(ValueError):
+        FleetScheduler(FleetConfig(run_dir=str(tmp_path), jobs={}))
+
+
+def test_fleet_pins_job_run_dirs(tmp_path):
+    sched = FleetScheduler(FleetConfig(
+        run_dir=str(tmp_path / "fleet"),
+        jobs={"a": small_pmf_cfg(tmp_path / "elsewhere")},
+    ))
+    assert sched.jobs["a"].cfg.run_dir == str(tmp_path / "fleet/jobs/a")
+
+
+# -- live two-job cells vs solo digests --------------------------------------
+#
+# Solo digests are computed ONCE per (workload, consistency): the repo's
+# standing gate already proves solo runs are bit-identical across
+# {tcp, shm} x n_brokers, so every fleet cell below compares against the
+# same solo baselines.
+
+
+@pytest.fixture(scope="module")
+def solo_digests(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("fleet_solo")
+    out = {}
+    cfg = small_pmf_cfg(tmp / "pmf_isp")
+    run_job(cfg)
+    out["pmf_isp"] = final_params_digest(cfg)
+    cfg = small_lr_cfg(tmp / "lr_isp")
+    run_job(cfg)
+    out["lr_isp"] = final_params_digest(cfg)
+    cfg = small_lr_cfg(tmp / "lr_ssp", consistency="ssp", slack=2)
+    run_job(cfg)
+    out["lr_ssp"] = final_params_digest(cfg)
+    return out
+
+
+def _check_fleet(res, solo_digests, expect):
+    assert res["dup_mismatches"] == 0
+    for jid, key in expect.items():
+        got = final_params_digest(fleet_job_cfg(res, jid))
+        assert got == solo_digests[key], (
+            f"job {jid} packed params diverged from solo ({key})"
+        )
+    # the merged rollup attributes the WHOLE pooled bill
+    per_job = res["rollup"]["per_job"]
+    assert set(per_job) == set(res["jobs"])
+    assert sum(v["total"] for v in per_job.values()) == pytest.approx(
+        res["rollup"]["total"]
+    )
+
+
+def test_fleet_two_jobs_tcp_single_shard(tmp_path, solo_digests):
+    res = run_small_fleet(
+        tmp_path, {"a": {}, "b": {"workload": "lr"}}
+    )
+    _check_fleet(res, solo_digests, {"a": "pmf_isp", "b": "lr_isp"})
+    # bin-packing: slots 0/1 host BOTH jobs in one invocation process
+    assert res["n_invocations"] == 3  # max(3, 2) slots, one invocation each
+
+
+def test_fleet_two_jobs_two_shards_mixed_consistency(tmp_path, solo_digests):
+    res = run_small_fleet(
+        tmp_path,
+        {
+            "a": {"n_brokers": 2},
+            "b": {"workload": "lr", "n_brokers": 2,
+                  "consistency": "ssp", "slack": 2},
+        },
+    )
+    _check_fleet(res, solo_digests, {"a": "pmf_isp", "b": "lr_ssp"})
+
+
+def test_fleet_shm_faults_bit_identical(tmp_path, solo_digests):
+    """The hardest cell: shm transport, 2 shards, mixed isp/ssp,
+    invocation-bounded, a worker SIGKILL (kills the whole bin-packed
+    process: BOTH jobs replay) and a broker-shard SIGKILL (multi-core WAL
+    replays every job's history) — final params still bit-identical."""
+    import platform
+    import sys as _sys
+
+    from repro.wire import shm as wire_shm
+
+    if not _sys.platform.startswith("linux") \
+            or platform.machine() not in wire_shm.SHM_MACHINES:
+        pytest.skip("shm transport targets same-host Linux TSO machines")
+    cell = {"transport": "shm", "n_brokers": 2}
+    res = run_small_fleet(
+        tmp_path,
+        {
+            # kill step 2 sits mid-invocation (boundary at 5): the SIGKILL
+            # must land on a RUNNING process, not race a clean
+            # bye:invocation-end exit at the boundary step
+            "a": dict(cell, invocation_steps=5, checkpoint_every=2,
+                      kill_worker_at_step=(1, 2)),
+            "b": dict(cell, workload="lr", consistency="ssp", slack=2,
+                      invocation_steps=4, checkpoint_every=2,
+                      kill_broker_at_step=(1, 2)),
+        },
+    )
+    _check_fleet(res, solo_digests, {"a": "pmf_isp", "b": "lr_ssp"})
+    assert res["n_respawns"] >= 1  # the SIGKILL was real and replayed
+    assert len(res["broker_respawns"]) >= 1  # the shard died and came back
+
+
+def test_fleet_fair_share_pool_budget(tmp_path):
+    """3 + 2 workers against a pool budget of 3: the scheduler evicts
+    fair-share (most-active job first) until the fleet fits, both jobs
+    still finish, and the evictions carry the 'fair-share' reason."""
+    res = run_small_fleet(
+        tmp_path,
+        {"a": {}, "b": {"workload": "lr"}},
+        pool_budget=3,
+    )
+    events = [e for j in res["jobs"].values() for e in j["scale_events"]]
+    fair = [e for e in events if e["reason"] == "fair-share"]
+    assert len(fair) >= 2  # 5 active pairs -> 3 takes two evictions
+    # the larger job (a, 3 workers) gives up the first worker
+    assert fair[0] in res["jobs"]["a"]["scale_events"]
+    for jid, job in res["jobs"].items():
+        assert job["final_pool"] >= 1, f"job {jid} lost every worker"
+        assert job["steps"] == {"a": 8, "b": 6}[jid]
+    assert res["dup_mismatches"] == 0
+
+
+# -- quantized eviction flush (satellite) ------------------------------------
+
+
+def test_quantized_flush_shrinks_bytes(tmp_path):
+    """Under --wire-quant the eviction hand-off (a full dense replica —
+    the largest single message in the system) ships quantized values:
+    the broker-measured flush bytes drop to about half, and the run stays
+    deterministic (dup_mismatches == 0 through replay)."""
+    # evict early in a longer job: the granted evict step must land well
+    # before total_steps or the victim can finish 'done' first
+    base = dict(scripted_evict_steps=(2,), n_workers=3, total_steps=16)
+    r_none = run_small_pmf(tmp_path / "none", **base)
+    r_fp16 = run_small_pmf(tmp_path / "fp16", wire_quant="fp16", **base)
+    b_none = r_none["broker_stats"]["flush"]["bytes_in"]
+    b_fp16 = r_fp16["broker_stats"]["flush"]["bytes_in"]
+    assert r_none["broker_stats"]["flush"]["count"] >= 1
+    assert b_fp16 < 0.75 * b_none, (b_fp16, b_none)
+    assert r_fp16["dup_mismatches"] == 0
+    assert r_fp16["final_pool"] == 2  # the eviction really happened
+
+
+# -- pre-warmed respawn (satellite) ------------------------------------------
+
+
+def test_prewarm_bit_identical_with_measured_overlap(tmp_path):
+    """Pre-spawning the next invocation must not perturb training: the
+    gated successor only restores state after the previous invocation's
+    final checkpoint is on disk.  The supervisor measures the init
+    seconds that overlapped the previous invocation."""
+    cold = small_pmf_cfg(tmp_path / "cold", invocation_steps=4,
+                         checkpoint_every=2)
+    run_job(cold)
+    warm = small_pmf_cfg(tmp_path / "warm", invocation_steps=4,
+                         checkpoint_every=2, prewarm=True)
+    res = run_job(warm)
+    assert final_params_digest(warm) == final_params_digest(cold)
+    assert res["dup_mismatches"] == 0
+    overlaps = res["cold_start_overlaps"]
+    assert overlaps, "prewarm never fired"
+    assert all(o["overlap_s"] >= 0.0 for o in overlaps)

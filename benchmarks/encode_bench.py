@@ -1,0 +1,199 @@
+"""Encode/decode wire-codec microbenchmark — the impl-seam sweep (§15.5).
+
+Times ``wire.codec.encode_leaf`` / ``decode_leaf`` over the cross product
+leaf size x scheme x quantization x backend (numpy reference vs the fused
+Pallas kernels of ``kernels/wire_pack.py``), on significance-split-shaped
+inputs (~10% density f32).  Every cell first asserts the two backends
+produce byte-identical encodings — a perf sweep over a broken codec would
+be noise — then records p50/p95 wall microseconds per call.
+
+Honest-numbers rule: the sweep records losers too.  On small leaves the
+Pallas path pays fixed dispatch/(interpret-mode) overhead and LOSES to
+numpy — that measured crossover is exactly what ``codec.resolve_impl``'s
+``impl='auto'`` size threshold (PALLAS_AUTO_MIN_N) is calibrated against,
+and the ``pallas_auto_min_n_sane`` flag in the payload checks the recorded
+threshold still sits between a losing cell and a winning cell.
+
+Results land in ``results/bench/encode_bench.json`` and are merged into
+``BENCH_runtime.json`` under ``encode_sweep`` (existing sections from the
+other live benchmarks are preserved).
+
+    PYTHONPATH=src python -m benchmarks.run encode
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+
+import numpy as np
+
+from benchmarks.common import write_result
+
+SIZES = (4096, 65_536, 1_048_576)
+SCHEMES = ("dense", "sparse", "bitmap", "auto")
+QUANTS = ("none", "fp16")
+IMPLS = ("numpy", "pallas")
+DENSITY = 0.1  # significance-split shaped: ~10% survivors
+
+
+def _leaf(n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n).astype(np.float32)
+    x[rng.rand(n) >= DENSITY] = 0.0
+    return x
+
+
+def _reps(n: int) -> int:
+    # enough samples for a stable p95 on small leaves without letting the
+    # 1M-element cells dominate the harness wall clock
+    return int(max(7, min(40, 2_000_000 // max(n, 1))))
+
+
+def _time_encode(a: np.ndarray, scheme: str, quant: str, impl: str,
+                 reps: int) -> tuple[list[float], tuple, int]:
+    from repro.wire import codec
+
+    # one untimed warmup call absorbs jit compilation (pallas) and numpy
+    # allocator warm-up alike
+    meta, parts, _ = codec.encode_leaf(a, scheme=scheme, quant=quant,
+                                       key="k", impl=impl)
+    xs = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        meta, parts, _ = codec.encode_leaf(a, scheme=scheme, quant=quant,
+                                           key="k", impl=impl)
+        xs.append((time.perf_counter() - t0) * 1e6)
+    blob = b"".join(bytes(p) for p in parts)
+    return xs, (meta, blob), int(meta["nbytes"])
+
+
+def _time_decode(meta: dict, blob: bytes, impl: str,
+                 reps: int) -> tuple[list[float], np.ndarray]:
+    from repro.wire import codec
+
+    out = codec.decode_leaf(meta, blob, impl=impl)
+    xs = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = codec.decode_leaf(meta, blob, impl=impl)
+        xs.append((time.perf_counter() - t0) * 1e6)
+    return xs, out
+
+
+def _pctl(xs: list[float]) -> dict:
+    xs = sorted(xs)
+    return {
+        "p50": statistics.median(xs),
+        "p95": xs[min(len(xs) - 1, int(round(0.95 * (len(xs) - 1))))],
+    }
+
+
+def run() -> dict:
+    from repro.wire import codec
+
+    rows = []
+    for n in SIZES:
+        a = _leaf(n)
+        reps = _reps(n)
+        for scheme in SCHEMES:
+            for quant in QUANTS:
+                encoded = {}
+                cell = {}
+                for impl in IMPLS:
+                    enc_us, (meta, blob), nbytes = _time_encode(
+                        a, scheme, quant, impl, reps
+                    )
+                    dec_us, out = _time_decode(meta, blob, impl, reps)
+                    encoded[impl] = (meta, blob, out)
+                    cell[impl] = {
+                        "encode_us": _pctl(enc_us),
+                        "decode_us": _pctl(dec_us),
+                        "nbytes": nbytes,
+                        "resolved": codec.resolve_impl(
+                            impl, n, a.dtype, quant
+                        ),
+                    }
+                # the sweep's own bit-identity guard: same bytes on the
+                # wire, same decoded leaf, same accounted size
+                m_np, b_np, o_np = encoded["numpy"]
+                m_pl, b_pl, o_pl = encoded["pallas"]
+                assert b_np == b_pl, (n, scheme, quant, "blob mismatch")
+                assert m_np["nbytes"] == m_pl["nbytes"]
+                assert m_np["enc"] == m_pl["enc"]
+                assert o_np.tobytes() == o_pl.tobytes()
+                rows.append({
+                    "n": n, "scheme": scheme, "quant": quant,
+                    "reps": reps, **{
+                        impl: cell[impl] for impl in IMPLS
+                    },
+                    "encode_p50_speedup_pallas": (
+                        cell["numpy"]["encode_us"]["p50"]
+                        / max(cell["pallas"]["encode_us"]["p50"], 1e-9)
+                    ),
+                })
+    payload = {
+        "density": DENSITY,
+        "dtype": "float32",
+        "pallas_auto_min_n": codec.PALLAS_AUTO_MIN_N,
+        "interpret_mode": codec._interpret(),
+        "rows": rows,
+        "note": (
+            "p50/p95 wall us per encode_leaf/decode_leaf call; pallas "
+            "cells on this host run the kernels in interpret mode when no "
+            "TPU is attached, so small-leaf cells losing to numpy is the "
+            "measured, expected result the impl='auto' threshold encodes"
+        ),
+    }
+    # sanity: the auto policy should not select pallas where this host's
+    # sweep measured it losing — under interpret mode (no TPU) that means
+    # auto must resolve to numpy at EVERY size; compiled, only below the
+    # size threshold
+    if codec._interpret():
+        payload["pallas_auto_min_n_sane"] = all(
+            codec.resolve_impl("auto", n, np.dtype(np.float32)) == "numpy"
+            for n in SIZES
+        )
+    else:
+        by_n: dict = {}
+        for r in rows:
+            by_n.setdefault(r["n"], []).append(
+                r["encode_p50_speedup_pallas"]
+            )
+        payload["pallas_auto_min_n_sane"] = all(
+            max(v) < 1.5 for n, v in by_n.items()
+            if n < codec.PALLAS_AUTO_MIN_N
+        )
+    write_result("encode_bench", payload)
+    _merge_into_bench_runtime(payload)
+    return payload
+
+
+def _merge_into_bench_runtime(payload: dict) -> None:
+    """Merge the sweep into BENCH_runtime.json under ``encode_sweep``,
+    preserving every other live benchmark's section."""
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_runtime.json")
+    doc = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    doc["encode_sweep"] = payload
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+
+
+def report(out: dict) -> list[str]:
+    lines = []
+    for r in out["rows"]:
+        name = f"encode_n{r['n']}_{r['scheme']}_{r['quant']}"
+        np_p50 = r["numpy"]["encode_us"]["p50"]
+        pl_p50 = r["pallas"]["encode_us"]["p50"]
+        lines.append(
+            f"encode,{name},{np_p50:.0f},"
+            f"pallas_us={pl_p50:.0f};speedup="
+            f"{r['encode_p50_speedup_pallas']:.2f}"
+        )
+    return lines

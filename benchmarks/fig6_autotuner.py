@@ -71,6 +71,10 @@ SWEEP_SPLIT_BYTES = 128 * 1024
 # measured number, with bit-identical bytes/params across every cell
 TRANSPORT_SWEEP = ("tcp", "shm")
 TRANSPORT_SWEEP_BROKERS = (1, 2)
+# the codec-backend compare (DESIGN.md §15): the SAME store-bound job per
+# wire impl — encode phase p50/p95 moves, bytes and final params may not
+ENCODE_IMPLS = ("numpy", "pallas")
+ENCODE_IMPL_STEPS = 12
 
 
 def _run(kind: str, with_tuner: bool) -> dict:
@@ -279,6 +283,9 @@ def _run_live() -> dict:
             ),
         },
     }
+    # the codec-backend cells ride in the MAIN run block: encode-phase
+    # p50/p95 per impl on the same store-bound job, bit-identity asserted
+    payload["live"]["encode_phase_by_impl"] = _run_encode_impl_compare()
     shard_sweep = _run_shard_sweep()
     payload["shard_sweep"] = shard_sweep
     # the tcp x {1,2} transport cells are byte-identical reruns of the
@@ -291,11 +298,64 @@ def _run_live() -> dict:
             if r["n_brokers"] in TRANSPORT_SWEEP_BROKERS
         }
     )
+    # BENCH_runtime.json is shared with fig9/fig11/encode_bench's
+    # sections: overlay this payload's keys, preserve theirs
     root = os.path.join(os.path.dirname(__file__), "..")
-    with open(os.path.join(root, "BENCH_runtime.json"), "w") as f:
-        json.dump(payload, f, indent=1)
+    bench_path = os.path.join(root, "BENCH_runtime.json")
+    doc = {}
+    if os.path.exists(bench_path):
+        with open(bench_path) as f:
+            doc = json.load(f)
+    doc.update(payload)
+    with open(bench_path, "w") as f:
+        json.dump(doc, f, indent=1)
     write_result("fig6_runtime_live", payload)
     return payload
+
+
+def _run_encode_impl_compare() -> dict:
+    """One deterministic store-bound run per codec backend (auto-tuner
+    off, same seed): the encode phase is the only thing allowed to move —
+    wire bytes and final parameters must be bit-identical, because the
+    Pallas path is an implementation of the same codec, not a codec."""
+    import tempfile
+
+    from repro.runtime import FaaSJobConfig, final_params_digest, run_job
+
+    cells = {}
+    for impl in ENCODE_IMPLS:
+        job = FaaSJobConfig(
+            run_dir=tempfile.mkdtemp(prefix=f"bench_enc_{impl}_"),
+            workload="pmf",
+            workload_cfg=dict(SWEEP_WCFG),
+            n_workers=SWEEP_P,
+            total_steps=ENCODE_IMPL_STEPS,
+            checkpoint_every=100,
+            optimizer="nesterov",
+            lr=0.1,
+            isp_v=0.7,
+            wire_impl=impl,
+            autotune=False,
+            deadline_s=480.0,
+        )
+        live = run_job(job)
+        _, quant = _phase_stats(_steady(live["history"]))
+        enc = quant.get("encode", {})
+        cells[impl] = {
+            "encode_s_p50": enc.get("p50"),
+            "encode_s_p95": enc.get("p95"),
+            "wire_bytes_total": live["wire_bytes_total"],
+            "final_params_sha256": final_params_digest(job),
+        }
+    ref = cells[ENCODE_IMPLS[0]]
+    return {
+        **cells,
+        "bit_identical": all(
+            c["wire_bytes_total"] == ref["wire_bytes_total"]
+            and c["final_params_sha256"] == ref["final_params_sha256"]
+            for c in cells.values()
+        ),
+    }
 
 
 def _run_store_bound(n_brokers: int, transport: str) -> dict:
@@ -459,6 +519,17 @@ def report(out: dict) -> list[str]:
         if ph:
             breakdown = "/".join(f"{k}={v*1e3:.1f}ms" for k, v in ph.items())
             lines.append(f"fig6,runtime_live_phases,0,{breakdown}")
+        impl_cells = rt["live"].get("encode_phase_by_impl") or {}
+        for impl, cell in impl_cells.items():
+            if not isinstance(cell, dict):
+                continue
+            p50 = cell.get("encode_s_p50") or 0.0
+            p95 = cell.get("encode_s_p95") or 0.0
+            lines.append(
+                f"fig6,encode_impl_{impl},{p50*1e6:.0f},"
+                f"encode_p50={p50*1e3:.2f}ms,p95={p95*1e3:.2f}ms,"
+                f"bit_identical={impl_cells.get('bit_identical')}"
+            )
         for scheme, b in (rt["live"].get("wire_bytes_by_scheme") or {}).items():
             lines.append(f"fig6,wire_bytes_{scheme},{b:.0f},bytes={b:.0f}")
         for row in (rt.get("shard_sweep") or {}).get("rows", []):

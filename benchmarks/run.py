@@ -21,6 +21,7 @@ import time
 
 def main() -> None:
     from benchmarks import (
+        encode_bench,
         fig5_significance,
         fig6_autotuner,
         fig7_loss_vs_time,
@@ -32,6 +33,7 @@ def main() -> None:
     )
 
     suites = {
+        "encode": encode_bench,
         "fig5": fig5_significance,
         "fig6": fig6_autotuner,
         "fig7": fig7_loss_vs_time,

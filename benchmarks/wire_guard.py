@@ -63,7 +63,23 @@ SMOKE_SHARDS = 2  # the sharded leg of the guard
 COLD_START_S = 2.0  # same runtime-init constant as benchmarks/fig6
 
 
-def run_smoke(n_brokers: int = 1, transport: str = "tcp") -> dict:
+def _encode_p50(history: list) -> float:
+    """Median per-step encode-phase seconds, step 1 (JIT warmup) dropped —
+    the statistic the encode regression gate and fig6's impl compare use."""
+    import statistics
+
+    xs = [
+        r["phase"]["encode"]
+        for r in history
+        if r.get("phase") and r["phase"].get("encode") is not None
+        and r.get("step", 0) != 1
+    ]
+    return statistics.median(xs) if xs else 0.0
+
+
+def run_smoke(
+    n_brokers: int = 1, transport: str = "tcp", wire_impl: str = "numpy",
+) -> dict:
     from functools import partial
 
     from repro import optim
@@ -78,7 +94,7 @@ def run_smoke(n_brokers: int = 1, transport: str = "tcp") -> dict:
 
     job = FaaSJobConfig(
         run_dir=tempfile.mkdtemp(
-            prefix=f"wire_guard_{transport}{n_brokers}_"
+            prefix=f"wire_guard_{transport}{n_brokers}_{wire_impl}_"
         ),
         workload="pmf",
         workload_cfg=dict(SMOKE_WCFG),
@@ -90,6 +106,7 @@ def run_smoke(n_brokers: int = 1, transport: str = "tcp") -> dict:
         isp_v=0.7,
         n_brokers=n_brokers,
         transport=transport,
+        wire_impl=wire_impl,
         autotune=False,
         deadline_s=240.0,
     )
@@ -125,6 +142,8 @@ def run_smoke(n_brokers: int = 1, transport: str = "tcp") -> dict:
     simres = sim.run(batch_fn, wl.cfg["batch_size"], SMOKE_STEPS)
     return {
         "transport": transport,
+        "wire_impl": wire_impl,
+        "encode_s_p50": _encode_p50(live["history"]),
         "wire_bytes_total": float(live["wire_bytes_total"]),
         "update_bytes_per_shard": live["broker_update_bytes_per_shard"],
         "dup_mismatches": live["dup_mismatches"],
@@ -196,6 +215,11 @@ def main() -> int:
                     "deterministic and get none). The ratios scale with "
                     "host speed — re-record with --update on the runner "
                     "class that gates merges")
+    ap.add_argument("--impl", default="pallas",
+                    choices=("pallas", "auto", "none"),
+                    help="codec backend for the alternate-impl leg: it "
+                    "must reproduce the numpy leg's bytes AND final "
+                    "parameters bit-for-bit ('none' skips the leg)")
     args = ap.parse_args()
 
     try:
@@ -203,6 +227,8 @@ def main() -> int:
         sharded = run_smoke(n_brokers=SMOKE_SHARDS)
         shm = run_smoke(n_brokers=SMOKE_SHARDS, transport="shm")
         multijob = run_multijob_smoke()
+        alt_impl = (run_smoke(n_brokers=1, wire_impl=args.impl)
+                    if args.impl != "none" else None)
     except Exception as e:  # noqa: BLE001 - CI wants a clean signal
         print(f"wire_guard: smoke run failed: {e}", file=sys.stderr)
         return 2
@@ -223,7 +249,7 @@ def main() -> int:
     }
     print(json.dumps(
         {"single": single, "sharded": sharded, "shm": shm,
-         "multijob": multijob},
+         "multijob": multijob, "alt_impl": alt_impl},
         indent=1,
     ))
 
@@ -297,6 +323,48 @@ def main() -> int:
             file=sys.stderr,
         )
         ok = False
+    # the codec-impl leg (DESIGN.md §15): the fused Pallas encode/decode
+    # path is an implementation of the SAME codec — identical bytes on the
+    # wire, identical final parameters, same per-shard accounting.  A
+    # kernel that rounds, orders, or packs one bit differently fails here.
+    if alt_impl is not None:
+        impl = alt_impl["wire_impl"]
+        if alt_impl["wire_bytes_total"] != single["wire_bytes_total"]:
+            print(
+                f"wire_guard: REGRESSION: impl={impl} wire_bytes_total "
+                f"{alt_impl['wire_bytes_total']} != numpy leg "
+                f"{single['wire_bytes_total']} (the codec backend changed "
+                "the bytes)",
+                file=sys.stderr,
+            )
+            ok = False
+        if (alt_impl["update_bytes_per_shard"]
+                != single["update_bytes_per_shard"]):
+            print(
+                f"wire_guard: REGRESSION: impl={impl} per-shard split "
+                f"{alt_impl['update_bytes_per_shard']} != numpy leg "
+                f"{single['update_bytes_per_shard']}",
+                file=sys.stderr,
+            )
+            ok = False
+        if (alt_impl["final_params_sha256"]
+                != single["final_params_sha256"]):
+            print(
+                f"wire_guard: REGRESSION: impl={impl} final params "
+                f"{alt_impl['final_params_sha256']} != numpy leg "
+                f"{single['final_params_sha256']} (the codec backend "
+                "perturbed the math)",
+                file=sys.stderr,
+            )
+            ok = False
+        if alt_impl["dup_mismatches"]:
+            print(f"wire_guard: REGRESSION: impl={impl} "
+                  "dup_mismatches != 0", file=sys.stderr)
+            ok = False
+        print(
+            f"wire_guard: encode p50 numpy {single['encode_s_p50'] * 1e3:.2f}"
+            f" ms vs {impl} {alt_impl['encode_s_p50'] * 1e3:.2f} ms"
+        )
 
     if args.update or not os.path.exists(BASELINE):
         base = {
@@ -311,6 +379,7 @@ def main() -> int:
             "cost_measured_over_predicted_shm": (
                 cur["cost_measured_over_predicted_shm"] * args.headroom
             ),
+            "encode_s_p50": single["encode_s_p50"] * args.headroom,
             "note": (
                 "wire_bytes_total is exact (deterministic seed, no "
                 "auto-tuner; the sharded AND shm runs must match it "
@@ -363,6 +432,10 @@ def main() -> int:
         # bytes
         "wire_bytes_total_sharded": cur["wire_bytes_total_sharded"],
         "wire_bytes_total_shm": cur["wire_bytes_total_shm"],
+        # default-path encode-phase p50: a codec change that slows the
+        # reference encoder structurally (not host noise — the baseline
+        # carries --headroom) fails here
+        "encode_s_p50": single["encode_s_p50"],
     }
     for key, val in checks.items():
         base_key = ("wire_bytes_total" if key.startswith("wire_bytes_total")

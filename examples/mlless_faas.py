@@ -43,6 +43,15 @@ def main() -> int:
                     "(default) or bounded staleness (DESIGN.md §13)")
     ap.add_argument("--slack", type=int, default=3,
                     help="SSP staleness bound (ignored under isp)")
+    ap.add_argument("--wire-impl", default="numpy",
+                    choices=("numpy", "pallas", "auto"),
+                    help="update-codec backend: numpy reference, the fused "
+                    "Pallas encode/decode kernels (bit-identical bytes), "
+                    "or per-leaf auto selection by size")
+    ap.add_argument("--hostperf", action="store_true",
+                    help="launch workers under the tuned host env "
+                    "(launch/hostperf.py: tcmalloc preload when present, "
+                    "pinned XLA host flags, thread caps)")
     ap.add_argument("--run-dir", default=None)
     ap.add_argument("--no-check", action="store_true",
                     help="skip the health assertions (exploratory runs)")
@@ -56,6 +65,8 @@ def main() -> int:
         transport=args.transport,
         consistency=args.consistency,
         slack=args.slack,
+        wire_impl=args.wire_impl,
+        hostperf=args.hostperf,
     )
     wc = PMF_QUICKSTART_CFG
     barrier = ("ISP barrier" if cfg.consistency == "isp"
@@ -63,7 +74,8 @@ def main() -> int:
     print(f"PMF {wc['n_users']}x{wc['n_movies']} rank {wc['rank']}, "
           f"{args.workers} worker processes, {args.steps} steps, "
           f"{cfg.n_brokers} broker shard(s) over {cfg.transport}, "
-          f"{barrier}, ISP v={cfg.isp_v} (run dir {cfg.run_dir})")
+          f"{barrier}, ISP v={cfg.isp_v}, codec impl {cfg.wire_impl}"
+          f"{', hostperf' if cfg.hostperf else ''} (run dir {cfg.run_dir})")
     res = run_job(cfg)
 
     hist = res["history"]
@@ -81,6 +93,15 @@ def main() -> int:
           f"{sum(r['sent_fraction'] for r in hist) / len(hist):.3f}")
     print(f"mean step time       {res['measured_step_s'] * 1e3:.1f} ms "
           f"(measured, {res['n_invocations']} invocations)")
+    if res.get("phase_s_mean"):
+        enc = res["phase_s_mean"].get("encode")
+        if enc is not None:
+            print(f"mean encode phase    {enc * 1e3:.2f} ms "
+                  f"(impl {res['wire_impl']})")
+    if res.get("hostperf") is not None:
+        hp = res["hostperf"]
+        print(f"hostperf             tcmalloc={hp['tcmalloc'] or 'absent'} "
+              f"xla='{hp['xla_flags']}'")
     print(f"worker-seconds       {bill['worker_seconds']:.1f} "
           f"(per-lifetime, 100 ms quantum)")
     print(f"FaaS bill            ${bill['total']:.6f} "

@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.isp import significance_split
+from repro.kernels import wire_pack
 from repro.kernels.significance import significance_filter
 from repro.wire import codec as wire_codec
 
@@ -247,7 +248,15 @@ def isp_compressed_step(
         combined.append(jnp.sum(sent.astype(jnp.float32), axis=0)
                         .astype(x.dtype))
         new_res.append(res)
-        hits = jnp.sum((sent != 0).astype(jnp.float32))
+        if cfg.fused and sent.size > 0:
+            # same count, via the pack kernel's tiled reduction — keeps the
+            # whole hit-accounting path on the fused kernels when they are
+            # selected (kernels/wire_pack.py, bit-identical to the jnp sum)
+            hits = wire_pack.wire_nnz(
+                sent.reshape(-1), interpret=cfg.interpret
+            ).astype(jnp.float32)
+        else:
+            hits = jnp.sum((sent != 0).astype(jnp.float32))
         n_sent = n_sent + hits
         n_total += sent.size
         # shared-codec accounting (works on traced scalars): each pod ships

@@ -1,0 +1,146 @@
+"""Tuned host-process launch environment for FaaS workers (DESIGN.md §15.4).
+
+The per-worker CPU substrate is part of the measured cost model: a worker
+process that thrashes the allocator or oversubscribes BLAS threads inflates
+every phase the runtime times.  This module builds the environment dict the
+supervisor spawns workers with, following the production launcher recipes
+in SNIPPETS.md (olmax / HomebrewNLP run scripts):
+
+* **tcmalloc LD_PRELOAD** — XLA's host allocator churn is gperftools'
+  bread and butter.  Detection is best-effort with a graceful fallback:
+  we probe the distro paths (override with ``REPRO_TCMALLOC``); when no
+  library exists the env is returned WITHOUT a preload and ``describe``
+  records ``tcmalloc: None`` — the harness never turns a perf knob into
+  a crash, and the honesty rule ("Towards Demystifying Serverless ML
+  Training": record the config sweep, don't assume a winner) means the
+  fallback is a recorded measurement condition, not an error.
+* **XLA host flags** — ``--xla_cpu_multi_thread_eigen=false`` +
+  ``intra_op_parallelism_threads=K`` pin per-process math threads (each
+  worker models the paper's 1-vCPU function; oversubscription was the
+  dominant measured compute overhead on small hosts), optionally
+  ``--xla_force_host_platform_device_count=N`` (host device partitioning)
+  and ``--xla_step_marker_location=1`` (step markers at the outer loop,
+  the profiling contract of the reference launchers).
+* **thread pinning** — OMP/OpenBLAS/MKL/numexpr thread caps, same reason.
+
+Contract: ``build_env`` never unsets caller-provided keys except the ones
+it owns (``XLA_FLAGS`` is REPLACED, not merged — the harness is the one
+owner of the worker's XLA configuration when enabled); ``describe`` is the
+honest record of what was actually applied, carried into the job result.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+# distro locations of gperftools' allocator, most specific first; the
+# plain .so names cover images that ship only the -dev symlinks
+TCMALLOC_PATHS = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so",
+    "/usr/lib/libtcmalloc.so.4",
+    "/usr/lib/libtcmalloc_minimal.so.4",
+    "/usr/lib64/libtcmalloc.so.4",
+    "/usr/lib64/libtcmalloc_minimal.so.4",
+)
+
+# silence tcmalloc's large-alloc spam on multi-GiB arena growth (the
+# SNIPPETS.md launchers' value: effectively "never report")
+LARGE_ALLOC_THRESHOLD = "60000000000"
+
+THREAD_ENV_VARS = (
+    "OMP_NUM_THREADS",
+    "OPENBLAS_NUM_THREADS",
+    "MKL_NUM_THREADS",
+    "NUMEXPR_NUM_THREADS",
+)
+
+
+def find_tcmalloc() -> Optional[str]:
+    """First tcmalloc shared object present on this host, or None.
+
+    ``REPRO_TCMALLOC`` overrides the probe (set it to an existing .so to
+    force a specific build, or to an empty string to disable preloading
+    without disabling the rest of the harness).
+    """
+    override = os.environ.get("REPRO_TCMALLOC")
+    if override is not None:
+        return override if override and os.path.exists(override) else None
+    for path in TCMALLOC_PATHS:
+        if os.path.exists(path):
+            return path
+    return None
+
+
+def xla_flags(
+    threads: int = 1,
+    host_devices: Optional[int] = None,
+    step_marker: bool = True,
+) -> str:
+    """The worker's XLA_FLAGS string (single owner when the harness is on)."""
+    flags = [
+        "--xla_cpu_multi_thread_eigen=false",
+        f"intra_op_parallelism_threads={threads}",
+    ]
+    if host_devices is not None and host_devices > 0:
+        flags.append(
+            f"--xla_force_host_platform_device_count={host_devices}"
+        )
+    if step_marker:
+        # 1 = mark at the outer while loop (0 would mark every entry)
+        flags.append("--xla_step_marker_location=1")
+    return " ".join(flags)
+
+
+def build_env(
+    base: Optional[dict] = None,
+    *,
+    threads: int = 1,
+    host_devices: Optional[int] = None,
+    step_marker: bool = True,
+    tcmalloc: bool = True,
+) -> dict:
+    """Build the tuned worker environment on top of ``base`` (a copy).
+
+    Keys the harness owns are SET (not defaulted): XLA_FLAGS, the thread
+    caps, and — when a tcmalloc library is found and ``tcmalloc`` is
+    True — LD_PRELOAD (appended to any caller preloads, never replacing
+    them) plus the large-alloc report threshold.  Missing tcmalloc
+    degrades gracefully to no preload.
+    """
+    env = dict(base) if base is not None else dict(os.environ)
+    env["XLA_FLAGS"] = xla_flags(
+        threads=threads, host_devices=host_devices, step_marker=step_marker
+    )
+    for var in THREAD_ENV_VARS:
+        env[var] = str(threads)
+    env.setdefault("TF_CPP_MIN_LOG_LEVEL", "4")
+    if tcmalloc:
+        lib = find_tcmalloc()
+        if lib is not None:
+            prior = env.get("LD_PRELOAD", "")
+            if lib not in prior.split(":"):
+                env["LD_PRELOAD"] = f"{prior}:{lib}".strip(":")
+            env["TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD"] = (
+                LARGE_ALLOC_THRESHOLD
+            )
+    return env
+
+
+def describe(env: dict) -> dict:
+    """The honest record of what the harness actually applied — carried
+    into the job result so a benchmark row states its own substrate
+    (tcmalloc present or absent, the exact XLA flags, thread caps)."""
+    preload = env.get("LD_PRELOAD", "")
+    return {
+        "tcmalloc": next(
+            (p for p in preload.split(":") if "tcmalloc" in p), None
+        ),
+        "xla_flags": env.get("XLA_FLAGS"),
+        "threads": {
+            var: env.get(var) for var in THREAD_ENV_VARS if var in env
+        },
+    }

@@ -503,6 +503,8 @@ def _fleet_faas(args, run_dir: str) -> dict:
             isp_v=args.isp_v,
             wire_scheme=args.wire_scheme or "auto",
             wire_quant=args.wire_quant,
+            wire_impl=getattr(args, "wire_impl", "numpy"),
+            hostperf=getattr(args, "hostperf", False),
             n_brokers=getattr(args, "n_brokers", 1),
             transport=getattr(args, "transport", "tcp"),
             consistency=getattr(args, "consistency", "isp"),
@@ -549,6 +551,8 @@ def train_faas(args) -> dict:
         isp_v=args.isp_v,
         wire_scheme=args.wire_scheme or "auto",
         wire_quant=args.wire_quant,
+        wire_impl=getattr(args, "wire_impl", "numpy"),
+        hostperf=getattr(args, "hostperf", False),
         n_brokers=getattr(args, "n_brokers", 1),
         transport=getattr(args, "transport", "tcp"),
         consistency=getattr(args, "consistency", "isp"),
@@ -597,6 +601,14 @@ def main() -> None:
                     choices=("none", "fp16", "bf16"),
                     help="faas: value quantization with error-feedback "
                     "residual (repro.wire)")
+    ap.add_argument("--wire-impl", default="numpy",
+                    choices=("numpy", "pallas", "auto"),
+                    help="faas: codec backend — numpy reference, fused "
+                    "Pallas kernels (bit-identical bytes), or per-leaf "
+                    "auto selection (DESIGN.md §15)")
+    ap.add_argument("--hostperf", action="store_true",
+                    help="faas: spawn workers under the tuned host env "
+                    "(launch/hostperf.py)")
     ap.add_argument("--optimizer", default="adam",
                     choices=("adam", "sgd", "nesterov"))
     ap.add_argument("--lr", type=float, default=3e-4)

@@ -187,6 +187,7 @@ def encode_tree_sharded(
     with_residual: bool = False,
     split_bytes: int = 0,
     namespace: str = "",
+    impl: str = "numpy",
 ) -> tuple[list[tuple[list[dict], list]], Optional[PyTree]]:
     """Encode a pytree into one (meta, buffer-views) message per shard.
 
@@ -201,6 +202,9 @@ def encode_tree_sharded(
     by the same prefixed keys, so one job can never decode into another
     job's accumulators.  Returns ``(per_shard, residual_tree)`` where
     ``per_shard[s]`` feeds ``publish``/``flush`` to shard ``s`` directly.
+    ``impl`` selects the codec implementation per leaf (numpy reference
+    or the fused Pallas wire-pack kernel, DESIGN.md §15) — wire bytes,
+    metas and residuals are bit-identical either way.
     """
     import jax
 
@@ -218,7 +222,7 @@ def encode_tree_sharded(
             m, parts, r = wire_codec.encode_leaf(
                 flat[off: off + n] if subkey != key else leaf,
                 scheme=scheme, quant=quant, key=namespace + key,
-                with_residual=with_residual,
+                with_residual=with_residual, impl=impl,
             )
             if subkey != key:
                 m["o"] = off
@@ -298,6 +302,26 @@ class LeafBuffers:
         buf[off: off + arr.size] += arr
         self._added[meta["k"]] += arr.size
 
+    def add_encoded(self, meta: dict, blob, impl: str = "numpy") -> None:
+        """Fold one ENCODED leaf/chunk straight into its buffer slice —
+        the fused decode/apply seam (DESIGN.md §15): under
+        ``impl='pallas'`` a bitmap-encoded part is scattered into the
+        accumulator by the unpack-apply kernel without materializing the
+        dense intermediate; every other case is exactly
+        ``add(meta, decode_leaf(meta, blob))``.  Bit-identical across
+        impls (the kernel's off-support lanes add the same +0.0 numpy's
+        ``+=`` does)."""
+        if impl == "numpy":
+            self.add(meta, wire_codec.decode_leaf(meta, blob))
+            return
+        buf = self._bufs[meta["k"]].reshape(-1)
+        n = int(np.prod(meta["shape"])) if meta["shape"] else 1
+        off = int(meta.get("o", 0))
+        buf[off: off + n] = wire_codec.decode_add_leaf(
+            buf[off: off + n], meta, blob, impl=impl
+        )
+        self._added[meta["k"]] += n
+
     def assert_complete(self, copies: int = 1, what: str = "tree") -> None:
         """Every element must have arrived exactly ``copies`` times —
         the all-or-nothing witness for flush/dump reassembly, which
@@ -322,7 +346,29 @@ class LeafBuffers:
         return key in self._bufs
 
 
-def iter_part_leaves(descs: list[dict], payload):
+def iter_part_views(descs: list[dict], payload):
+    """Walk one shard's multi-part pull/dump payload: yields
+    ``(desc, leaf_meta, byte_view)`` for every leaf of every part — the
+    ONE place the per-part offset bookkeeping lives.  ``iter_part_leaves``
+    decodes on top of this; the worker's fused decode/apply path hands
+    the views to ``LeafBuffers.add_encoded`` instead."""
+    from repro.wire.framing import unpack_parts
+
+    for desc, part in unpack_parts(descs, payload):
+        view = memoryview(part)
+        off = 0
+        for m in desc["meta"]:
+            nb = int(m["nbytes"])
+            yield desc, m, view[off:off + nb]
+            off += nb
+        if off != len(view):
+            raise ValueError(
+                f"part for worker {desc.get('worker')}: {len(view) - off} "
+                "trailing bytes after its leaf metas"
+            )
+
+
+def iter_part_leaves(descs: list[dict], payload, impl: str = "numpy"):
     """Walk one shard's multi-part pull/dump payload: yields
     ``(desc, leaf_meta, decoded_leaf)`` for every leaf of every part.
 
@@ -331,20 +377,8 @@ def iter_part_leaves(descs: list[dict], payload):
     both consume this, so the offset bookkeeping and key-order
     assumptions the bit-exactness claim rests on live in one place.
     """
-    from repro.wire.framing import unpack_parts
-
-    for desc, part in unpack_parts(descs, payload):
-        view = memoryview(part)
-        off = 0
-        for m in desc["meta"]:
-            nb = int(m["nbytes"])
-            yield desc, m, wire_codec.decode_leaf(m, view[off:off + nb])
-            off += nb
-        if off != len(view):
-            raise ValueError(
-                f"part for worker {desc.get('worker')}: {len(view) - off} "
-                "trailing bytes after its leaf metas"
-            )
+    for desc, m, view in iter_part_views(descs, payload):
+        yield desc, m, wire_codec.decode_leaf(m, view, impl=impl)
 
 
 def shard_bytes_bound(

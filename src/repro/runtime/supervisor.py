@@ -50,6 +50,7 @@ from repro.core.autotuner import AutoTunerConfig, ScaleInAutoTuner
 from repro.core.billing import FaaSBill, faas_cost
 from repro.runtime import protocol
 from repro.runtime import workload as workload_lib
+from repro.wire import codec as wire_codec
 
 PyTree = Any
 
@@ -82,6 +83,14 @@ class FaaSJobConfig:
     # optional 'fp16'|'bf16' value quantization with error-feedback residual
     wire_scheme: str = "auto"
     wire_quant: str = "none"
+    # codec backend (repro.wire.codec.IMPLS): 'numpy' is the reference
+    # path, 'pallas' the fused encode/decode kernels (bit-identical bytes,
+    # kernels/wire_pack.py), 'auto' picks per leaf by size
+    wire_impl: str = "numpy"
+    # tuned worker launch env (launch/hostperf.py): tcmalloc LD_PRELOAD
+    # when present, pinned XLA host flags, thread caps; the applied env is
+    # recorded verbatim in the result under 'hostperf'
+    hostperf: bool = False
     # update-store shards (paper: Redis instances) — the leaf-key partition
     # of runtime.sharding; bills as n_redis == n_brokers
     n_brokers: int = 1
@@ -136,6 +145,7 @@ class FaaSJobConfig:
             "straggler": self.straggler,
             "wire_scheme": self.wire_scheme,
             "wire_quant": self.wire_quant,
+            "wire_impl": self.wire_impl,
             "n_brokers": self.n_brokers,
             "transport": self.transport,
             "shard_split_bytes": self.shard_split_bytes,
@@ -201,6 +211,11 @@ class Supervisor:
             )
         if cfg.consistency == "ssp" and cfg.slack < 0:
             raise ValueError(f"slack must be >= 0, got {cfg.slack}")
+        if cfg.wire_impl not in wire_codec.IMPLS:
+            raise ValueError(
+                f"wire_impl must be one of {wire_codec.IMPLS}, got "
+                f"{cfg.wire_impl!r}"
+            )
         self.cfg = cfg
         self.wl = workload_lib.build(cfg.workload, cfg.workload_cfg)
         self.shards = [_BrokerShard(shard=s) for s in range(cfg.n_brokers)]
@@ -227,6 +242,7 @@ class Supervisor:
 
         self._shm_token = f"ml{os.getpid():x}{secrets.token_hex(2)}"
         self._shm_segments: dict[str, Any] = {}  # name -> wire.shm.Segment
+        self.hostperf_applied: Optional[dict] = None
         self.tuner: Optional[ScaleInAutoTuner] = None
         if cfg.autotune:
             self.tuner = ScaleInAutoTuner(
@@ -253,6 +269,15 @@ class Supervisor:
         env = self._base_env()
         if self.cfg.force_cpu:
             env["JAX_PLATFORMS"] = "cpu"
+        if self.cfg.hostperf:
+            # tuned launch env (launch/hostperf.py): tcmalloc preload when
+            # available, pinned XLA host flags, full thread-cap family; what
+            # was actually applied is recorded in self.hostperf_applied
+            from repro.launch import hostperf
+
+            env = hostperf.build_env(env, threads=1)
+            self.hostperf_applied = hostperf.describe(env)
+            return env
         # each worker is the paper's 1 vCPU function: cap per-process math
         # threads so N workers on an M-core host don't thrash each other
         # (oversubscribed intra-op parallelism was the dominant measured
@@ -962,6 +987,11 @@ class Supervisor:
             "phase_s_mean": phase_s_mean,
             "wire_scheme": self.cfg.wire_scheme,
             "wire_quant": self.cfg.wire_quant,
+            "wire_impl": self.cfg.wire_impl,
+            # what launch/hostperf.py actually applied (None when off, and
+            # tcmalloc: None inside when the library is absent) — every
+            # benchmark row states its own substrate
+            "hostperf": self.hostperf_applied,
             "invariant_max_err": max(
                 (r["inv_err"] for r in hist), default=0.0
             ),
@@ -1053,6 +1083,7 @@ def pmf_quickstart_config(
     run_dir: str, n_workers: int = 4, total_steps: int = 140,
     n_brokers: int = 1, transport: str = "tcp",
     consistency: str = "isp", slack: int = 3,
+    wire_impl: str = "numpy", hostperf: bool = False,
 ) -> FaaSJobConfig:
     """PMF on 4 CPU workers with a live knee-driven scale-in (~1 min)."""
     return FaaSJobConfig(
@@ -1076,6 +1107,8 @@ def pmf_quickstart_config(
         transport=transport,
         consistency=consistency,
         slack=slack,
+        wire_impl=wire_impl,
+        hostperf=hostperf,
         autotune=True,
         tuner=AutoTunerConfig(
             sched_interval_s=0.5,

@@ -241,6 +241,7 @@ def run_worker(
     pull_deadline_s = float(job.get("pull_deadline_s", 120.0))
     wire_scheme = str(job.get("wire_scheme", "auto"))
     wire_quant = str(job.get("wire_quant", "none"))
+    wire_impl = str(job.get("wire_impl", "numpy"))
     # bounded-staleness mode (DESIGN.md §13): under 'ssp' a pull at step t
     # is served exactly the peers' updates of step t - slack - 1, so the
     # worker runs up to slack + 1 steps ahead of the slowest peer instead
@@ -390,14 +391,14 @@ def run_worker(
         sums = sharding.LeafBuffers(leaf_like)
         flush_acc: dict[int, sharding.LeafBuffers] = {}
         for descs, blob in shard_parts:
-            for desc, m, leaf in sharding.iter_part_leaves(descs, blob):
+            for desc, m, view in sharding.iter_part_views(descs, blob):
                 if desc.get("flush"):
                     q = int(desc["worker"])
                     if q not in flush_acc:  # setdefault would zero-fill
                         flush_acc[q] = sharding.LeafBuffers(leaf_like)
-                    flush_acc[q].add(m, leaf)
+                    flush_acc[q].add_encoded(m, view, impl=wire_impl)
                 else:
-                    sums.add(m, leaf)
+                    sums.add_encoded(m, view, impl=wire_impl)
         peers_sum = jax.tree_util.tree_unflatten(
             treedef0, [sums[ns + k] for k in leaf_keys]
         )
@@ -499,7 +500,7 @@ def run_worker(
             flushed = jax.tree.map(lambda x, r: x + r, params, residual)
             per_shard, _ = sharding.encode_tree_sharded(
                 flushed, assignment, n_shards,
-                quant=wire_quant,
+                quant=wire_quant, impl=wire_impl,
                 split_bytes=split_bytes, namespace=ns,
             )
             fanout(
@@ -597,12 +598,15 @@ def run_worker(
             sig, assignment, n_shards,
             scheme=wire_scheme, quant=wire_quant,
             with_residual=(wire_quant != "none"),
-            split_bytes=split_bytes, namespace=ns,
+            split_bytes=split_bytes, namespace=ns, impl=wire_impl,
         )
         if qerr is not None:
-            res = jax.tree.map(
+            # fence the async residual fold: without it the tree.map's
+            # device work smears into whatever phase blocks next, and
+            # t_encode under-reports the encode phase it belongs to
+            res = jax.block_until_ready(jax.tree.map(
                 lambda r, e: r + e.astype(r.dtype), res, qerr
-            )
+            ))
         total_bytes = sum(
             protocol.wire_bytes(meta) for meta, _ in per_shard
         )

@@ -16,10 +16,13 @@ bytes through here, so simulated bytes == measured bytes by construction.
 
 from repro.wire.codec import (  # noqa: F401
     AUTO,
+    IMPLS,
     INT32_MAX,
+    PALLAS_AUTO_MIN_N,
     QUANTS,
     SCHEMES,
     best_scheme,
+    decode_add_leaf,
     decode_leaf,
     decode_tree,
     encode_leaf,
@@ -29,9 +32,11 @@ from repro.wire.codec import (  # noqa: F401
     index_itemsize,
     leaf_nbytes,
     mask_nbytes,
+    pallas_ok,
     predict_leaf_nbytes,
     predict_tree_nbytes,
     quant_dtype,
+    resolve_impl,
     tree_keys,
     tree_nbytes,
 )

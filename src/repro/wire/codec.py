@@ -57,6 +57,60 @@ QUANTS = ("none", "fp16", "bf16")
 
 INT32_MAX = 2**31 - 1  # flat-index overflow bound (satellite guard)
 
+# -- encoder implementations (DESIGN.md §15) ----------------------------------
+# 'numpy' is the reference (and the default: tiny leaves lose to kernel
+# dispatch overhead); 'pallas' routes through the fused wire-pack kernel
+# (kernels.wire_pack — one device pass: mask-pack + quantize + compact +
+# residual); 'auto' picks pallas for leaves big enough to amortize the
+# launch.  Every impl produces BIT-IDENTICAL wire bytes, metas and
+# residuals (property-tested in tests/test_wire_pack.py and gated live by
+# benchmarks/wire_guard.py --impl pallas), so impl is a pure perf knob —
+# accounting, digests and replay never depend on it.
+IMPLS = ("numpy", "pallas", "auto")
+PALLAS_AUTO_MIN_N = 1 << 15  # one full (256, 128) tile
+# dtypes the kernel path accepts: jax must round-trip them losslessly
+# (int64/f64 would be silently downcast under the default x64=off)
+_PALLAS_DTYPES = frozenset(("float32", "float16", "bfloat16", "int32"))
+# fused decode/apply additionally requires the accumulate to round
+# identically to numpy's += — exact dtypes only (f16 adds may double-round
+# differently between BLAS paths, so they take the decode-then-add route)
+_PALLAS_ADD_DTYPES = frozenset(("float32", "int32"))
+
+
+def _interpret() -> bool:
+    """Pallas interpret mode: on for every backend without a real TPU
+    (the CPU CI path); computed lazily so importing the codec never
+    initializes a jax backend."""
+    import jax
+
+    return jax.default_backend() != "tpu"
+
+
+def pallas_ok(n: int, dtype: Any, quant: str = "none") -> bool:
+    """Can the fused kernel path encode this leaf bit-identically?"""
+    dt = np.dtype(dtype)
+    return (
+        0 < n <= INT32_MAX
+        and dt.name in _PALLAS_DTYPES
+        and quant_dtype(dt, quant).name in _PALLAS_DTYPES
+    )
+
+
+def resolve_impl(impl: str, n: int, dtype: Any, quant: str = "none") -> str:
+    """'auto'/'pallas' -> the impl actually used for this leaf (falls back
+    to numpy when the kernel can't hold bit-identity for it)."""
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    if impl == "numpy" or not pallas_ok(n, dtype, quant):
+        return "numpy"
+    if impl == "auto" and (n < PALLAS_AUTO_MIN_N or _interpret()):
+        # auto is a PERF policy: small leaves lose to numpy on fixed
+        # dispatch cost, and interpret-mode kernels (no TPU attached) lose
+        # at every size (measured: benchmarks/encode_bench.py) — explicit
+        # impl='pallas' still runs them, as the bit-identity validation leg
+        return "numpy"
+    return "pallas"
+
 
 # -- sizing: the one formula every layer reads --------------------------------
 
@@ -127,6 +181,7 @@ def encode_leaf(
     quant: str = "none",
     key: Optional[str] = None,
     with_residual: bool = False,
+    impl: str = "numpy",
 ) -> tuple[dict, list, Optional[np.ndarray]]:
     """Encode one array -> (meta, buffer parts, optional fp32 residual).
 
@@ -142,12 +197,22 @@ def encode_leaf(
     With ``with_residual=True`` the third element is the fp32
     quantization error (``arr - decode(encode(arr))``), zeros when
     nothing was lost.
+
+    ``impl`` selects the encoder implementation (module constants above):
+    'numpy' (reference, default), 'pallas' (fused kernel), or 'auto'
+    (kernel for leaves past ``PALLAS_AUTO_MIN_N``).  Bytes, meta and
+    residual are bit-identical across impls.
     """
     a = np.asarray(arr)
     dt = a.dtype
     vdt = quant_dtype(dt, quant)
     flat = np.ascontiguousarray(a).reshape(-1)
     n = int(flat.size)
+    if resolve_impl(impl, n, dt, quant) == "pallas":
+        return _encode_leaf_pallas(
+            a, flat, scheme=scheme, quant=quant, key=key,
+            with_residual=with_residual,
+        )
     nz = np.flatnonzero(flat)
     nnz = int(nz.size)
     if scheme == AUTO:
@@ -200,6 +265,73 @@ def encode_leaf(
     return meta, parts, residual
 
 
+def _encode_leaf_pallas(
+    a: np.ndarray,
+    flat: np.ndarray,
+    scheme: str,
+    quant: str,
+    key: Optional[str],
+    with_residual: bool,
+) -> tuple[dict, list, Optional[np.ndarray]]:
+    """Fused-kernel encode: ONE device pass emits the packed mask bytes,
+    quantized values (dense + front-compacted), flat indices, nnz and the
+    error-feedback residual (kernels.wire_pack); this host shim only
+    slices the first ``nnz`` wire values and builds the same meta/parts
+    the numpy body produces — asserted against the same ``leaf_nbytes``
+    formula, byte-for-byte interchangeable with it."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import wire_pack as _wp
+
+    dt = a.dtype
+    vdt = quant_dtype(dt, quant)
+    n = int(flat.size)
+    out = _wp.wire_pack(
+        jnp.asarray(flat),
+        vdt=np.dtype(vdt),
+        block_rows=_wp.pick_block_rows(n),
+        interpret=_interpret(),
+    )
+    mask, qdense, cvals, cidx, nnz_a, res = jax.device_get(out)
+    nnz = int(nnz_a)
+    if scheme == AUTO:
+        scheme = best_scheme(n, nnz, vdt.itemsize)
+    meta: dict = {
+        "k": key,
+        "shape": list(a.shape),
+        "dtype": str(dt),
+        "enc": scheme,
+        "nnz": nnz,
+    }
+    if vdt != dt:
+        meta["q"] = quant
+    if scheme == "dense":
+        parts = [_byte_view(qdense)]
+    elif scheme == "sparse":
+        # the kernel path is gated to n <= INT32_MAX, so indices are int32
+        parts = [_byte_view(cidx[:nnz]), _byte_view(cvals[:nnz])]
+    elif scheme == "bitmap":
+        parts = [_byte_view(mask), _byte_view(cvals[:nnz])]
+    else:
+        raise ValueError(f"scheme must be one of {SCHEMES}, got {scheme!r}")
+    nbytes = sum(len(p) for p in parts)
+    expect = leaf_nbytes(scheme, n, nnz, vdt.itemsize)
+    assert nbytes == expect, (nbytes, expect, meta)  # the §10 invariant
+    meta["nbytes"] = nbytes
+    residual = None
+    if with_residual:
+        # the kernel's residual is f32(x) - f32(quant(x)), which is zero
+        # off the nnz support by IEEE subtraction — identical to the numpy
+        # body for every scheme; vdt == dt short-circuits to exact zeros
+        # (inf - inf in the kernel form would manufacture NaNs)
+        if vdt == dt:
+            residual = np.zeros(a.shape, np.float32)
+        else:
+            residual = np.asarray(res).reshape(a.shape)
+    return meta, parts, residual
+
+
 def _byte_view(arr: np.ndarray):
     """Read-only byte view over a C-contiguous array (keeps it alive).
 
@@ -210,11 +342,15 @@ def _byte_view(arr: np.ndarray):
     return a.view(np.uint8).reshape(-1).data.cast("B")
 
 
-def decode_leaf(meta: dict, blob) -> np.ndarray:
+def decode_leaf(meta: dict, blob, impl: str = "numpy") -> np.ndarray:
     """Decode one leaf's bytes back into an array of its original dtype.
 
     Quantized values are widened back (``dequant(quant(x))`` — bit-exact
     against what the encoder saw post-quantization).
+
+    ``impl='pallas'``/'auto' routes bitmap-encoded leaves through the
+    fused unpack kernel (dense/sparse stay numpy: they are already a
+    single ``frombuffer``/scatter pass).  Bit-identical across impls.
     """
     shape = tuple(meta["shape"])
     dt = np.dtype(meta["dtype"])
@@ -222,6 +358,10 @@ def decode_leaf(meta: dict, blob) -> np.ndarray:
     n = int(np.prod(shape)) if shape else 1
     enc = meta["enc"]
     nnz = int(meta["nnz"])
+    if enc == "bitmap" and resolve_impl(
+        impl, n, dt, meta.get("q", "none")
+    ) == "pallas":
+        return _unpack_pallas(None, meta, blob).reshape(shape)
     if enc == "dense":
         vals = np.frombuffer(blob, dtype=vdt, count=n)
         return (vals if vdt == dt else vals.astype(dt)).reshape(shape)
@@ -246,6 +386,66 @@ def decode_leaf(meta: dict, blob) -> np.ndarray:
         out[mask] = vals.astype(dt)
         return out.reshape(shape)
     raise ValueError(f"unknown leaf encoding {enc!r}")
+
+
+def _unpack_pallas(
+    target: Optional[np.ndarray], meta: dict, blob
+) -> np.ndarray:
+    """Fused bitmap decode(+apply): one kernel scatter of the received
+    ``(mask, values)`` pair into ``target`` (zeros when decoding only).
+
+    The compact values are padded host-side to a power-of-two capacity so
+    the gather shape is static — a step whose nnz drifts reuses the same
+    compiled kernel instead of paying a recompile per nnz."""
+    import jax.numpy as jnp
+
+    from repro.kernels import wire_pack as _wp
+
+    shape = tuple(meta["shape"])
+    dt = np.dtype(meta["dtype"])
+    vdt = quant_dtype(dt, meta.get("q", "none"))
+    n = int(np.prod(shape)) if shape else 1
+    nnz = int(meta["nnz"])
+    mb = mask_nbytes(n)
+    mask = np.frombuffer(blob, dtype=np.uint8, count=mb)
+    vals = np.frombuffer(blob, dtype=vdt, offset=mb, count=nnz)
+    cap = 1 << max(nnz - 1, 0).bit_length()
+    cpad = np.zeros(cap, vdt)
+    cpad[:nnz] = vals
+    if target is None:
+        target = np.zeros(n, dt)
+    out = _wp.wire_unpack_add(
+        jnp.asarray(np.ascontiguousarray(target).reshape(-1)),
+        jnp.asarray(mask),
+        jnp.asarray(cpad),
+        block_rows=_wp.pick_block_rows(n),
+        interpret=_interpret(),
+    )
+    return np.asarray(out)
+
+
+def decode_add_leaf(
+    target: np.ndarray, meta: dict, blob, impl: str = "numpy"
+) -> np.ndarray:
+    """Decode one leaf and ADD it into ``target`` (flat, leaf dtype) —
+    the worker decode phase's per-peer accumulate, returned as a new
+    array.  Under ``impl='pallas'``/'auto' a bitmap leaf takes the fused
+    unpack-apply kernel (one pass: mask bits -> gather -> add), which is
+    bit-identical to ``target + decode_leaf(...)`` — the f32 adds round
+    the same way and the off-support lanes still add an explicit +0.0.
+    Every other case decodes and adds in numpy."""
+    dt = np.dtype(meta["dtype"])
+    n = int(np.prod(meta["shape"])) if meta["shape"] else 1
+    if (
+        meta["enc"] == "bitmap"
+        and dt.name in _PALLAS_ADD_DTYPES
+        and resolve_impl(impl, n, dt, meta.get("q", "none")) == "pallas"
+    ):
+        return _unpack_pallas(np.asarray(target).reshape(-1), meta, blob)
+    return (
+        np.asarray(target).reshape(-1)
+        + decode_leaf(meta, blob).reshape(-1)
+    )
 
 
 # -- pytree encode / decode ---------------------------------------------------

@@ -1,0 +1,287 @@
+"""Bit-identity of the fused Pallas encode/decode path (DESIGN.md §15).
+
+The Pallas kernels of ``kernels/wire_pack.py`` are an IMPLEMENTATION of
+the wire codec, not a codec: for every (scheme, dtype, quant, shape)
+cell the bytes on the wire, the meta accounting, the error-feedback
+residual, and the decoded/accumulated values must equal the numpy
+reference bit for bit.  Property tests drive random cells through both
+backends; the edge-shape suite pins the cases a tiled kernel gets wrong
+first (empty, scalar, single element, non-tile-aligned, all-significant,
+all-zero).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime import sharding
+from repro.wire import codec
+
+try:
+    import ml_dtypes
+
+    BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover
+    BF16 = None
+
+SCHEMES = ("dense", "sparse", "bitmap", "auto")
+
+# (leaf dtype, quant) pairs that are valid together — integer leaves
+# never quantize (codec.quant_dtype passes them through)
+DTYPE_QUANT = [
+    ("float32", "none"),
+    ("float32", "fp16"),
+    ("float16", "none"),
+    ("int32", "none"),
+]
+if BF16 is not None:
+    DTYPE_QUANT += [("float32", "bf16"), ("bfloat16", "none"),
+                    ("bfloat16", "bf16")]
+
+
+def _dtype(name: str) -> np.dtype:
+    return BF16 if name == "bfloat16" else np.dtype(name)
+
+
+def _leaf(n: int, density: float, seed: int, dtype_name: str,
+          shape=None) -> np.ndarray:
+    rng = np.random.RandomState(seed)
+    dt = _dtype(dtype_name)
+    if np.dtype(dt).kind == "f":
+        x = (rng.randn(n) * 3).astype(np.float32)
+    else:
+        x = rng.randint(-1000, 1000, size=n).astype(np.int64)
+    if n:
+        x[rng.rand(n) >= density] = 0
+    a = x.astype(dt)
+    return a.reshape(shape) if shape is not None else a
+
+
+def _encode_both(a, scheme, quant):
+    """(meta, blob, residual) under each backend; pallas is FORCED (the
+    explicit impl), so any silent fallback shows up as resolve_impl
+    returning numpy — asserted by the caller when it expects the kernel."""
+    out = {}
+    for impl in ("numpy", "pallas"):
+        meta, parts, res = codec.encode_leaf(
+            a, scheme=scheme, quant=quant, key="k",
+            with_residual=True, impl=impl,
+        )
+        out[impl] = (meta, b"".join(bytes(p) for p in parts), res)
+    return out["numpy"], out["pallas"]
+
+
+def _assert_identical(a, scheme, quant):
+    (m_np, b_np, r_np), (m_pl, b_pl, r_pl) = _encode_both(a, scheme, quant)
+    assert m_np == m_pl
+    assert b_np == b_pl
+    assert (r_np is None) == (r_pl is None)
+    if r_np is not None:
+        assert r_np.dtype == r_pl.dtype
+        assert r_np.tobytes() == r_pl.tobytes()
+    # decode round-trips identically through both backends
+    d_np = codec.decode_leaf(m_np, b_np, impl="numpy")
+    d_pl = codec.decode_leaf(m_pl, b_pl, impl="pallas")
+    assert d_np.tobytes() == d_pl.tobytes()
+    assert d_np.shape == d_pl.shape == a.shape
+    return m_np, b_np
+
+
+# -- property tests ------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(0, 3000),
+    density=st.sampled_from((0.0, 0.05, 0.3, 1.0)),
+    seed=st.integers(0, 2**16),
+    scheme=st.sampled_from(SCHEMES),
+    dq=st.sampled_from(DTYPE_QUANT),
+)
+def test_encode_bit_identity_property(n, density, seed, scheme, dq):
+    dtype_name, quant = dq
+    a = _leaf(n, density, seed, dtype_name)
+    _assert_identical(a, scheme, quant)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 2000),
+    density=st.sampled_from((0.05, 0.5)),
+    seed=st.integers(0, 2**16),
+    quant=st.sampled_from(("none", "fp16")),
+)
+def test_residual_conservation_property(n, density, seed, quant):
+    """sent + residual == original update mass, via either backend: the
+    residual is exactly f32(x) - f32(dequant(quant(x))) on the support."""
+    a = _leaf(n, density, seed, "float32")
+    (m, b, r_np), (_, _, r_pl) = _encode_both(a, "auto", quant)
+    assert r_np.tobytes() == r_pl.tobytes()
+    dec = codec.decode_leaf(m, b).astype(np.float32)
+    np.testing.assert_array_equal(dec + r_np, a.astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 2000),
+    density=st.sampled_from((0.0, 0.1, 1.0)),
+    seed=st.integers(0, 2**16),
+    dtype_name=st.sampled_from(("float32", "int32")),
+)
+def test_decode_add_matches_reference(n, density, seed, dtype_name):
+    """The fused decode/apply (scatter-into-target) == target + decode."""
+    a = _leaf(n, density, seed, dtype_name)
+    meta, parts, _ = codec.encode_leaf(a, scheme="bitmap", key="k")
+    blob = b"".join(bytes(p) for p in parts)
+    target = _leaf(n, 1.0, seed + 1, dtype_name)
+    want = target + codec.decode_leaf(meta, blob)
+    got = codec.decode_add_leaf(target.copy(), meta, blob, impl="pallas")
+    assert got.tobytes() == want.tobytes()
+    assert got.dtype == want.dtype
+
+
+# -- edge shapes ---------------------------------------------------------------
+
+
+EDGE_SHAPES = [
+    ((), "scalar"),
+    ((0,), "empty"),
+    ((1,), "single"),
+    ((129,), "one_past_sublane"),
+    ((8, 128), "exact_tile"),
+    ((8, 129), "one_past_tile"),
+    ((1025,), "non_aligned_1d"),
+    ((3, 5, 7), "odd_3d"),
+]
+
+
+@pytest.mark.parametrize("shape", [s for s, _ in EDGE_SHAPES],
+                         ids=[i for _, i in EDGE_SHAPES])
+@pytest.mark.parametrize("density", [0.0, 0.2, 1.0])
+@pytest.mark.parametrize("scheme", ["auto", "bitmap"])
+def test_edge_shapes(shape, density, scheme):
+    n = int(np.prod(shape)) if shape else 1
+    a = _leaf(n, density, 7, "float32", shape=shape)
+    _assert_identical(a, scheme, "fp16")
+    _assert_identical(a, scheme, "none")
+
+
+def test_negative_zero_dense_bits_preserved():
+    """Dense encoding must ship -0.0's sign bit exactly as numpy does
+    (the fused path may not build dense values from the masked array)."""
+    a = np.array([-0.0, 0.0, 1.5, -0.0], dtype=np.float32)
+    for quant in ("none", "fp16"):
+        _assert_identical(a, "dense", quant)
+
+
+def test_large_leaf_over_auto_threshold():
+    n = codec.PALLAS_AUTO_MIN_N + 17  # non-aligned, past the auto gate
+    a = _leaf(n, 0.05, 3, "float32")
+    _assert_identical(a, "auto", "fp16")
+
+
+# -- impl resolution -----------------------------------------------------------
+
+
+def test_resolve_impl_gates():
+    f32, i64 = np.dtype(np.float32), np.dtype(np.int64)
+    assert codec.resolve_impl("numpy", 1000, f32) == "numpy"
+    # pallas falls back where bit-identity can't hold / nothing to do
+    assert codec.resolve_impl("pallas", 0, f32) == "numpy"
+    assert codec.resolve_impl("pallas", 1000, i64) == "numpy"
+    assert codec.resolve_impl("pallas", 1000, f32) == "pallas"
+    # auto is a perf policy: small leaves stay numpy; interpret-mode
+    # kernels (no TPU on this host) stay numpy at every size
+    assert codec.resolve_impl("auto", 100, f32) == "numpy"
+    big = codec.PALLAS_AUTO_MIN_N + 1
+    expect = "numpy" if codec._interpret() else "pallas"
+    assert codec.resolve_impl("auto", big, f32) == expect
+    with pytest.raises(ValueError):
+        codec.resolve_impl("cuda", 10, f32)
+
+
+def test_decode_add_unsupported_dtype_falls_back():
+    """f16 targets must NOT take the fused in-place add (double rounding):
+    decode_add_leaf falls back to the reference add for them."""
+    a = _leaf(300, 0.2, 5, "float16")
+    meta, parts, _ = codec.encode_leaf(a, scheme="bitmap", key="k")
+    blob = b"".join(bytes(p) for p in parts)
+    target = _leaf(300, 1.0, 6, "float16")
+    want = target + codec.decode_leaf(meta, blob)
+    got = codec.decode_add_leaf(target.copy(), meta, blob, impl="pallas")
+    assert got.tobytes() == want.tobytes()
+
+
+# -- kernel internals ----------------------------------------------------------
+
+
+def test_wire_pack_mask_matches_packbits():
+    from repro.kernels import wire_pack
+
+    rng = np.random.RandomState(0)
+    for n in (1, 7, 8, 9, 500, 1024, 1025):
+        flat = rng.randn(n).astype(np.float32)
+        flat[rng.rand(n) >= 0.3] = 0.0
+        mask, _qdense, _cvals, _cidx, nnz, _res = wire_pack.wire_pack(
+            flat, vdt=np.dtype(np.float32),
+            block_rows=wire_pack.pick_block_rows(n), interpret=True,
+        )
+        want = np.packbits(flat != 0, bitorder="little")
+        assert np.asarray(mask).tobytes() == want.tobytes()
+        assert int(nnz) == int(np.count_nonzero(flat))
+
+
+def test_wire_nnz_counts():
+    import jax.numpy as jnp
+
+    from repro.kernels import wire_pack
+
+    rng = np.random.RandomState(1)
+    for n in (1, 129, 4096):
+        flat = rng.randn(n).astype(np.float32)
+        flat[rng.rand(n) >= 0.4] = 0.0
+        got = wire_pack.wire_nnz(jnp.asarray(flat), interpret=True)
+        assert int(got) == int(np.count_nonzero(flat))
+
+
+# -- accumulator integration ---------------------------------------------------
+
+
+def test_leafbuffers_add_encoded_bit_identical():
+    """sharding.LeafBuffers.add_encoded under the pallas backend must
+    reproduce the reference decode-then-add accumulation bit for bit —
+    this is the fixed f32 summation order the cross-topology digests
+    rest on."""
+    rng = np.random.RandomState(2)
+    like = {"w": np.zeros(700, np.float32), "b": np.zeros(33, np.float32)}
+    payloads = []
+    for seed in range(4):
+        tree = {
+            k: _leaf(v.size, 0.3, 10 + seed, "float32")
+            for k, v in like.items()
+        }
+        enc = {}
+        for k, a in tree.items():
+            meta, parts, _ = codec.encode_leaf(
+                a, scheme="bitmap", quant="fp16", key=k
+            )
+            enc[k] = (meta, b"".join(bytes(p) for p in parts))
+        payloads.append(enc)
+
+    results = {}
+    for impl in ("numpy", "pallas"):
+        bufs = sharding.LeafBuffers(
+            {k: (v.shape, v.dtype) for k, v in like.items()}
+        )
+        for enc in payloads:
+            for k, (meta, blob) in enc.items():
+                bufs.add_encoded(meta, blob, impl=impl)
+        results[impl] = {k: bufs[k].tobytes() for k in like}
+    assert results["numpy"] == results["pallas"]
+    ref = np.zeros_like(like["w"])
+    for enc in payloads:
+        meta, blob = enc["w"]
+        ref = ref + codec.decode_leaf(meta, blob)
+    assert results["numpy"]["w"] == ref.tobytes()

@@ -29,6 +29,7 @@ def main() -> None:
         fig9_ssp_vs_isp,
         fig10_scalability,
         fig11_multijob,
+        fig12_topology,
         table3_weak_scaling,
     )
 
@@ -41,6 +42,7 @@ def main() -> None:
         "fig9": fig9_ssp_vs_isp,
         "fig10": fig10_scalability,
         "fig11": fig11_multijob,
+        "fig12": fig12_topology,
         "table3": table3_weak_scaling,
     }
     argv = sys.argv[1:]

@@ -79,6 +79,7 @@ def _encode_p50(history: list) -> float:
 
 def run_smoke(
     n_brokers: int = 1, transport: str = "tcp", wire_impl: str = "numpy",
+    partitioner: str = "greedy", shard_split_bytes: int = 0,
 ) -> dict:
     from functools import partial
 
@@ -108,6 +109,8 @@ def run_smoke(
         transport=transport,
         wire_impl=wire_impl,
         autotune=False,
+        partitioner=partitioner,
+        shard_split_bytes=shard_split_bytes,
         deadline_s=240.0,
     )
     wl = build_workload(job.workload, job.workload_cfg)
@@ -143,6 +146,9 @@ def run_smoke(
     return {
         "transport": transport,
         "wire_impl": wire_impl,
+        "partitioner": partitioner,
+        "topology_events": live["topology_events"],
+        "topology_gen": live["topology_gen"],
         "encode_s_p50": _encode_p50(live["history"]),
         "wire_bytes_total": float(live["wire_bytes_total"]),
         "update_bytes_per_shard": live["broker_update_bytes_per_shard"],
@@ -226,6 +232,8 @@ def main() -> int:
         single = run_smoke(n_brokers=1)
         sharded = run_smoke(n_brokers=SMOKE_SHARDS)
         shm = run_smoke(n_brokers=SMOKE_SHARDS, transport="shm")
+        ring = run_smoke(n_brokers=SMOKE_SHARDS, partitioner="ring",
+                         shard_split_bytes=1024)
         multijob = run_multijob_smoke()
         alt_impl = (run_smoke(n_brokers=1, wire_impl=args.impl)
                     if args.impl != "none" else None)
@@ -248,7 +256,7 @@ def main() -> int:
         ),
     }
     print(json.dumps(
-        {"single": single, "sharded": sharded, "shm": shm,
+        {"single": single, "sharded": sharded, "shm": shm, "ring": ring,
          "multijob": multijob, "alt_impl": alt_impl},
         indent=1,
     ))
@@ -299,9 +307,46 @@ def main() -> int:
         )
         ok = False
     if sharded["dup_mismatches"] or single["dup_mismatches"] \
-            or shm["dup_mismatches"] or multijob["dup_mismatches"]:
+            or shm["dup_mismatches"] or ring["dup_mismatches"] \
+            or multijob["dup_mismatches"]:
         print("wire_guard: REGRESSION: dup_mismatches != 0",
               file=sys.stderr)
+        ok = False
+    # the tuner-off guard (DESIGN.md §16): with --topology-tune off the
+    # topology machinery must be provably inert on every default leg — no
+    # re-shard events, generation pinned at 0 — so the exact-baseline gates
+    # below really do certify the untouched default path
+    for name, run in (("single", single), ("sharded", sharded),
+                      ("shm", shm)):
+        if run["topology_events"] or run["topology_gen"] != 0:
+            print(
+                f"wire_guard: REGRESSION: {name} leg ran with the tuner "
+                f"off yet saw topology activity (events="
+                f"{run['topology_events']}, gen={run['topology_gen']})",
+                file=sys.stderr,
+            )
+            ok = False
+    # the ring-layout leg: the consistent-hash partitioner + chunked
+    # encoding (split=1024 B) legitimately changes WHERE bytes go and the
+    # per-chunk codec choices (so wire_bytes_total differs from the
+    # whole-leaf baseline by design) — but the math is layout-invariant:
+    # identical final parameters, exact per-shard accounting, clean ledger
+    if ring["final_params_sha256"] != single["final_params_sha256"]:
+        print(
+            "wire_guard: REGRESSION: ring-partitioner final params "
+            f"{ring['final_params_sha256']} != greedy layout "
+            f"{single['final_params_sha256']} (the shard layout leaked "
+            "into the math)",
+            file=sys.stderr,
+        )
+        ok = False
+    if sum(ring["update_bytes_per_shard"]) != int(ring["wire_bytes_total"]):
+        print(
+            "wire_guard: REGRESSION: ring per-shard broker-measured bytes "
+            f"{ring['update_bytes_per_shard']} do not sum to "
+            f"{ring['wire_bytes_total']}",
+            file=sys.stderr,
+        )
         ok = False
     # the fleet leg: packing a co-tenant onto the pool may not change a
     # byte of the smoke job's update stream nor a bit of its parameters

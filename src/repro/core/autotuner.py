@@ -120,11 +120,21 @@ class ScaleInAutoTuner:
         """Called by the runtime whenever a scheduling interval elapses."""
         cfg = self.config
         self._maybe_find_knee()
+        # Interval accounting is uniform across ALL outcomes: an elapsed
+        # interval is consumed here, whatever decide() goes on to return.
+        # Previously pre-knee/at-min-pool returns left _last_sched_time
+        # stale, so the first post-knee decision fired immediately off a
+        # timestamp from before the knee was even found.
+        interval_elapsed = (
+            self._time - self._last_sched_time >= cfg.sched_interval_s
+        )
+        if interval_elapsed:
+            self._last_sched_time = self._time
         if self.knee_step is None:
             return Decision(False, None, "pre-knee")
         if self.pool <= cfg.min_workers:
             return Decision(False, None, "at-min-pool")
-        if self._time - self._last_sched_time < cfg.sched_interval_s:
+        if not interval_elapsed:
             return Decision(False, None, "interval-not-elapsed")
 
         # First eviction right at the knee (paper: "removes the worker with
@@ -135,10 +145,6 @@ class ScaleInAutoTuner:
 
         ell, d_p = self._estimate_current()
         if ell is None or self.reference is None or self.d_P is None:
-            # Consume the interval like every other post-knee outcome:
-            # without this an under-observed tuner re-fires the fit on every
-            # call until min_points accumulate, ignoring sched_interval_s.
-            self._last_sched_time = self._time
             return Decision(False, None, "under-observed")
 
         t_now = float(self._steps[-1])
@@ -151,7 +157,6 @@ class ScaleInAutoTuner:
         if s_delta < cfg.threshold_S:
             self._record_removal()
             return Decision(True, s_delta, "scale-in")
-        self._last_sched_time = self._time
         return Decision(False, s_delta, "above-threshold")
 
     def _record_removal(self) -> None:
@@ -170,6 +175,161 @@ class ScaleInAutoTuner:
             if self.reference is None
             else self.reference.theta.tolist(),
             "d_P": self.d_P,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyTunerConfig:
+    explore_steps: int = 6  # measured (post-warmup) steps per cell
+    warmup_steps: int = 1  # dropped per cell: XLA re-warm after a re-shard
+    rel_tolerance: float = 0.05  # p50s within this are a tie
+
+
+class TopologyTuner:
+    """Explore-then-commit co-tuner over topology cells (DESIGN.md §16).
+
+    A *cell* is a full knob assignment ``{n_brokers, transport,
+    wire_scheme, shard_split_bytes}``; cell 0 is the topology the job
+    started with.  The tuner spends ``warmup_steps + explore_steps``
+    measured steps in each cell (the warm-up is dropped — a re-shard
+    re-triggers XLA compilation on the respawned workers), then commits
+    to the cell with the lowest step-duration p50.  Cells whose p50s are
+    within ``rel_tolerance`` of the best are tied; ties break on the
+    simulator's cost model (``CommModel.indirect_exchange_time`` with the
+    cell's broker count — the same exchange-time term the simulator
+    prices, so tuner preference and simulated cost agree by
+    construction), then on p50, then on cell order.
+
+    The tuner only *recommends* — ``next_action()`` returns
+    ``("explore", cell)`` / ``("commit", cell)`` / ``None`` and the
+    supervisor performs the WAL-coordinated handover.  ``abandon()``
+    stops the experiment (e.g. the job is too close to its end for
+    another fence).
+    """
+
+    def __init__(
+        self,
+        cells: list,
+        config: Optional[TopologyTunerConfig] = None,
+        comm=None,
+        bytes_per_step: float = 0.0,
+        n_workers: int = 1,
+    ):
+        if not cells:
+            raise ValueError("TopologyTuner needs at least one cell")
+        self.cells = [dict(c) for c in cells]
+        self.config = config or TopologyTunerConfig()
+        self.comm = comm
+        self.bytes_per_step = float(bytes_per_step)
+        self.n_workers = int(n_workers)
+        self.active = 0
+        self.committed: Optional[int] = None
+        self._abandoned = False
+        self._durs: list[list[float]] = [[] for _ in self.cells]
+        self._phases: list[dict[str, list[float]]] = [
+            {} for _ in self.cells
+        ]
+
+    def observe(self, dur_s: float, phases: Optional[dict] = None) -> None:
+        """Feed one measured step of the ACTIVE cell: wall duration plus
+        the per-phase seconds dict the workers already report."""
+        self._durs[self.active].append(float(dur_s))
+        for k, v in (phases or {}).items():
+            self._phases[self.active].setdefault(k, []).append(float(v))
+
+    def _steady(self, i: int) -> list[float]:
+        return self._durs[i][self.config.warmup_steps:]
+
+    def cell_stats(self, i: int) -> dict:
+        durs = self._steady(i)
+        stats: dict = {
+            "cell": dict(self.cells[i]),
+            "n_steps": len(durs),
+            "p50": float(np.percentile(durs, 50)) if durs else None,
+            "p95": float(np.percentile(durs, 95)) if durs else None,
+        }
+        w = self.config.warmup_steps
+        stats["phase_p50"] = {
+            k: float(np.percentile(v[w:], 50))
+            for k, v in self._phases[i].items()
+            if v[w:]
+        }
+        stats["phase_p95"] = {
+            k: float(np.percentile(v[w:], 95))
+            for k, v in self._phases[i].items()
+            if v[w:]
+        }
+        return stats
+
+    def _model_cost(self, cell: dict) -> float:
+        if self.comm is None:
+            return 0.0
+        return float(
+            self.comm.indirect_exchange_time(
+                self.bytes_per_step,
+                self.n_workers,
+                n_redis=int(cell.get("n_brokers", 1)),
+            )
+        )
+
+    def _pick_best(self) -> int:
+        p50s = [
+            float(np.percentile(self._steady(i), 50))
+            if self._steady(i)
+            else float("inf")
+            for i in range(len(self.cells))
+        ]
+        best = min(p50s)
+        tied = [
+            i
+            for i, p in enumerate(p50s)
+            if p <= best * (1.0 + self.config.rel_tolerance)
+        ]
+        return min(
+            tied, key=lambda i: (self._model_cost(self.cells[i]), p50s[i], i)
+        )
+
+    def next_action(self) -> Optional[tuple[str, dict]]:
+        """``None`` (keep measuring), ``("explore", cell)`` (re-shard to
+        the next cell), or ``("commit", cell)`` (final answer — re-shard
+        there iff it differs from the current topology).
+
+        An explore action does NOT advance the active cell: steps
+        published between the fence mint and the handover completion
+        still ran the old topology and must land in the old cell's
+        accounting — the runtime calls ``cell_started()`` once the
+        handover actually completed."""
+        if self.committed is not None or self._abandoned:
+            return None
+        need = self.config.warmup_steps + self.config.explore_steps
+        if len(self._durs[self.active]) < need:
+            return None
+        if self.active + 1 < len(self.cells):
+            return ("explore", dict(self.cells[self.active + 1]))
+        best = self._pick_best()
+        self.committed = best
+        self.active = best
+        return ("commit", dict(self.cells[best]))
+
+    def cell_started(self) -> None:
+        """The handover to the next explore cell completed: observations
+        from here on belong to it.  A no-op after commit (post-commit
+        steps run the committed cell, which is already active)."""
+        if self.committed is None and self.active + 1 < len(self.cells):
+            self.active += 1
+
+    def abandon(self) -> None:
+        self._abandoned = True
+
+    def summary(self) -> dict:
+        return {
+            "cells": [self.cell_stats(i) for i in range(len(self.cells))],
+            "chosen": None if self.committed is None else self.committed,
+            "chosen_cell": None
+            if self.committed is None
+            else dict(self.cells[self.committed]),
+            "committed": self.committed is not None,
+            "abandoned": self._abandoned,
         }
 
 

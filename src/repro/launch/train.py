@@ -457,6 +457,43 @@ def register_runtime(name: str):
 register_runtime("inproc")(train)
 
 
+def _parse_retunes(specs) -> tuple:
+    """--retune STEP:JSON (repeatable) -> scripted_retunes tuples."""
+    out = []
+    for s in specs or ():
+        step, sep, body = s.partition(":")
+        if not sep:
+            raise SystemExit(f"--retune {s!r}: expected STEP:JSON")
+        try:
+            out.append((int(step), json.loads(body)))
+        except (ValueError, json.JSONDecodeError) as e:
+            raise SystemExit(f"--retune {s!r}: expected STEP:JSON ({e})")
+    return tuple(out)
+
+
+def _topology_args(args) -> dict:
+    """Resolve the topology-tuning CLI flags into FaaSJobConfig fields.
+
+    Live re-sharding moves little data only when leaves are chunked, so
+    when tuning is on and --shard-split-bytes was not given we default to
+    the consistent-hash ring over 64 KiB chunks; the plain path keeps the
+    greedy whole-leaf partitioner (bit-identical to prior releases).
+    """
+    retunes = _parse_retunes(getattr(args, "retune", None))
+    topo = bool(getattr(args, "topology_tune", False))
+    split = int(getattr(args, "shard_split_bytes", 0) or 0)
+    partitioner = "greedy"
+    if (topo or retunes) and split == 0:
+        split = 65536
+        partitioner = "ring"
+    return {
+        "topology_tune": topo,
+        "scripted_retunes": retunes,
+        "partitioner": partitioner,
+        "shard_split_bytes": split,
+    }
+
+
 def _fleet_faas(args, run_dir: str) -> dict:
     """--jobs: N concurrent jobs on ONE shared pool (runtime.scheduler).
 
@@ -483,6 +520,12 @@ def _fleet_faas(args, run_dir: str) -> dict:
     pool_budget = args.pool_budget
     if pool_budget is None and isinstance(doc, dict):
         pool_budget = doc.get("pool_budget")
+    topo = _topology_args(args)
+    if topo["scripted_retunes"]:
+        raise SystemExit(
+            "--retune is not supported with --jobs: the fleet's broker "
+            "pool is shared, so no job may re-shard it live"
+        )
     fields = {f.name for f in dataclasses.fields(FaaSJobConfig)}
     jobs = {}
     for jid, spec in specs.items():
@@ -510,6 +553,10 @@ def _fleet_faas(args, run_dir: str) -> dict:
             consistency=getattr(args, "consistency", "isp"),
             slack=getattr(args, "slack", 3),
             autotune=args.autotune,
+            # observe-only under the fleet: keep the exact layout the user
+            # asked for (no ring/split default — the pool never re-shards)
+            topology_tune=topo["topology_tune"],
+            shard_split_bytes=int(getattr(args, "shard_split_bytes", 0) or 0),
             seed=args.seed,
         )
         base.update(spec)
@@ -537,6 +584,7 @@ def train_faas(args) -> dict:
     )
     if getattr(args, "jobs", None):
         return _fleet_faas(args, run_dir)
+    topo = _topology_args(args)
     cfg = FaaSJobConfig(
         run_dir=run_dir,
         workload=args.workload,
@@ -562,6 +610,10 @@ def train_faas(args) -> dict:
             sched_interval_s=args.sched_interval,
             delta_s=args.sched_interval / 2,
         ),
+        topology_tune=topo["topology_tune"],
+        scripted_retunes=topo["scripted_retunes"],
+        partitioner=topo["partitioner"],
+        shard_split_bytes=topo["shard_split_bytes"],
         seed=args.seed,
     )
     result = run_job(cfg)
@@ -641,6 +693,21 @@ def main() -> None:
                     "step t waits only for steps <= t - slack - 1)")
     ap.add_argument("--slack", type=int, default=3,
                     help="faas: SSP staleness bound (ignored under isp)")
+    ap.add_argument("--topology-tune", action="store_true",
+                    help="faas: co-tune {n_brokers, transport, wire_scheme,"
+                    " shard_split_bytes} online — explore-then-commit over "
+                    "neighbouring cells with WAL-coordinated live "
+                    "re-sharding at invocation boundaries (DESIGN.md §16); "
+                    "requires --consistency isp, no --jobs re-shard")
+    ap.add_argument("--retune", action="append", metavar="STEP:JSON",
+                    help="faas: force one live re-shard when the frontier "
+                    "reaches STEP, e.g. '4:{\"n_brokers\":2}' (repeatable; "
+                    "disables the online tuner — scripted topologies only)")
+    ap.add_argument("--shard-split-bytes", type=int, default=0,
+                    help="faas: split update-store leaves into chunks of at "
+                    "most this many bytes before sharding (0 = whole "
+                    "leaves; tuning defaults this to 65536 with the "
+                    "consistent-hash ring partitioner)")
     ap.add_argument("--run-dir", default=None,
                     help="faas: checkpoints + worker logs directory")
     ap.add_argument("--jobs", default=None,

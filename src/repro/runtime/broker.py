@@ -77,8 +77,13 @@ from repro.runtime import protocol
 # ops that mutate shard state — exactly what the WAL must persist.
 # publish/flush log from inside their handlers (only non-dup records, with
 # the store lock held, BEFORE the update becomes pullable); the rest log
-# generically from handle().
-_MUTATING = ("hello", "report", "bye", "evict_apply")
+# generically from handle().  The live-reshard ops (DESIGN.md §16) are
+# parameter-complete in their headers, so generic log-then-apply replays
+# them exactly; topo_begin mints its fence and logs the RESULT instead
+# (mint-at-replay could diverge, like evict), and migrate_read is
+# read-only.
+_MUTATING = ("hello", "report", "bye", "evict_apply",
+             "migrate_in", "migrate_drop", "topo_commit")
 
 _WAL_HDR = struct.Struct("<II")  # header_len, payload_len (framing's shape)
 
@@ -179,6 +184,13 @@ class BrokerCore:
         self.max_published = 0
         self.dup_mismatches = 0
         self.update_bytes = 0  # codec-accounted published update bytes
+        # live-reshard state (DESIGN.md §16): a pending epoch fence (every
+        # worker exits at loop-top t >= fence), the committed topology
+        # generation, and the set of (gen, src) migrations already merged
+        # (idempotency under supervisor retries / WAL replay)
+        self.topo_fence: Optional[int] = None
+        self.topo_gen = int(job.get("topo_gen", 0))
+        self.migrations_applied: set[tuple[int, int]] = set()
         self._poll_cursor = 1  # next telemetry step the supervisor hasn't seen
         self.stats: dict[str, dict[str, int]] = {}
         self.shutting_down = False
@@ -306,7 +318,17 @@ class BrokerCore:
         return fn(header, payload)
 
     def _membership(self) -> dict:
-        return {"evictions": {str(k): v for k, v in self.evictions.items()}}
+        out = {"evictions": {str(k): v for k, v in self.evictions.items()}}
+        if self.topo_fence is not None:
+            # piggybacked like evictions: every pull/publish response
+            # carries the fence once minted, and the pull that releases a
+            # worker into step fence-1's successor is necessarily sent
+            # after the mint (the mint guarantees barrier(fence-1) was
+            # incomplete), so no worker can publish past the fence.  The
+            # key is absent when unset — default-path response bytes are
+            # untouched.
+            out["topo_fence"] = self.topo_fence
+        return out
 
     def _op_hello(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
         with self._lock:
@@ -534,6 +556,179 @@ class BrokerCore:
             self.evictions[worker] = step
             self._cond.notify_all()
         return {"ok": True, "evict_step": step}, b""
+
+    # -- live re-sharding (DESIGN.md §16) -------------------------------------
+
+    @staticmethod
+    def _entry_slices(meta: list, blob: bytes):
+        """Yield ``(m, byte_segment)`` per leaf meta of one stored entry —
+        the per-entry offset walk migrate read/in/drop all share."""
+        off = 0
+        for m in meta:
+            nb = int(m["nbytes"])
+            yield m, blob[off:off + nb]
+            off += nb
+
+    def _op_topo_begin(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
+        """Mint the epoch fence for a topology handover (coordinator only;
+        idempotent).  The fence f satisfies: (a) no worker has published
+        step >= f-1, so barrier(f-1) is incomplete at mint time and every
+        pull response releasing a worker into step f carries the fence via
+        _membership(); (b) f exceeds every granted eviction step, so an
+        eviction flush always lands in a barrier <= f-1.  Logged as its
+        RESULT (like evict): re-minting at replay could diverge."""
+        with self._cond:
+            if "fence" in h:  # WAL replay: install the minted fence
+                self.topo_fence = int(h["fence"])
+                self._cond.notify_all()
+                return {"ok": True, "granted": True,
+                        "fence": self.topo_fence}, b""
+            if not self.is_coordinator:
+                return {"ok": False,
+                        "error": "topo_begin: not the coordinator"}, b""
+            if self.topo_fence is not None:
+                return {"ok": True, "granted": True,
+                        "fence": self.topo_fence}, b""
+            fence = max(
+                self.max_published + 2,
+                max(self.evictions.values(), default=0) + 1,
+            )
+            if fence > self.total_steps:
+                # the job finishes before the fence could take effect —
+                # same refusal as a past-end eviction
+                return {"ok": True, "granted": False,
+                        "reason": "past-end"}, b""
+            self.topo_fence = fence
+            self._log({"t": "topo_begin", "fence": fence})
+            self._cond.notify_all()
+        return {"ok": True, "granted": True, "fence": fence}, b""
+
+    def _op_topo_commit(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
+        """Install the new topology after migration: update the job dict
+        (respawned workers hello into the new assignment), bump the
+        generation, clear the fence.  Parameter-complete header, so the
+        generic WAL log-then-apply replays it exactly."""
+        with self._cond:
+            for k in ("n_brokers", "transport", "wire_scheme",
+                      "shard_split_bytes", "partitioner"):
+                if k in h:
+                    self.job[k] = h[k]
+            self.topo_gen = int(h["gen"])
+            self.job["topo_gen"] = self.topo_gen
+            self.n_shards = int(h["n_shards"])
+            self.topo_fence = None
+            self._cond.notify_all()
+        return {"ok": True, "gen": self.topo_gen}, b""
+
+    def _op_migrate_read(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
+        """Read every stored slice of the moved identities ``[(k, o), ...]``
+        out of this shard (updates AND eviction flushes), packed as
+        (kind, step, worker, meta) parts.  Read-only — not logged; the
+        durable hand-off is the destination's migrate_in record."""
+        moved = {(str(k), int(o)) for k, o in h["moved"]}
+        with self._lock:
+            parts = []
+            for kind, store in (("update", self.updates),
+                                ("flush", self.flushes)):
+                for step in sorted(store):
+                    for w in sorted(store[step]):
+                        meta, blob, _ = store[step][w]
+                        sel, segs = [], []
+                        for m, seg in self._entry_slices(meta, blob):
+                            if (m["k"], int(m.get("o", 0))) in moved:
+                                sel.append(m)
+                                segs.append(seg)
+                        if sel:
+                            parts.append((
+                                {"kind": kind, "step": step, "worker": w,
+                                 "meta": sel},
+                                b"".join(segs),
+                            ))
+            descs, payload = protocol.pack_parts(parts)
+            resp = {
+                "ok": True,
+                "parts": descs,
+                "clocks": {str(k): v for k, v in self.clocks.items()},
+                "max_published": self.max_published,
+            }
+        return resp, payload
+
+    def _op_migrate_in(self, h: dict, payload: bytes) -> tuple[dict, bytes]:
+        """Merge migrated slices into this shard's store.  Idempotent per
+        (gen, src) — a supervisor retry after a SIGKILL mid-apply replays
+        over the WAL-rebuilt ``migrations_applied`` marker.  Merged metas
+        are kept sorted by (k, o); safe because migrated identities were
+        owned by the source under the OLD assignment and are disjoint
+        from anything this shard already stored, and post-fence pulls
+        never read pre-fence steps (only dump reassembly does, and it is
+        order-insensitive per (worker, step))."""
+        from repro.wire.framing import unpack_parts
+
+        key = (int(h["gen"]), int(h["src"]))
+        with self._cond:
+            if key in self.migrations_applied:
+                return {"ok": True, "already": True}, b""
+            for desc, part in unpack_parts(h["parts"], payload):
+                kind = desc["kind"]
+                store = self.updates if kind == "update" else self.flushes
+                step, w = int(desc["step"]), int(desc["worker"])
+                slot = store.setdefault(step, {})
+                pairs = list(self._entry_slices(desc["meta"], bytes(part)))
+                if w in slot:
+                    old_meta, old_blob, _ = slot[w]
+                    pairs.extend(self._entry_slices(old_meta, old_blob))
+                pairs.sort(
+                    key=lambda p: (p[0]["k"], int(p[0].get("o", 0)))
+                )
+                metas = [m for m, _ in pairs]
+                blob = b"".join(seg for _, seg in pairs)
+                digest = hashlib.sha1(
+                    json.dumps(metas, sort_keys=True).encode() + blob
+                ).hexdigest()
+                slot[w] = (metas, blob, digest)
+                if kind == "update":
+                    self.max_published = max(self.max_published, step)
+                    self.clocks[w] = max(self.clocks.get(w, 0), step)
+                    self.update_bytes += protocol.wire_bytes(desc["meta"])
+            self.migrations_applied.add(key)
+            self._cond.notify_all()
+        return {"ok": True, "already": False}, b""
+
+    def _op_migrate_drop(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
+        """Drop the moved identities from this shard after every
+        destination acked its migrate_in.  Naturally idempotent (dropping
+        absent identities is a no-op); header-only, generically logged."""
+        moved = {(str(k), int(o)) for k, o in h["moved"]}
+        with self._cond:
+            for kind, store in (("update", self.updates),
+                                ("flush", self.flushes)):
+                for step in list(store):
+                    for w in list(store[step]):
+                        meta, blob, _ = store[step][w]
+                        keep, segs, dropped = [], [], []
+                        for m, seg in self._entry_slices(meta, blob):
+                            if (m["k"], int(m.get("o", 0))) in moved:
+                                dropped.append(m)
+                            else:
+                                keep.append(m)
+                                segs.append(seg)
+                        if not dropped:
+                            continue
+                        if kind == "update":
+                            self.update_bytes -= protocol.wire_bytes(dropped)
+                        if keep:
+                            kept_blob = b"".join(segs)
+                            digest = hashlib.sha1(
+                                json.dumps(keep, sort_keys=True).encode()
+                                + kept_blob
+                            ).hexdigest()
+                            store[step][w] = (keep, kept_blob, digest)
+                        else:
+                            del store[step][w]
+                            if not store[step]:
+                                del store[step]
+            self._cond.notify_all()
+        return {"ok": True}, b""
 
     def _op_poll(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
         # with a client-supplied cursor ('since') the poll is IDEMPOTENT —

@@ -54,8 +54,13 @@ import sys
 import time
 from typing import Any, Optional
 
-from repro.core.autotuner import AutoTunerConfig, ScaleInAutoTuner
-from repro.core.billing import faas_cost, multi_job_rollup
+from repro.core.autotuner import (
+    AutoTunerConfig,
+    ScaleInAutoTuner,
+    TopologyTuner,
+    TopologyTunerConfig,
+)
+from repro.core.billing import CommModel, faas_cost, multi_job_rollup
 from repro.runtime import protocol
 from repro.runtime import workload as workload_lib
 from repro.runtime.sharding import job_namespace
@@ -126,6 +131,11 @@ class _JobState:
     killed_once: bool = False
     broker_killed_once: bool = False
     tuner: Optional[ScaleInAutoTuner] = None
+    # observe-only topology tuner (cfg.topology_tune under a fleet): the
+    # broker pool is SHARED, so no job may re-shard it live — the tuner
+    # measures the running cell and the result carries a model-ranked
+    # recommendation instead of a handover (DESIGN.md §16)
+    topo_tuner: Optional[TopologyTuner] = None
     # (worker -> 'done' | 'evicted'): this job's terminal workers
     terminal: dict = dataclasses.field(default_factory=dict)
 
@@ -174,6 +184,13 @@ class FleetScheduler:
                     f"job {jid}: prewarm is not supported under the fleet "
                     "scheduler (use the solo supervisor)"
                 )
+            if c.scripted_retunes:
+                # the broker pool is shared across jobs: one job forcing a
+                # re-shard would fence every other job's workers mid-step
+                raise ValueError(
+                    f"job {jid}: scripted_retunes is not supported under "
+                    "the fleet scheduler (use the solo supervisor)"
+                )
         self.n_brokers = cfgs[0].n_brokers
         self.transport = cfgs[0].transport
         # admission: pin each job's run_dir inside the fleet's
@@ -189,6 +206,19 @@ class FleetScheduler:
             if cfg.autotune:
                 st.tuner = ScaleInAutoTuner(
                     cfg.tuner or AutoTunerConfig(), cfg.n_workers
+                )
+            if cfg.topology_tune:
+                # observe-only: single cell = the fleet's shared topology
+                st.topo_tuner = TopologyTuner(
+                    [{
+                        "n_brokers": self.n_brokers,
+                        "transport": self.transport,
+                        "wire_scheme": cfg.wire_scheme,
+                        "shard_split_bytes": cfg.shard_split_bytes,
+                    }],
+                    TopologyTunerConfig(),
+                    comm=CommModel(),
+                    n_workers=cfg.n_workers,
                 )
             self.jobs[jid] = st
         n_slots = max(c.n_workers for c in cfgs)
@@ -512,6 +542,8 @@ class FleetScheduler:
             st.frontier = max(st.frontier, row["step"])
             if st.tuner is not None:
                 st.tuner.observe(row["step"], row["loss"], row["dur_s"])
+            if st.topo_tuner is not None:
+                st.topo_tuner.observe(row["dur_s"], row.get("phase"))
         st.evictions = {int(k): v for k, v in resp["evictions"].items()}
         st.statuses = resp["statuses"]
 
@@ -753,6 +785,50 @@ class FleetScheduler:
             "broker_update_bytes_per_shard": [
                 int(r.get("update_bytes", 0)) for r in stats_rows
             ],
+            "topology_recommendation": self._topo_recommendation(jid),
+        }
+
+    def _topo_recommendation(self, jid: str) -> Optional[dict]:
+        """Observe-only topology advice for one fleet job: the shared pool
+        is never re-sharded live, so we measure the running cell and rank
+        the neighbouring cells with the cost model instead."""
+        st = self.jobs[jid]
+        if st.topo_tuner is None:
+            return None
+        hist = st.history
+        steps = max(len(hist), 1)
+        bytes_per_step = (
+            sum(float(r.get("wire_bytes") or 0.0) for r in hist) / steps
+        )
+        p = st.cfg.n_workers
+        current = dict(st.topo_tuner.cells[0])
+        candidates = [current]
+        flip_b = dict(current)
+        flip_b["n_brokers"] = 2 if int(current["n_brokers"]) == 1 else 1
+        candidates.append(flip_b)
+        flip_t = dict(current)
+        flip_t["transport"] = (
+            "shm" if current["transport"] == "tcp" else "tcp"
+        )
+        candidates.append(flip_t)
+        comm = CommModel()
+        ranked = sorted(
+            (
+                {
+                    "cell": c,
+                    "model_exchange_s": comm.indirect_exchange_time(
+                        bytes_per_step, p, n_redis=int(c["n_brokers"])
+                    ),
+                }
+                for c in candidates
+            ),
+            key=lambda r: r["model_exchange_s"],
+        )
+        return {
+            "mode": "observe-only",
+            "note": "fleet pool is shared; no live re-shard per job",
+            "measured": st.topo_tuner.cell_stats(0),
+            "model_ranked_cells": ranked,
         }
 
     def _result(self, wall: float, shard_stats: dict[str, list]) -> dict:

@@ -46,14 +46,25 @@ and the warning tells you the sweep is degenerate).
 
 from __future__ import annotations
 
+import bisect
+import hashlib
 import warnings
-from typing import Any, Iterator, Optional, Sequence
+from typing import Any, Callable, Iterator, Optional, Sequence
 
 import numpy as np
 
 from repro.wire import codec as wire_codec
 
 PyTree = Any
+
+#: Floor on the chunk byte size ``chunk_elems`` will honour.  Below this a
+#: split threshold stops buying balance and starts exploding a large leaf
+#: into thousands of subkeys, each paying per-chunk meta overhead — the
+#: old floor was 8 *elements* (32 bytes of fp32), which silently turned a
+#: 1 MB leaf into ~32k subkeys.
+_MIN_CHUNK_BYTES = 1024
+
+_warned_small_split = False
 
 
 def assign_shards(
@@ -85,13 +96,73 @@ def assign_shards(
     return out
 
 
+def _ring_point(label: str) -> int:
+    """Position of a label on the hash ring: 64-bit blake2b.  Never
+    Python ``hash`` — that is salted per process, and every party (each
+    worker, the supervisor, tests) must compute the identical ring."""
+    return int.from_bytes(
+        hashlib.blake2b(label.encode(), digest_size=8).digest(), "big"
+    )
+
+
+def ring_assign(
+    keys: Sequence[str], n_shards: int, vnodes: int = 64
+) -> dict[str, int]:
+    """Consistent-hash assignment of keys to shards.
+
+    Each shard owns ``vnodes`` points on a 64-bit ring, labelled
+    ``"shard<s>:<v>"`` — labels depend only on the shard id, never on
+    ``n_shards``, which is what buys the consistency property: going
+    N→N+1 adds shard N's points and steals only the keys that now fall
+    in its arcs (expected 1/(N+1) of them), moving them *to* the new
+    shard; going N→N-1 removes shard N-1's points and releases only its
+    keys *to* the survivors.  Every other key keeps its owner, so a live
+    re-shard migrates a minimal, provable fraction of the store.  A pure
+    function of (keys, n_shards) — key order, sizes, and process
+    identity are irrelevant.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    keys = list(keys)
+    if len(set(keys)) != len(keys):
+        raise ValueError("leaf keys must be unique")
+    points: list[tuple[int, int]] = sorted(
+        (_ring_point(f"shard{s}:{v}"), s)
+        for s in range(n_shards)
+        for v in range(vnodes)
+    )
+    ring = [p for p, _ in points]
+    out: dict[str, int] = {}
+    for k in keys:
+        i = bisect.bisect_right(ring, _ring_point(k)) % len(points)
+        out[k] = points[i][1]
+    return out
+
+
 def chunk_elems(itemsize: int, split_bytes: int) -> int:
     """Elements per chunk for a split leaf: ``split_bytes`` worth, rounded
     down to a multiple of 8 so every chunk boundary falls on a bitmap-mask
     byte boundary — chunked bitmap bytes sum EXACTLY to the unsplit
     leaf's (``ceil(n/8)`` per chunk loses nothing when n % 8 == 0).
     A pure function of (itemsize, threshold): per-leaf or per-topology
-    inputs here would break the cross-``n_shards`` byte invariance."""
+    inputs here would break the cross-``n_shards`` byte invariance.
+
+    ``split_bytes`` is clamped up to ``_MIN_CHUNK_BYTES`` (one-time
+    warning): below that the chunk count grows without bound while each
+    chunk's meta overhead stays fixed, so a tiny threshold silently
+    explodes a large leaf into thousands of subkeys."""
+    global _warned_small_split
+    if 0 < split_bytes < _MIN_CHUNK_BYTES:
+        if not _warned_small_split:
+            _warned_small_split = True
+            warnings.warn(
+                f"shard_split_bytes={split_bytes} is below the "
+                f"{_MIN_CHUNK_BYTES}-byte chunk floor; clamping — a "
+                "smaller threshold only multiplies per-chunk meta "
+                "overhead without improving balance",
+                stacklevel=2,
+            )
+        split_bytes = _MIN_CHUNK_BYTES
     return max((split_bytes // max(itemsize, 1)) // 8 * 8, 8)
 
 
@@ -132,7 +203,11 @@ def job_namespace(job_id: Optional[str]) -> str:
 
 
 def tree_assignment(
-    tree: PyTree, n_shards: int, split_bytes: int = 0, namespace: str = ""
+    tree: PyTree,
+    n_shards: int,
+    split_bytes: int = 0,
+    namespace: str = "",
+    partitioner: str = "greedy",
 ) -> dict[str, int]:
     """The canonical assignment for a parameter template: keys are the
     checkpoint-store path keys (``wire.codec.tree_keys``) — or their
@@ -146,6 +221,13 @@ def tree_assignment(
     unprefixed one: a job sharded inside a fleet owns exactly the
     slices-per-shard it owns solo (property-tested in
     ``tests/test_runtime_multijob.py``).
+
+    ``partitioner`` selects the placement policy: ``"greedy"`` (the
+    default — least-loaded, best static balance, but a shard-count
+    change can reshuffle everything) or ``"ring"`` (consistent hashing,
+    minimal key movement across shard-count changes — the live-reshard
+    partitioner).  Greedy stays the default so every existing run is
+    bit-identical.
 
     Warns when any shard ends up owning ZERO bytes: every update round
     still pays that shard a round trip for nothing, and a sweep over
@@ -162,7 +244,14 @@ def tree_assignment(
         for subkey, _off, n in iter_subleaves(key, leaf, split_bytes):
             subkeys.append(namespace + subkey)
             sizes.append(n * itemsize)
-    assignment = assign_shards(subkeys, sizes, n_shards)
+    if partitioner == "greedy":
+        assignment = assign_shards(subkeys, sizes, n_shards)
+    elif partitioner == "ring":
+        assignment = ring_assign(subkeys, n_shards)
+    else:
+        raise ValueError(
+            f"unknown partitioner {partitioner!r} (greedy|ring)"
+        )
     load = [0] * n_shards
     for subkey, size in zip(subkeys, sizes):
         load[assignment[subkey]] += size
@@ -176,6 +265,57 @@ def tree_assignment(
             stacklevel=2,
         )
     return assignment
+
+
+def tree_subleaves(
+    tree: PyTree, split_bytes: int, namespace: str = ""
+) -> list[tuple[str, str, int, int]]:
+    """Flat list of ``(leaf_key, namespaced_subkey, offset_elems,
+    n_elems)`` for every chunk of every leaf — the key universe a live
+    handover enumerates when computing which stored identities move
+    between shards (``leaf_key`` here is the namespaced key the metas
+    carry in ``m['k']``)."""
+    import jax
+
+    keys = wire_codec.tree_keys(tree)
+    leaves = jax.tree_util.tree_leaves(tree)
+    out: list[tuple[str, str, int, int]] = []
+    for key, leaf in zip(keys, leaves):
+        for subkey, off, n in iter_subleaves(key, leaf, split_bytes):
+            out.append((namespace + key, namespace + subkey, off, n))
+    return out
+
+
+def offset_owner(
+    tree: PyTree,
+    split_bytes: int,
+    assignment: dict[str, int],
+    namespace: str = "",
+) -> Callable[[str, int], int]:
+    """Owner lookup ``(namespaced_leaf_key, offset_elems) -> shard`` under
+    ``assignment`` (a ``tree_assignment`` for the SAME split_bytes).
+
+    This is how a handover maps stored entries — chunked at the *old*
+    ``split_bytes`` — onto the *new* topology when the thresholds differ:
+    each old chunk goes to whichever new shard owns the new chunk that
+    contains the old chunk's start offset.  Totality (each element
+    stored exactly once across shards) is preserved, which is the only
+    invariant pre-fence data needs — post-fence pulls never read
+    pre-fence steps, and dump reassembly is order-insensitive per
+    (worker, step)."""
+    starts: dict[str, tuple[list[int], list[int]]] = {}
+    for leaf_key, subkey, off, _n in tree_subleaves(
+        tree, split_bytes, namespace
+    ):
+        offs, shards = starts.setdefault(leaf_key, ([], []))
+        offs.append(off)
+        shards.append(assignment[subkey])
+
+    def owner(leaf_key: str, off: int) -> int:
+        offs, shards = starts[leaf_key]
+        return shards[bisect.bisect_right(offs, int(off)) - 1]
+
+    return owner
 
 
 def encode_tree_sharded(

@@ -46,8 +46,15 @@ import sys
 import time
 from typing import Any, Optional
 
-from repro.core.autotuner import AutoTunerConfig, ScaleInAutoTuner
-from repro.core.billing import FaaSBill, faas_cost
+import warnings
+
+from repro.core.autotuner import (
+    AutoTunerConfig,
+    ScaleInAutoTuner,
+    TopologyTuner,
+    TopologyTunerConfig,
+)
+from repro.core.billing import CommModel, FaaSBill, faas_cost
 from repro.runtime import protocol
 from repro.runtime import workload as workload_lib
 from repro.wire import codec as wire_codec
@@ -115,10 +122,27 @@ class FaaSJobConfig:
     prewarm: bool = False
     autotune: bool = False
     tuner: Optional[AutoTunerConfig] = None
+    # live topology autotuning (DESIGN.md §16): explore-then-commit over
+    # {n_brokers, transport, wire_scheme, shard_split_bytes} cells with a
+    # WAL-coordinated re-shard between cells.  Requires consistency='isp'
+    # (SSP pulls read pre-fence steps) and no prewarm (a gated successor
+    # spans the fence).  'partitioner' picks the leaf-key placement:
+    # 'greedy' (default, bit-identical to every existing run) or 'ring'
+    # (consistent hashing — minimal key movement across re-shards)
+    topology_tune: bool = False
+    partitioner: str = "greedy"
+    topo_explore_steps: int = 6
     # deterministic test hooks
     scripted_evict_steps: tuple[int, ...] = ()
+    # scripted topology changes: ((step, {knob: value, ...}), ...) — at
+    # frontier >= step, re-shard to the given (partial) topology; the
+    # deterministic twin of topology_tune the tests/CI drive
+    scripted_retunes: tuple = ()
     kill_worker_at_step: Optional[tuple[int, int]] = None  # (worker, step)
     kill_broker_at_step: Optional[tuple[int, int]] = None  # (shard, step)
+    # SIGKILL shard k right after its first migrate_read/migrate_in of a
+    # handover — the replay-safety cell of the §16 failure matrix
+    kill_broker_during_handover: Optional[int] = None
     retain_updates: bool = False
     # housekeeping
     poll_interval_s: float = 0.05
@@ -149,6 +173,8 @@ class FaaSJobConfig:
             "n_brokers": self.n_brokers,
             "transport": self.transport,
             "shard_split_bytes": self.shard_split_bytes,
+            "partitioner": self.partitioner,
+            "topo_gen": 0,
             "n_batches": n_batches,
             "run_dir": self.run_dir,
             "pull_deadline_s": self.pull_deadline_s,
@@ -172,12 +198,18 @@ class _Slot:
     # invocation — the shm analogue of 'a new connection per invocation')
     shm_segs: list = dataclasses.field(default_factory=list)
     # pre-warmed next invocation (cfg.prewarm): a live process holding at
-    # its gate, plus its own segment family and spawn timestamps
+    # its gate, plus its own segment family and spawn timestamp.  All
+    # prewarm timing is MONOTONIC — pre_ready_mono is the supervisor's
+    # first sighting of the '.ready' marker (0.0 until seen), so the
+    # overlap computation never mixes clock domains (a wall-clock step
+    # used to be able to report negative or inflated overlaps)
     pre_proc: Optional[subprocess.Popen] = None
     pre_gate: Optional[str] = None
     pre_spawned_mono: float = 0.0
-    pre_spawned_wall: float = 0.0
+    pre_ready_mono: float = 0.0
     pre_shm_segs: list = dataclasses.field(default_factory=list)
+    # parked at a topology fence: exited cleanly, respawns after handover
+    held: bool = False
 
     @property
     def alive(self) -> bool:
@@ -216,6 +248,32 @@ class Supervisor:
                 f"wire_impl must be one of {wire_codec.IMPLS}, got "
                 f"{cfg.wire_impl!r}"
             )
+        if cfg.partitioner not in ("greedy", "ring"):
+            raise ValueError(
+                f"partitioner must be 'greedy' or 'ring', got "
+                f"{cfg.partitioner!r}"
+            )
+        retunes = []
+        for step, changes in cfg.scripted_retunes or ():
+            allowed = {"n_brokers", "transport", "wire_scheme",
+                       "shard_split_bytes", "partitioner"}
+            bad = set(changes) - allowed
+            if bad:
+                raise ValueError(f"scripted_retunes: unknown knobs {bad}")
+            retunes.append((int(step), dict(changes)))
+        if cfg.topology_tune or retunes:
+            if cfg.consistency != "isp":
+                # an SSP pull at step t is served step t - slack - 1 —
+                # post-fence pulls would read pre-fence steps against a
+                # re-sharded store; the fence argument is ISP-only
+                raise ValueError(
+                    "live re-sharding requires consistency='isp'"
+                )
+            if cfg.prewarm:
+                raise ValueError(
+                    "topology tuning is incompatible with prewarm: a "
+                    "gated successor would span the epoch fence"
+                )
         self.cfg = cfg
         self.wl = workload_lib.build(cfg.workload, cfg.workload_cfg)
         self.shards = [_BrokerShard(shard=s) for s in range(cfg.n_brokers)]
@@ -247,6 +305,38 @@ class Supervisor:
         if cfg.autotune:
             self.tuner = ScaleInAutoTuner(
                 cfg.tuner or AutoTunerConfig(), cfg.n_workers
+            )
+        # live topology state (DESIGN.md §16): the CURRENT knob values —
+        # cfg keeps the job's starting point, self.topology what is
+        # actually running now
+        self.topology = {
+            "n_brokers": cfg.n_brokers,
+            "transport": cfg.transport,
+            "wire_scheme": cfg.wire_scheme,
+            "shard_split_bytes": cfg.shard_split_bytes,
+            "partitioner": cfg.partitioner,
+        }
+        self.topo_gen = 0
+        self._max_brokers = cfg.n_brokers  # peak shard count → n_redis bill
+        self._handover: Optional[dict] = None  # {"fence", "changes"}
+        self._retunes_pending = retunes
+        self._topo_kill_armed = cfg.kill_broker_during_handover is not None
+        self.retired_shard_stats: list[dict] = []
+        self.topology_events: list[dict] = []
+        self._topo_cell_start = 1  # first step measured for the active cell
+        self.topo_tuner: Optional[TopologyTuner] = None
+        if cfg.topology_tune and not retunes:
+            cur = dict(self.topology)
+            flip_brokers = dict(cur,
+                                n_brokers=2 if cur["n_brokers"] == 1 else 1)
+            flip_transport = dict(
+                cur, transport="shm" if cur["transport"] == "tcp" else "tcp"
+            )
+            self.topo_tuner = TopologyTuner(
+                [cur, flip_brokers, flip_transport],
+                TopologyTunerConfig(explore_steps=cfg.topo_explore_steps),
+                comm=CommModel(),
+                n_workers=cfg.n_workers,
             )
 
     # -- process management ---------------------------------------------------
@@ -326,7 +416,7 @@ class Supervisor:
                 "repro.runtime.broker",
                 "--config", os.path.join(bdir, "job.json"),
                 "--shard-id", str(bs.shard),
-                "--n-shards", str(self.cfg.n_brokers),
+                "--n-shards", str(len(self.shards)),
                 "--port", str(bs.addr[1] if bs.addr else 0),
                 "--wal", wal_path,
                 "--port-file", port_file,
@@ -385,7 +475,7 @@ class Supervisor:
                     self._conns[bs.shard].close()
                     self._conns[bs.shard] = None
                 self._spawn_broker(bs)
-                if self.cfg.transport == "shm":
+                if self.topology["transport"] == "shm":
                     # the shard's shm serving threads died with it: hand
                     # it every live worker's segment again (each re-serve
                     # resets that ring pair and bumps its generation, so
@@ -422,7 +512,7 @@ class Supervisor:
 
         self._teardown_worker_shm(slot)
         base = f"{self._shm_token}w{slot.worker}i{slot.invocations}"
-        names = [f"{base}s{s}" for s in range(self.cfg.n_brokers)]
+        names = [f"{base}s{s}" for s in range(len(self.shards))]
         for name in names:
             self._shm_segments[name] = shm.Segment.create(
                 name, ring_bytes=self.cfg.shm_ring_bytes
@@ -480,7 +570,7 @@ class Supervisor:
             "--worker-id",
             str(slot.worker),
         ]
-        if self.cfg.transport == "shm":
+        if self.topology["transport"] == "shm":
             cmd += [
                 "--transport", "shm",
                 "--shm-seg", self._setup_worker_shm(slot),
@@ -511,7 +601,7 @@ class Supervisor:
         from repro.wire import shm
 
         base = f"{self._shm_token}w{slot.worker}i{slot.invocations}"
-        names = [f"{base}s{s}" for s in range(self.cfg.n_brokers)]
+        names = [f"{base}s{s}" for s in range(len(self.shards))]
         for name in names:
             self._shm_segments[name] = shm.Segment.create(
                 name, ring_bytes=self.cfg.shm_ring_bytes
@@ -555,7 +645,7 @@ class Supervisor:
             "--worker-id", str(slot.worker),
             "--prewarm-gate", gate,
         ]
-        if self.cfg.transport == "shm":
+        if self.topology["transport"] == "shm":
             cmd += ["--transport", "shm",
                     "--shm-seg", self._setup_prewarm_shm(slot)]
         slot.pre_proc = subprocess.Popen(
@@ -567,22 +657,45 @@ class Supervisor:
         log.close()
         slot.pre_gate = gate
         slot.pre_spawned_mono = time.monotonic()
-        slot.pre_spawned_wall = time.time()
+        slot.pre_ready_mono = 0.0
+
+    def _scan_prewarm_ready(self) -> None:
+        """Stamp the first MONOTONIC sighting of each pre-warming slot's
+        '.ready' marker — the supervisor's own clock, so the overlap
+        computation never reads a file mtime from the wall-clock domain
+        (which can step and report negative/inflated overlaps)."""
+        for slot in self.slots:
+            if (
+                slot.pre_proc is not None
+                and slot.pre_gate is not None
+                and slot.pre_ready_mono == 0.0
+                and os.path.exists(slot.pre_gate + ".ready")
+            ):
+                slot.pre_ready_mono = time.monotonic()
 
     def _promote_prewarmed(self, slot: _Slot) -> None:
         """The current invocation ended and a pre-warmed successor is
         holding at its gate: open the gate and make it THE invocation.
         Records the measured init overlap — the cold-start seconds the
         barrier never saw."""
-        ready = slot.pre_gate + ".ready"
-        now_wall = time.time()
-        warm = os.path.exists(ready)
+        self._scan_prewarm_ready()
+        now_mono = time.monotonic()
+        warm = slot.pre_ready_mono > 0.0
         # overlapped cold-start seconds: init time the successor spent
-        # under the previous invocation — up to the ready marker when it
+        # under the previous invocation — up to the ready sighting when it
         # finished warming in time, else everything it got so far (it is
-        # still warming, but those seconds were still hidden)
-        end = min(os.path.getmtime(ready), now_wall) if warm else now_wall
-        overlap = max(0.0, end - slot.pre_spawned_wall)
+        # still warming, but those seconds were still hidden).  Pure
+        # monotonic delta; a negative value can only mean a bookkeeping
+        # bug, so clamp loudly rather than record garbage.
+        end = slot.pre_ready_mono if warm else now_mono
+        overlap = end - slot.pre_spawned_mono
+        if overlap < 0.0:  # pragma: no cover - defensive
+            warnings.warn(
+                f"negative prewarm overlap ({overlap:.3f}s) for worker "
+                f"{slot.worker}; clamping to 0",
+                stacklevel=2,
+            )
+            overlap = 0.0
         self.cold_start_overlaps.append(
             {
                 "worker": slot.worker,
@@ -630,7 +743,7 @@ class Supervisor:
         """Fire a gated successor for every slot within one step of its
         invocation boundary (predicted from the invocation's start step
         and budget) that doesn't have one yet."""
-        if not self.cfg.prewarm:
+        if not self.cfg.prewarm or self._handover is not None:
             return
         if self.cfg.invocation_steps > self.cfg.total_steps:
             return  # single-invocation job: no boundary to warm for
@@ -663,6 +776,14 @@ class Supervisor:
             slot.terminal = "evicted"
             self._teardown_worker_shm(slot)
             self._abort_prewarmed(slot)
+        elif status == "bye:topo-fence":
+            # parked at the topology epoch fence (DESIGN.md §16): its
+            # fence-1 checkpoint is durable; the slot respawns only after
+            # the handover migrated the store (its segments die now — a
+            # transport switch may mean the next invocation isn't shm)
+            self._teardown_worker_shm(slot)
+            self._abort_prewarmed(slot)
+            slot.held = True
         elif status == "bye:invocation-end":
             # next invocation of the same function — pre-warmed and held
             # at its gate when cfg.prewarm got it ready in time
@@ -727,6 +848,13 @@ class Supervisor:
             self._frontier = max(self._frontier, row["step"])
             if self.tuner is not None:
                 self.tuner.observe(row["step"], row["loss"], row["dur_s"])
+            if (
+                self.topo_tuner is not None
+                and row["step"] >= self._topo_cell_start
+            ):
+                # steps before the cell boundary belong to the previous
+                # topology — feeding them would pollute the new cell's p50
+                self.topo_tuner.observe(row["dur_s"], row.get("phase"))
         self.evictions = {int(k): v for k, v in resp["evictions"].items()}
         return resp
 
@@ -747,7 +875,7 @@ class Supervisor:
         # shard: until the sync lands a stale shard only *blocks* its
         # step-e barrier (it still expects the leaver's publish), so the
         # window is safe — see DESIGN.md §11 failure matrix
-        for s in range(1, self.cfg.n_brokers):
+        for s in range(1, len(self.shards)):
             self._rpc(
                 {"t": "evict_apply", "worker": victim,
                  "step": resp["evict_step"]},
@@ -766,6 +894,194 @@ class Supervisor:
             }
         )
         return True
+
+    # -- live topology handover (DESIGN.md §16) --------------------------------
+
+    def _initiate_retune(self, changes: dict) -> bool:
+        """Ask the coordinator for an epoch fence toward ``changes``.
+        Returns True when the request is settled (handover pending, or a
+        no-op because nothing actually changes), False when the
+        coordinator refused (past-end) — a permanent refusal."""
+        diff = {
+            k: v for k, v in changes.items() if self.topology.get(k) != v
+        }
+        if not diff:
+            self.topology_events.append(
+                {"gen": self.topo_gen, "fence": None, "changes": {},
+                 "noop": True, "at_frontier": self._frontier}
+            )
+            return True
+        resp, _ = self._rpc({"t": "topo_begin"})
+        if not resp.get("granted"):
+            self.topology_events.append(
+                {"gen": self.topo_gen, "fence": None, "changes": diff,
+                 "refused": resp.get("reason", "?"),
+                 "at_frontier": self._frontier}
+            )
+            return False
+        self._handover = {"fence": int(resp["fence"]), "changes": diff}
+        return True
+
+    def _complete_handover(self) -> None:
+        """Every live worker is parked at the fence with a durable
+        fence-1 checkpoint: migrate the moved identities, commit the new
+        topology, respawn.  Every mutation rides the shards' WALs and the
+        idempotent migrate ops, so a SIGKILL on either side of any
+        migration replays to bit-identical state."""
+        from repro.runtime import sharding
+
+        hand = self._handover
+        assert hand is not None
+        fence = hand["fence"]
+        # drain the final pre-fence telemetry so the tuner's cell
+        # accounting closes at the boundary
+        self._poll()
+
+        old = dict(self.topology)
+        new = dict(old, **hand["changes"])
+        old_n, new_n = len(self.shards), int(new["n_brokers"])
+        params0 = self.wl.params0
+        a_old = sharding.tree_assignment(
+            params0, old_n, split_bytes=int(old["shard_split_bytes"]),
+            partitioner=old["partitioner"],
+        )
+        a_new = sharding.tree_assignment(
+            params0, new_n, split_bytes=int(new["shard_split_bytes"]),
+            partitioner=new["partitioner"],
+        )
+        owner_new = sharding.offset_owner(
+            params0, int(new["shard_split_bytes"]), a_new
+        )
+        # stored pre-fence entries are chunked at the OLD threshold: each
+        # old chunk moves to the new owner of the new chunk containing its
+        # start offset — totality is preserved, which is all pre-fence
+        # data needs (post-fence pulls never read pre-fence steps)
+        subleaves = sharding.tree_subleaves(
+            params0, int(old["shard_split_bytes"])
+        )
+        moves: dict[tuple[int, int], list] = {}
+        for leaf_key, subkey, off, _n in subleaves:
+            src = a_old[subkey]
+            dest = owner_new(leaf_key, off)
+            if src != dest:
+                moves.setdefault((src, dest), []).append([leaf_key, off])
+        gen = self.topo_gen + 1
+
+        # rewrite job.json FIRST: every shard (re)spawned from here reads
+        # the new topology.  Old shards re-reading it mid-migration is
+        # harmless — their store rebuilds from the WAL and the migrate ops
+        # never consult the config
+        job = self.cfg.job_dict(self.wl.n_batches)
+        job.update(
+            n_brokers=new_n,
+            transport=new["transport"],
+            wire_scheme=new["wire_scheme"],
+            shard_split_bytes=new["shard_split_bytes"],
+            partitioner=new["partitioner"],
+            topo_gen=gen,
+        )
+        with open(os.path.join(self._broker_dir(), "job.json"), "w") as f:
+            json.dump(job, f, indent=1)
+
+        if new_n > old_n:
+            # grow: append ALL new shard slots first (len(self.shards) is
+            # the --n-shards every spawn reads), then spawn + install the
+            # eviction table so the new barriers agree on membership
+            for s in range(old_n, new_n):
+                self.shards.append(_BrokerShard(shard=s))
+                self._conns.append(None)
+            for s in range(old_n, new_n):
+                self._spawn_broker(self.shards[s])
+                for w, estep in self.evictions.items():
+                    self._rpc({"t": "evict_apply", "worker": w,
+                               "step": estep}, shard=s)
+
+        kill_shard = self.cfg.kill_broker_during_handover
+        moved_subkeys = 0
+        for (src, dest) in sorted(moves):
+            moved = moves[(src, dest)]
+            moved_subkeys += len(moved)
+            resp, blob = self._rpc(
+                {"t": "migrate_read", "moved": moved}, shard=src
+            )
+            if kill_shard is not None and self._topo_kill_armed:
+                # §16 failure-matrix cell: SIGKILL a shard mid-handover;
+                # _rpc retries ride the respawn+WAL-replay and the
+                # idempotent migrate ops land bit-identical state
+                self._topo_kill_armed = False
+                bs = self.shards[kill_shard]
+                if bs.alive:
+                    bs.proc.send_signal(signal.SIGKILL)
+            self._rpc(
+                {"t": "migrate_in", "gen": gen, "src": src,
+                 "parts": resp["parts"]},
+                payload=blob, shard=dest,
+            )
+        # drop only after EVERY destination acked its migrate_in: a source
+        # with several destinations must not lose unread slices
+        for src in sorted({s for s, _ in moves}):
+            moved = [
+                m for (s, _d), ms in moves.items() if s == src for m in ms
+            ]
+            self._rpc({"t": "migrate_drop", "moved": moved}, shard=src)
+
+        # commit on every shard of the NEW topology (clears the fence on
+        # the coordinator; updates the job dict respawned workers hello
+        # into); retired shards get a shutdown instead
+        for s in range(new_n):
+            self._rpc(
+                {"t": "topo_commit", "gen": gen, "n_shards": new_n,
+                 "n_brokers": new_n, "transport": new["transport"],
+                 "wire_scheme": new["wire_scheme"],
+                 "shard_split_bytes": new["shard_split_bytes"],
+                 "partitioner": new["partitioner"]},
+                shard=s,
+            )
+        if new_n < old_n:
+            # shrink: the move map emptied shards >= new_n; retire them
+            # synchronously (no _rpc between terminate and truncation, or
+            # a retry's _reap_brokers would respawn a retired shard)
+            for s in range(new_n, old_n):
+                bs = self.shards[s]
+                try:
+                    r, _ = self._rpc({"t": "shutdown"}, shard=s)
+                    self.retired_shard_stats.append(r)
+                except Exception:  # pragma: no cover - defensive
+                    self.retired_shard_stats.append({"shard_id": s})
+                if self._conns[s] is not None:
+                    self._conns[s].close()
+                if bs.proc is not None:
+                    bs.proc.terminate()
+                    try:
+                        bs.proc.wait(timeout=5.0)
+                    except subprocess.TimeoutExpired:
+                        bs.proc.kill()
+            del self.shards[new_n:]
+            del self._conns[new_n:]
+
+        self.topology = new
+        self.topo_gen = gen
+        self._max_brokers = max(self._max_brokers, new_n)
+        self._topo_cell_start = fence
+        self.topology_events.append(
+            {
+                "gen": gen,
+                "fence": fence,
+                "changes": hand["changes"],
+                "moved_subkeys": moved_subkeys,
+                "total_subkeys": len(subleaves),
+                "at_frontier": self._frontier,
+            }
+        )
+        self._handover = None
+        if self.topo_tuner is not None:
+            # observations from here on belong to the next cell (the
+            # entry _poll above closed the old cell's rows)
+            self.topo_tuner.cell_started()
+        for slot in self.slots:
+            if slot.held:
+                slot.held = False
+                self._spawn(slot)
 
     # -- main loop ------------------------------------------------------------
 
@@ -815,11 +1131,19 @@ class Supervisor:
                         self._reap(slot, statuses)
 
                 self._maybe_prespawn()
+                self._scan_prewarm_ready()
+
+                # topology handover (DESIGN.md §16): every live worker
+                # parked at the fence -> migrate the store and resume
+                if self._handover is not None and all(
+                    s.terminal is not None or s.held for s in self.slots
+                ):
+                    self._complete_handover()
 
                 all_alive = all(
                     s.alive for s in self.slots if s.terminal is None
                 )
-                if all_alive:
+                if all_alive and self._handover is None:
                     if self._scripted_fired < len(cfg.scripted_evict_steps):
                         nxt = cfg.scripted_evict_steps[self._scripted_fired]
                         if self._frontier >= nxt:
@@ -831,6 +1155,28 @@ class Supervisor:
                             self._evict_victim(
                                 decision.reason, decision.s_delta
                             )
+                    if self._retunes_pending:
+                        nxt, changes = self._retunes_pending[0]
+                        if self._frontier >= nxt:
+                            # settled either way: a past-end refusal is
+                            # permanent, retrying it would spin forever
+                            self._initiate_retune(changes)
+                            self._retunes_pending.pop(0)
+                    elif self.topo_tuner is not None and self.history:
+                        last = self.history[-1]
+                        p = max(int(last.get("p_active") or 1), 1)
+                        # per-worker bytes/step for the cost-model
+                        # tie-break — must be current BEFORE next_action
+                        # picks a winner
+                        self.topo_tuner.bytes_per_step = (
+                            float(last.get("wire_bytes") or 0.0) / p
+                        )
+                        self.topo_tuner.n_workers = p
+                        action = self.topo_tuner.next_action()
+                        if action is not None:
+                            _kind, cell = action
+                            if not self._initiate_retune(cell):
+                                self.topo_tuner.abandon()
 
                 if all(s.terminal is not None for s in self.slots):
                     self._poll()
@@ -846,9 +1192,12 @@ class Supervisor:
                 dump = self._dump_updates()
             self._stopping = True
             shard_stats = []
-            for s in range(cfg.n_brokers):
+            for s in range(len(self.shards)):
                 resp, _ = self._rpc({"t": "shutdown"}, shard=s)
                 shard_stats.append(resp)
+            # shards retired by a mid-job shrink already reported at
+            # retirement; their socket stats belong in the same rollup
+            shard_stats.extend(self.retired_shard_stats)
         finally:
             for slot in self.slots:
                 if slot.alive:
@@ -858,7 +1207,7 @@ class Supervisor:
             for conn in self._conns:
                 if conn is not None:
                     conn.close()
-            self._conns = [None] * cfg.n_brokers
+            self._conns = [None] * len(self.shards)
             for bs in self.shards:
                 if bs.proc is not None:
                     bs.proc.terminate()
@@ -874,7 +1223,9 @@ class Supervisor:
 
         wall = time.monotonic() - t_job0
         # the topology bills what it runs: one Redis-analogue VM per shard
-        bill = faas_cost(self.lifetimes, wall, n_redis=cfg.n_brokers)
+        # — the PEAK shard count under live re-sharding (a shard that ran
+        # for part of the job still occupied a VM slot; honest upper bound)
+        bill = faas_cost(self.lifetimes, wall, n_redis=self._max_brokers)
         return self._result(wall, bill, shard_stats, dump)
 
     # -- results --------------------------------------------------------------
@@ -896,7 +1247,7 @@ class Supervisor:
             )
         }
         acc: dict[tuple[int, int], sharding.LeafBuffers] = {}
-        for s in range(self.cfg.n_brokers):
+        for s in range(len(self.shards)):
             resp, blob = self._rpc({"t": "dump"}, shard=s)
             for desc, m, leaf in sharding.iter_part_leaves(
                 resp["parts"], blob
@@ -975,8 +1326,16 @@ class Supervisor:
         result = {
             "workload": self.wl.name,
             "n_workers": self.cfg.n_workers,
-            "n_brokers": self.cfg.n_brokers,
-            "transport": self.cfg.transport,
+            # FINAL topology (== starting topology unless a live re-shard
+            # happened; 'topology'/'topology_events' carry the full story)
+            "n_brokers": self.topology["n_brokers"],
+            "transport": self.topology["transport"],
+            "topology": dict(self.topology),
+            "topology_gen": self.topo_gen,
+            "topology_events": self.topology_events,
+            "topology_tuner": (
+                None if self.topo_tuner is None else self.topo_tuner.summary()
+            ),
             "steps": self._frontier,
             "final_pool": sum(1 for s in self.slots if s.terminal == "done"),
             "final_loss": hist[-1]["loss"] if hist else None,

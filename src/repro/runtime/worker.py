@@ -105,10 +105,16 @@ class _Membership:
     def __init__(self, n_workers: int):
         self.P = n_workers
         self.evictions: dict[int, int] = {}
+        # topology epoch fence (DESIGN.md §16): once the coordinator mints
+        # it, every worker exits at loop-top t >= fence so the supervisor
+        # can re-shard the store at an invocation boundary
+        self.topo_fence: Optional[int] = None
 
     def update(self, resp: dict) -> None:
         for k, v in (resp.get("evictions") or {}).items():
             self.evictions[int(k)] = int(v)
+        if resp.get("topo_fence") is not None:
+            self.topo_fence = int(resp["topo_fence"])
 
     def p_active(self, step: int) -> int:
         return self.P - sum(1 for e in self.evictions.values() if e <= step)
@@ -263,9 +269,11 @@ def run_worker(
     # threshold, so every worker, the supervisor, and the tests compute
     # the identical assignment (runtime.sharding)
     split_bytes = int(job.get("shard_split_bytes", 0))
+    partitioner = str(job.get("partitioner", "greedy"))
     leaf_keys = protocol.tree_keys(params)
     assignment = sharding.tree_assignment(
-        params, n_shards, split_bytes=split_bytes, namespace=ns
+        params, n_shards, split_bytes=split_bytes, namespace=ns,
+        partitioner=partitioner,
     )
     leaves0 = [np.asarray(x) for x in jax.tree_util.tree_leaves(params)]
     treedef0 = jax.tree_util.tree_structure(params)
@@ -510,6 +518,19 @@ def run_worker(
                 [parts for _, parts in per_shard],
             )
             bye("evicted")
+            return 0
+        # topology epoch fence (DESIGN.md §16): exit cleanly BEFORE
+        # starting step fence so the supervisor can migrate the store.
+        # After an eviction check on purpose — a granted eviction step is
+        # always < fence (the mint guarantees it), so a leaver's flush
+        # still lands in a barrier the survivors complete pre-fence.  The
+        # checkpoint at fence-1 is durable before the handover starts, so
+        # the respawned invocation resumes AT the fence and never replays
+        # a pre-fence step against the re-sharded store.
+        fence = members.topo_fence
+        if fence is not None and t >= fence:
+            save_ckpt(t - 1)
+            bye("topo-fence")
             return 0
         if t > total_steps:
             if consistency == "ssp" and t == total_steps + 1:

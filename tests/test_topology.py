@@ -1,0 +1,473 @@
+"""Live topology re-sharding (DESIGN.md §16): consistent-hash ring,
+chunk-floor guard, TopologyTuner policy, prewarm clock hygiene, broker
+handover ops, and end-to-end bit-identity across a mid-job re-shard.
+"""
+
+from __future__ import annotations
+
+import os
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.autotuner import (
+    AutoTunerConfig,
+    ScaleInAutoTuner,
+    TopologyTuner,
+    TopologyTunerConfig,
+)
+from repro.core.billing import CommModel
+from repro.runtime import final_params_digest, sharding
+from repro.runtime import supervisor as sup
+
+from runtime_harness import BrokerCluster, run_small_pmf, small_pmf_cfg
+
+
+# -- consistent-hash ring partitioner -----------------------------------------
+
+
+def _keys(n: int, seed: int) -> list[str]:
+    rng = np.random.RandomState(seed)
+    return [f"leaf{seed}:{i}:{int(rng.randint(1_000_000))}" for i in range(n)]
+
+
+@settings(max_examples=20)
+@given(
+    n_shards=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=40),
+    n_keys=st.integers(min_value=1, max_value=80),
+)
+def test_ring_grow_moves_only_to_new_shard(n_shards, seed, n_keys):
+    """N -> N+1: the only keys that change owner land on the NEW shard —
+    existing shards never trade keys among themselves."""
+    keys = _keys(n_keys, seed)
+    a = sharding.ring_assign(keys, n_shards)
+    b = sharding.ring_assign(keys, n_shards + 1)
+    for k in keys:
+        if a[k] != b[k]:
+            assert b[k] == n_shards
+
+
+@settings(max_examples=20)
+@given(
+    n_shards=st.integers(min_value=2, max_value=6),
+    seed=st.integers(min_value=0, max_value=40),
+    n_keys=st.integers(min_value=1, max_value=80),
+)
+def test_ring_shrink_moves_only_from_removed_shard(n_shards, seed, n_keys):
+    """N -> N-1 (retiring the last shard): every key that was NOT on the
+    removed shard keeps its owner."""
+    keys = _keys(n_keys, seed)
+    a = sharding.ring_assign(keys, n_shards)
+    b = sharding.ring_assign(keys, n_shards - 1)
+    for k in keys:
+        if a[k] != n_shards - 1:
+            assert b[k] == a[k]
+
+
+@settings(max_examples=15)
+@given(
+    n_shards=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=40),
+)
+def test_ring_assignment_is_pure(n_shards, seed):
+    """The assignment is a pure function of (keys, N): key order and
+    repeated evaluation do not matter."""
+    keys = _keys(32, seed)
+    a = sharding.ring_assign(keys, n_shards)
+    b = sharding.ring_assign(list(reversed(keys)), n_shards)
+    assert a == b == sharding.ring_assign(keys, n_shards)
+
+
+def test_ring_moved_fraction_bounded():
+    """Growing N -> N+1 moves roughly a 1/(N+1) fraction of the keys (the
+    whole point of consistent hashing vs. rehash-everything)."""
+    keys = [f"leaf{i}:{j * 1024}" for i in range(40) for j in range(50)]
+    for n in range(1, 6):
+        a = sharding.ring_assign(keys, n)
+        b = sharding.ring_assign(keys, n + 1)
+        moved = sum(1 for k in keys if a[k] != b[k])
+        assert moved / len(keys) <= 1.0 / (n + 1) + 0.15
+
+
+def test_tree_assignment_ring_covers_all_subkeys():
+    tree = {"U": np.zeros((1000, 4), np.float32),
+            "M": np.zeros((150, 4), np.float32)}
+    asn = sharding.tree_assignment(
+        tree, 3, split_bytes=1024, partitioner="ring"
+    )
+    subs = sharding.tree_subleaves(tree, 1024)
+    assert set(asn) == {sk for _, sk, _, _ in subs}
+    assert set(asn.values()) <= {0, 1, 2}
+    with pytest.raises(ValueError):
+        sharding.tree_assignment(tree, 2, partitioner="nope")
+
+
+# -- chunk_elems floor (satellite: tiny split_bytes explosion) ----------------
+
+
+def test_chunk_elems_clamps_tiny_split_with_one_warning():
+    sharding._warned_small_split = False
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        n = sharding.chunk_elems(4, 1)
+        assert w, "expected a one-time small-split warning"
+    # the clamp enforces the minimum chunk byte size (8-elem aligned)
+    assert n * 4 >= sharding._MIN_CHUNK_BYTES - 8 * 4
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        m = sharding.chunk_elems(4, 1)
+        assert not w2, "warning must fire only once"
+    assert m == n
+    # sane splits are untouched
+    assert sharding.chunk_elems(4, 4096) == 1024
+    assert sharding.chunk_elems(4, 0) >= 8  # 0 = whole leaves elsewhere
+
+
+@settings(max_examples=15)
+@given(split=st.integers(min_value=1, max_value=1023))
+def test_chunk_floor_bounds_subkey_count(split):
+    """A 16 KiB leaf under any sub-floor split yields at most
+    ceil(16 KiB / _MIN_CHUNK_BYTES) + 1 subkeys — never thousands."""
+    sharding._warned_small_split = True  # silence the one-time warning
+    tree = {"U": np.zeros((4096,), np.float32)}
+    subs = sharding.tree_subleaves(tree, split)
+    assert 1 <= len(subs) <= 16384 // sharding._MIN_CHUNK_BYTES + 1
+
+
+# -- ScaleInAutoTuner interval accounting (satellite: stale timestamp) --------
+
+
+def _synthetic_loss(t, theta=(0.05, 0.9, 0.5, 0.35)):
+    a, b, c, d = theta
+    return 1.0 / (a * np.power(t, b) + c) + d
+
+
+def test_post_knee_eviction_waits_for_fresh_interval():
+    """Fixed 1 s/step clock: pre-knee decide() calls must consume elapsed
+    intervals, so the first post-knee decision fires on the next interval
+    BOUNDARY — not immediately off a timestamp staled before the knee."""
+    cfg = AutoTunerConfig(sched_interval_s=10.0, delta_s=5.0,
+                          knee_slope_threshold=0.05, min_points_for_fit=6)
+    tuner = ScaleInAutoTuner(cfg, initial_workers=8)
+    t = np.arange(1, 120, dtype=np.float64)
+    t_knee = None
+    evict_times = []
+    for i, loss in enumerate(_synthetic_loss(t), start=1):
+        tuner.observe(i, float(loss), 1.0)
+        d = tuner.decide()
+        if tuner.knee_step is not None and t_knee is None:
+            t_knee = tuner._time
+        if d.remove_worker:
+            evict_times.append(tuner._time)
+    assert tuner.knee_step is not None and evict_times
+    # knee discovery lands mid-interval; the buggy accounting fired the
+    # knee-initial eviction right there off the stale pre-knee timestamp
+    assert t_knee % cfg.sched_interval_s != 0.0
+    for et in evict_times:
+        assert et % cfg.sched_interval_s == 0.0, (t_knee, evict_times)
+
+
+# -- TopologyTuner policy -----------------------------------------------------
+
+
+def _cells():
+    return [
+        {"n_brokers": 1, "transport": "tcp"},
+        {"n_brokers": 2, "transport": "tcp"},
+    ]
+
+
+def test_topology_tuner_explore_then_commit():
+    tuner = TopologyTuner(
+        _cells(), TopologyTunerConfig(explore_steps=2, warmup_steps=1)
+    )
+    assert tuner.next_action() is None
+    for _ in range(3):  # warmup 1 + explore 2
+        tuner.observe(0.02)
+    kind, cell = tuner.next_action()
+    assert kind == "explore" and cell == _cells()[1]
+    # the active cell advances only when the supervisor reports the
+    # handover complete — rows published meanwhile belong to the OLD cell
+    assert tuner.active == 0
+    tuner.observe(0.02)
+    tuner.cell_started()
+    assert tuner.active == 1
+    for _ in range(3):
+        tuner.observe(0.01)
+    kind, cell = tuner.next_action()
+    assert kind == "commit" and cell == _cells()[1]
+    assert tuner.committed == 1
+    s = tuner.summary()
+    assert s["chosen"] == 1
+    assert s["cells"][1]["p50"] == pytest.approx(0.01)
+    # the straggler row landed in the old cell (4 observed, 1 warmup drop)
+    assert s["cells"][0]["n_steps"] == 3
+
+
+def test_topology_tuner_model_tie_break():
+    """Measured p50s within rel_tolerance: the CommModel cost decides."""
+    comm = CommModel()
+    cheap = comm.indirect_exchange_time(1e6, 4, n_redis=2)
+    dear = comm.indirect_exchange_time(1e6, 4, n_redis=1)
+    assert cheap < dear  # precondition: more shards = less strain
+    tuner = TopologyTuner(
+        _cells(),
+        TopologyTunerConfig(explore_steps=2, warmup_steps=1,
+                            rel_tolerance=0.5),
+        comm=comm, bytes_per_step=1e6, n_workers=4,
+    )
+    for _ in range(3):
+        tuner.observe(0.0100)  # cell 0: slightly FASTER measured
+    tuner.cell_started()
+    for _ in range(3):
+        tuner.observe(0.0105)  # cell 1: within 50% tolerance
+    kind, cell = tuner.next_action()
+    assert kind == "commit"
+    assert cell["n_brokers"] == 2  # model cost broke the tie
+    # out of tolerance the measurement wins regardless of the model
+    strict = TopologyTuner(
+        _cells(),
+        TopologyTunerConfig(explore_steps=2, warmup_steps=1,
+                            rel_tolerance=0.01),
+        comm=comm, bytes_per_step=1e6, n_workers=4,
+    )
+    for _ in range(3):
+        strict.observe(0.0100)
+    strict.cell_started()
+    for _ in range(3):
+        strict.observe(0.0150)
+    assert strict.next_action()[1]["n_brokers"] == 1
+
+
+def test_topology_tuner_abandon():
+    tuner = TopologyTuner(
+        _cells(), TopologyTunerConfig(explore_steps=2, warmup_steps=1)
+    )
+    for _ in range(3):
+        tuner.observe(0.02)
+    tuner.abandon()
+    assert tuner.next_action() is None
+    s = tuner.summary()
+    assert s["abandoned"] is True and s["chosen"] is None
+
+
+# -- prewarm overlap clocks (satellite: wall/monotonic mix) -------------------
+
+
+def _bare_supervisor(slot, tmp_path):
+    s = object.__new__(sup.Supervisor)
+    s.cfg = small_pmf_cfg(tmp_path)
+    s.slots = [slot]
+    s.cold_start_overlaps = []
+    s._teardown_worker_shm = lambda sl: None
+    return s
+
+
+def test_promote_prewarmed_monotonic_overlap(tmp_path, monkeypatch):
+    slot = sup._Slot(worker=0)
+    slot.pre_proc = object()
+    slot.pre_gate = str(tmp_path / "gate")
+    slot.pre_spawned_mono = 100.0
+    slot.pre_ready_mono = 105.5  # warmed in time
+    s = _bare_supervisor(slot, tmp_path)
+    monkeypatch.setattr(sup.time, "monotonic", lambda: 120.0)
+    s._promote_prewarmed(slot)
+    rec = s.cold_start_overlaps[-1]
+    assert rec["overlap_s"] == pytest.approx(5.5)
+    assert rec["ready_at_promotion"] is True
+    assert os.path.exists(str(tmp_path / "gate"))
+
+
+def test_promote_prewarmed_clamps_negative_overlap(tmp_path, monkeypatch):
+    """Skewed bookkeeping (ready stamp before spawn stamp) is clamped to 0
+    with a loud warning — never recorded as a negative/inflated overlap."""
+    slot = sup._Slot(worker=0)
+    slot.pre_proc = object()
+    slot.pre_gate = str(tmp_path / "gate")
+    slot.pre_spawned_mono = 100.0
+    slot.pre_ready_mono = 90.0
+    s = _bare_supervisor(slot, tmp_path)
+    monkeypatch.setattr(sup.time, "monotonic", lambda: 120.0)
+    with pytest.warns(UserWarning, match="negative prewarm overlap"):
+        s._promote_prewarmed(slot)
+    assert s.cold_start_overlaps[-1]["overlap_s"] == 0.0
+
+
+def test_scan_prewarm_ready_ignores_file_mtime(tmp_path, monkeypatch):
+    """The ready stamp is the supervisor's own monotonic sighting — a
+    stepped wall clock (weird .ready mtime) cannot skew the overlap."""
+    slot = sup._Slot(worker=0)
+    slot.pre_proc = object()
+    slot.pre_gate = str(tmp_path / "gate")
+    ready = tmp_path / "gate.ready"
+    ready.touch()
+    os.utime(ready, (0, 0))  # epoch mtime: wall-clock garbage
+    s = _bare_supervisor(slot, tmp_path)
+    monkeypatch.setattr(sup.time, "monotonic", lambda: 55.5)
+    s._scan_prewarm_ready()
+    assert slot.pre_ready_mono == 55.5
+    s._scan_prewarm_ready()  # first sighting sticks
+    assert slot.pre_ready_mono == 55.5
+
+
+# -- broker handover ops ------------------------------------------------------
+
+JOB = {
+    "workload": "pmf",
+    "workload_cfg": {},
+    "n_workers": 2,
+    "total_steps": 10,
+    "n_batches": 5,
+}
+
+
+def test_topo_begin_mint_idempotent_and_replayed(tmp_path):
+    with BrokerCluster(dict(JOB), n_shards=2, wal_dir=str(tmp_path)) as c:
+        r, _ = c.rpc({"t": "topo_begin"})
+        assert r["granted"] and r["fence"] == 2  # max_published=0 -> 0+2
+        r2, _ = c.rpc({"t": "topo_begin"})
+        assert r2["granted"] and r2["fence"] == 2  # idempotent re-grant
+        r3, _ = c.rpc({"t": "topo_begin"}, shard=1)
+        assert not r3.get("granted")  # coordinator-only
+        # the fence piggybacks on membership (hello/pull responses)
+        hr, _ = c.rpc({"t": "hello", "worker": 0})
+        assert hr["topo_fence"] == 2
+    # SIGKILL-equivalent: a fresh cluster over the same WAL re-installs
+    # the MINTED fence (logged as its result, never re-minted)
+    with BrokerCluster(dict(JOB), n_shards=2, wal_dir=str(tmp_path)) as c2:
+        assert c2.coordinator.core.topo_fence == 2
+        r, _ = c2.rpc({"t": "topo_commit", "gen": 1, "n_shards": 2,
+                       "n_brokers": 2, "transport": "shm"})
+        assert r["ok"]
+        assert c2.coordinator.core.topo_fence is None
+        assert c2.coordinator.core.topo_gen == 1
+        assert c2.coordinator.core.job["transport"] == "shm"
+        hr, _ = c2.rpc({"t": "hello", "worker": 0})
+        assert hr.get("topo_fence") is None
+    # and the commit itself replays
+    with BrokerCluster(dict(JOB), n_shards=2, wal_dir=str(tmp_path)) as c3:
+        assert c3.coordinator.core.topo_fence is None
+        assert c3.coordinator.core.topo_gen == 1
+
+
+def test_topo_begin_refuses_past_end():
+    with BrokerCluster(dict(JOB, total_steps=1)) as c:
+        r, _ = c.rpc({"t": "topo_begin"})
+        assert r["ok"] and not r["granted"] and r["reason"] == "past-end"
+        assert c.coordinator.core.topo_fence is None
+
+
+def test_migrate_roundtrip_totality_and_idempotence(tmp_path):
+    """migrate_read -> migrate_in -> migrate_drop moves exactly the named
+    (key, offset) identities; a retried migrate_in (respawned supervisor)
+    is a no-op; byte accounting follows the moved update."""
+    from repro.runtime import protocol
+
+    import jax.numpy as jnp
+
+    meta, payload = protocol.encode_tree(
+        {"x": jnp.arange(6.0), "y": jnp.ones((4,))}
+    )
+    pub = {"t": "publish", "worker": 0, "step": 1, "meta": meta,
+           "loss": 1.0, "sent_fraction": 1.0, "inv_err": 0.0}
+    with BrokerCluster(dict(JOB), n_shards=2, wal_dir=str(tmp_path)) as c:
+        c.rpc(pub, payload)
+        bytes_before = c.coordinator.core.update_bytes
+        r, blob = c.rpc({"t": "migrate_read", "moved": [["x", 0]]})
+        assert r["ok"] and r["parts"]
+        r_in, _ = c.rpc({"t": "migrate_in", "gen": 1, "src": 0,
+                         "parts": r["parts"]}, blob, shard=1)
+        assert r_in["ok"] and not r_in.get("already")
+        dup, _ = c.rpc({"t": "migrate_in", "gen": 1, "src": 0,
+                        "parts": r["parts"]}, blob, shard=1)
+        assert dup["ok"] and dup["already"]  # idempotent retry
+        rd, _ = c.rpc({"t": "migrate_drop", "moved": [["x", 0]]})
+        assert rd["ok"]
+        # source kept only 'y'; destination holds exactly 'x'
+        src_meta = c.brokers[0].core.updates[1][0][0]
+        dst_meta = c.brokers[1].core.updates[1][0][0]
+        assert [m["k"] for m in src_meta] == ["y"]
+        assert [m["k"] for m in dst_meta] == ["x"]
+        moved_wire = protocol.wire_bytes(
+            [m for m in meta if m["k"] == "x"]
+        )
+        assert c.brokers[0].core.update_bytes == bytes_before - moved_wire
+        assert c.brokers[1].core.update_bytes == moved_wire
+    # WAL replay on BOTH sides reproduces the post-migration stores
+    with BrokerCluster(dict(JOB), n_shards=2, wal_dir=str(tmp_path)) as c2:
+        assert [m["k"] for m in c2.brokers[0].core.updates[1][0][0]] == ["y"]
+        assert [m["k"] for m in c2.brokers[1].core.updates[1][0][0]] == ["x"]
+        assert (1, 0) in c2.brokers[1].core.migrations_applied
+
+
+# -- end-to-end: live re-shard bit-identity (the acceptance runs) -------------
+
+
+@pytest.fixture(scope="module")
+def fixed_topology_digest(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("topo_ref")
+    run_small_pmf(tmp)
+    return final_params_digest(small_pmf_cfg(tmp / "job"))
+
+
+def test_live_reshard_bit_identical(tmp_path, fixed_topology_digest):
+    """1 -> 2 brokers AND tcp -> shm mid-job: final params bit-identical
+    to the never-resharded reference, zero duplicate-publish mismatches."""
+    res = run_small_pmf(
+        tmp_path,
+        scripted_retunes=((3, {"n_brokers": 2, "transport": "shm"}),),
+        partitioner="ring",
+        shard_split_bytes=1024,
+        # pace the job (pure timing, identical math) so the supervisor
+        # always reaches the trigger with steps left for the fence
+        straggler={"worker": 0, "delay_s": 0.08, "every": 1},
+    )
+    assert res["dup_mismatches"] == 0
+    events = [e for e in res["topology_events"] if "refused" not in e]
+    assert len(events) == 1
+    assert events[0]["changes"] == {"n_brokers": 2, "transport": "shm"}
+    assert res["topology"]["n_brokers"] == 2
+    assert res["topology"]["transport"] == "shm"
+    got = final_params_digest(small_pmf_cfg(tmp_path / "job"))
+    assert got == fixed_topology_digest
+
+
+def test_live_reshard_survives_broker_sigkill(tmp_path,
+                                              fixed_topology_digest):
+    """SIGKILL the source shard right after its first migration RPC: the
+    WAL replay + idempotent migrate_in reproduce the identical handover."""
+    res = run_small_pmf(
+        tmp_path,
+        scripted_retunes=((3, {"n_brokers": 2, "transport": "shm"}),),
+        partitioner="ring",
+        shard_split_bytes=1024,
+        kill_broker_during_handover=0,
+        straggler={"worker": 0, "delay_s": 0.08, "every": 1},
+    )
+    assert res["dup_mismatches"] == 0
+    events = [e for e in res["topology_events"] if "refused" not in e]
+    assert len(events) == 1, res["topology_events"]
+    assert len(res.get("broker_respawns", [])) >= 1
+    got = final_params_digest(small_pmf_cfg(tmp_path / "job"))
+    assert got == fixed_topology_digest
+
+
+def test_reshard_requires_isp():
+    with pytest.raises(ValueError, match="isp"):
+        sup.Supervisor(small_pmf_cfg(
+            "/tmp/nonexistent", consistency="ssp", slack=2,
+            scripted_retunes=((4, {"n_brokers": 2}),),
+        ))
+    with pytest.raises(ValueError, match="prewarm"):
+        sup.Supervisor(small_pmf_cfg(
+            "/tmp/nonexistent", prewarm=True, topology_tune=True,
+        ))
+    with pytest.raises(ValueError, match="unknown knobs"):
+        sup.Supervisor(small_pmf_cfg(
+            "/tmp/nonexistent",
+            scripted_retunes=((4, {"n_workers": 9}),),
+        ))

@@ -1,0 +1,187 @@
+"""Fig. 13: chaos soak — determinism and billed cost under injected faults.
+
+MLLess's economics depend on failures being CHEAP: a stateless function
+that dies is re-invoked and replays forward from the update log, so a
+fault costs the seconds of lost compute, not a coordinated restart.  This
+soak runs the small deterministic PMF job twice:
+
+* a fault-free reference (``run_job``), and
+* the same job under a seeded randomized ``FaultPlan`` with at least one
+  worker SIGKILL, broker SIGKILL, WAL tail corruption, transport stall
+  and a supervisor self-kill (``faults.run_job_resilient`` re-executes
+  the supervisor against its journal),
+
+and holds the paper's determinism bar: the final parameters must be
+**bit-identical** across the two runs (sha256 over every leaf) with
+``dup_mismatches == 0`` — every replayed publish matched the stored copy
+byte for byte.  The measured per-fault recovery time and the billed
+overhead per fault land in ``BENCH_runtime.json`` under ``fig13_chaos``.
+
+Without ``--live`` the suite checks the cheap half: seeded plan expansion
+is a pure function of its arguments (the same seed always yields the same
+schedule) and covers every requested fault kind.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import write_result
+
+CHAOS_SEED = 1013
+
+LIVE_WCFG = {
+    "n_users": 120,
+    "n_movies": 150,
+    "n_ratings": 6000,
+    "rank": 4,
+    "batch_size": 64,
+}
+LIVE_P = 3
+LIVE_SHARDS = 2
+LIVE_STEPS = 24
+KINDS = ("worker_kill", "broker_kill", "wal_corrupt", "transport_stall",
+         "supervisor_kill")
+
+
+def _job(run_dir: str, chaos):
+    from repro.runtime import FaaSJobConfig
+
+    return FaaSJobConfig(
+        run_dir=run_dir,
+        workload="pmf",
+        workload_cfg=dict(LIVE_WCFG),
+        n_workers=LIVE_P,
+        total_steps=LIVE_STEPS,
+        checkpoint_every=4,
+        optimizer="nesterov",
+        lr=0.08,
+        isp_v=0.5,
+        n_brokers=LIVE_SHARDS,
+        transport="tcp",
+        autotune=False,
+        deadline_s=480.0,
+        chaos=chaos,
+    )
+
+
+def _run_soak(seed: int = CHAOS_SEED) -> dict:
+    import tempfile
+
+    from repro.runtime import final_params_digest, run_job
+    from repro.runtime.faults import FaultPlan, run_job_resilient
+
+    plan = FaultPlan.randomized(seed, LIVE_P, LIVE_SHARDS, LIVE_STEPS,
+                                kinds=KINDS)
+    ref_job = _job(tempfile.mkdtemp(prefix="bench_chaos_ref_"), None)
+    ref = run_job(ref_job)
+    ref_digest = final_params_digest(ref_job)
+
+    chaos_job = _job(tempfile.mkdtemp(prefix="bench_chaos_soak_"),
+                     plan.to_spec())
+    res = run_job_resilient(chaos_job, verbose=False)
+    chaos_digest = final_params_digest(chaos_job)
+
+    fired = [e for e in res["chaos_events"] if "skipped" not in e]
+    recoveries = {
+        e["kind"]: e.get("recovery_s") for e in fired
+    }
+    n_faults = max(len(fired), 1)
+    overhead = res["bill"]["total"] - ref["bill"]["total"]
+    return {
+        "seed": seed,
+        "workload": dict(LIVE_WCFG),
+        "n_workers": LIVE_P,
+        "n_brokers": LIVE_SHARDS,
+        "steps": LIVE_STEPS,
+        "plan": plan.to_spec(),
+        "events_fired": fired,
+        "events_skipped": [e for e in res["chaos_events"] if "skipped" in e],
+        "recovery_s_by_kind": recoveries,
+        "supervisor_restarts": res["supervisor_restarts"],
+        "supervisor_resumed": res["supervisor_resumed"],
+        "wal_quarantined_bytes": res["wal_quarantined_bytes"],
+        "dup_mismatches": res["dup_mismatches"],
+        "ref_faas_cost_usd": ref["bill"]["total"],
+        "chaos_faas_cost_usd": res["bill"]["total"],
+        "billed_overhead_usd": overhead,
+        "billed_overhead_per_fault_usd": overhead / n_faults,
+        "ref_wall_s": ref["wall_s"],
+        "chaos_wall_s": res["wall_s"],
+        "final_params_sha256_ref": ref_digest,
+        "final_params_sha256_chaos": chaos_digest,
+        "bit_identical": ref_digest == chaos_digest,
+    }
+
+
+def _merge_into_bench_runtime(soak: dict) -> None:
+    """BENCH_runtime.json is shared with the other live payloads:
+    load-merge-write so whichever benchmark ran last keeps the rest."""
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_runtime.json")
+    payload = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload["fig13_chaos"] = soak
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def run(live: bool = False) -> dict:
+    from repro.runtime.faults import FaultPlan
+
+    # plan expansion is a pure function of (seed, pool, steps): the same
+    # seed must always yield the same schedule, covering every kind
+    plans = [
+        FaultPlan.randomized(CHAOS_SEED, LIVE_P, LIVE_SHARDS, LIVE_STEPS,
+                             kinds=KINDS)
+        for _ in range(2)
+    ]
+    deterministic = plans[0] == plans[1]
+    counts = plans[0].counts()
+    covered = all(counts.get(k, 0) >= 1 for k in KINDS)
+    out = {
+        "plan": plans[0].to_spec(),
+        "plan_deterministic": deterministic,
+        "kinds_covered": covered,
+    }
+    if not (deterministic and covered):
+        raise SystemExit(f"fig13: plan expansion broken: {out}")
+    if live:
+        soak = _run_soak()
+        out["soak"] = soak
+        _merge_into_bench_runtime(soak)
+        if not soak["bit_identical"] or soak["dup_mismatches"] != 0:
+            raise SystemExit(
+                f"fig13: chaos run diverged from the fault-free reference "
+                f"(bit_identical={soak['bit_identical']}, "
+                f"dup_mismatches={soak['dup_mismatches']})")
+    write_result("fig13_chaos", out)
+    return out
+
+
+def report(out: dict) -> list[str]:
+    lines = [
+        f"fig13,plan_expansion,0,"
+        f"deterministic={out['plan_deterministic']},"
+        f"kinds_covered={out['kinds_covered']}"
+    ]
+    soak = out.get("soak")
+    if soak:
+        for e in soak["events_fired"]:
+            rec = e.get("recovery_s")
+            rec_txt = f"{rec:.2f}s" if rec is not None else "job-end"
+            lines.append(
+                f"fig13,recover_{e['kind']},"
+                f"{(rec or 0.0)*1e6:.0f},recovery={rec_txt}"
+            )
+        lines.append(
+            f"fig13,soak,{soak['chaos_wall_s']*1e6:.0f},"
+            f"bit_identical={soak['bit_identical']},"
+            f"dup={soak['dup_mismatches']},"
+            f"restarts={soak['supervisor_restarts']},"
+            f"overhead_per_fault=${soak['billed_overhead_per_fault_usd']:.6f}"
+        )
+    return lines

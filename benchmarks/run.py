@@ -30,6 +30,7 @@ def main() -> None:
         fig10_scalability,
         fig11_multijob,
         fig12_topology,
+        fig13_chaos,
         table3_weak_scaling,
     )
 
@@ -43,6 +44,7 @@ def main() -> None:
         "fig10": fig10_scalability,
         "fig11": fig11_multijob,
         "fig12": fig12_topology,
+        "fig13": fig13_chaos,
         "table3": table3_weak_scaling,
     }
     argv = sys.argv[1:]

@@ -153,6 +153,8 @@ def run_smoke(
         "wire_bytes_total": float(live["wire_bytes_total"]),
         "update_bytes_per_shard": live["broker_update_bytes_per_shard"],
         "dup_mismatches": live["dup_mismatches"],
+        "chaos_events": live["chaos_events"],
+        "wal_quarantined_bytes": live["wal_quarantined_bytes"],
         "final_params_sha256": final_params_digest(job),
         "cost_measured_over_predicted": (
             live["bill"]["total"] / max(simres.total_cost, 1e-12)
@@ -312,6 +314,21 @@ def main() -> int:
         print("wire_guard: REGRESSION: dup_mismatches != 0",
               file=sys.stderr)
         ok = False
+    # the chaos-dormancy guard (DESIGN.md §17): no --chaos means the fault
+    # plane must be provably inert — zero fault events, zero quarantined WAL
+    # bytes — on every default leg, so the exact-byte baseline below also
+    # certifies that the injection hooks cost nothing when disarmed
+    for name, run in (("single", single), ("sharded", sharded),
+                      ("shm", shm), ("ring", ring)):
+        if run["chaos_events"] or run["wal_quarantined_bytes"]:
+            print(
+                f"wire_guard: REGRESSION: {name} leg ran without --chaos "
+                f"yet saw fault-plane activity (events="
+                f"{run['chaos_events']}, wal_quarantined="
+                f"{run['wal_quarantined_bytes']} B)",
+                file=sys.stderr,
+            )
+            ok = False
     # the tuner-off guard (DESIGN.md §16): with --topology-tune off the
     # topology machinery must be provably inert on every default leg — no
     # re-shard events, generation pinned at 0 — so the exact-baseline gates

@@ -12,8 +12,11 @@ latest checkpoint.
 """
 
 from repro.checkpoint.store import (  # noqa: F401
+    CheckpointCorruption,
+    all_steps,
     latest_step,
     restore,
+    restore_latest_valid,
     save,
     restore_with_sharding,
 )

@@ -18,6 +18,7 @@ Concurrency contract (exercised by the FaaS runtime, where several worker
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
@@ -33,6 +34,40 @@ PyTree = Any
 
 _SEP = "/"
 _STEP_RE = re.compile(r"^step_(\d{10})$")
+
+
+class CheckpointCorruption(Exception):
+    """A checkpoint's stored arrays do not match their manifest digest."""
+
+
+# fault-injection seam (runtime/faults.py, DESIGN.md §17): called with the
+# staging directory after the npz is written but BEFORE the atomic
+# install.  Raising OSError here simulates ENOSPC at the worst moment —
+# the staged bytes exist but must never become visible.  None = dormant.
+_write_fault_hook = None
+
+
+def install_write_fault_hook(fn) -> None:
+    global _write_fault_hook
+    _write_fault_hook = fn
+
+
+def clear_write_fault_hook() -> None:
+    global _write_fault_hook
+    _write_fault_hook = None
+
+
+def _content_digest(stored: dict[str, np.ndarray]) -> str:
+    """sha256 over the stored (npz-encoded) arrays in sorted key order —
+    the integrity witness verified on every restore."""
+    h = hashlib.sha256()
+    for k in sorted(stored):
+        h.update(k.encode("utf-8"))
+        v = stored[k]
+        h.update(str(v.dtype).encode())
+        h.update(str(v.shape).encode())
+        h.update(np.ascontiguousarray(v).tobytes())
+    return h.hexdigest()
 
 
 def path_key(path) -> str:
@@ -111,6 +146,7 @@ def save(directory: str, step: int, tree: PyTree, extra: Optional[dict] = None) 
             "keys": sorted(flat),
             "shapes": {k: list(v.shape) for k, v in flat.items()},
             "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+            "digest": _content_digest(stored),
             "extra": extra or {},
         }
         # the manifest rides INSIDE the npz too: restore then needs a single
@@ -124,6 +160,8 @@ def save(directory: str, step: int, tree: PyTree, extra: Optional[dict] = None) 
             json.dump(manifest, f, indent=1)
             f.flush()
             os.fsync(f.fileno())
+        if _write_fault_hook is not None:
+            _write_fault_hook(tmp)
         _install(tmp, final)
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
@@ -150,6 +188,17 @@ def _restore_once(path: str, like: PyTree) -> PyTree:
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
     dtypes = manifest.get("dtypes", {})
+    if "digest" in manifest:  # pre-digest checkpoints skip verification
+        got = _content_digest(
+            {k: arrays[k] for k in manifest["keys"] if k in arrays}
+        )
+        if got != manifest["digest"] or any(
+            k not in arrays for k in manifest["keys"]
+        ):
+            raise CheckpointCorruption(
+                f"checkpoint {path}: content digest mismatch "
+                f"(manifest {manifest['digest'][:12]}…, stored {got[:12]}…)"
+            )
     flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []
     for p, leaf in flat_like:
@@ -183,6 +232,45 @@ def restore(directory: str, step: int, like: PyTree) -> PyTree:
             last = e
             time.sleep(0.025)
     raise FileNotFoundError(f"checkpoint {path} never became readable") from last
+
+
+def all_steps(directory: str) -> list[int]:
+    """Every installed checkpoint generation, ascending."""
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for d in os.listdir(directory):
+        m = _STEP_RE.match(d)
+        if m:
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def restore_latest_valid(
+    directory: str, like: PyTree
+) -> tuple[Optional[int], Optional[PyTree]]:
+    """Restore the newest checkpoint whose content digest verifies,
+    falling back generation by generation past corrupt ones (every
+    generation is retained precisely so this walk has somewhere to go).
+    Returns ``(step, tree)`` — ``(None, None)`` when no valid generation
+    exists (cold start)."""
+    for step in reversed(all_steps(directory)):
+        path = os.path.join(directory, f"step_{step:010d}")
+        try:
+            return step, _restore_once(path, like)
+        except FileNotFoundError:
+            # racing a concurrent replace of this tag: the standard
+            # retry window, then fall through to the previous generation
+            try:
+                return step, restore(directory, step, like)
+            except (FileNotFoundError, CheckpointCorruption,
+                    KeyError, ValueError):
+                continue
+        except (CheckpointCorruption, KeyError, ValueError) as e:
+            print(f"checkpoint {path}: unusable ({e}); "
+                  f"falling back to previous generation", flush=True)
+            continue
+    return None, None
 
 
 def restore_with_sharding(

@@ -583,7 +583,20 @@ def train_faas(args) -> dict:
         prefix="repro_faas_"
     )
     if getattr(args, "jobs", None):
+        if getattr(args, "chaos", None):
+            raise SystemExit(
+                "--chaos is not supported with --jobs: a fault plan "
+                "SIGKILLs pool processes shared by every tenant"
+            )
         return _fleet_faas(args, run_dir)
+    chaos_plan = None
+    if getattr(args, "chaos", None):
+        from repro.runtime.faults import parse_chaos_arg
+
+        chaos_plan = parse_chaos_arg(
+            args.chaos, n_workers=args.workers,
+            n_shards=getattr(args, "n_brokers", 1), total_steps=args.steps,
+        )
     topo = _topology_args(args)
     cfg = FaaSJobConfig(
         run_dir=run_dir,
@@ -615,8 +628,18 @@ def train_faas(args) -> dict:
         partitioner=topo["partitioner"],
         shard_split_bytes=topo["shard_split_bytes"],
         seed=args.seed,
+        chaos=None if chaos_plan is None else chaos_plan.to_spec(),
     )
-    result = run_job(cfg)
+    if chaos_plan is not None and any(
+        e.kind == "supervisor_kill" for e in chaos_plan.events
+    ):
+        # the supervisor will kill itself mid-job: drive it from outside
+        # so it can be re-executed against its journal
+        from repro.runtime.faults import run_job_resilient
+
+        result = run_job_resilient(cfg)
+    else:
+        result = run_job(cfg)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
@@ -699,6 +722,12 @@ def main() -> None:
                     "neighbouring cells with WAL-coordinated live "
                     "re-sharding at invocation boundaries (DESIGN.md §16); "
                     "requires --consistency isp, no --jobs re-shard")
+    ap.add_argument("--chaos", default=None, metavar="SEED:SPEC",
+                    help="faas: seeded fault-injection plan "
+                         "(runtime/faults.py) — SEED:auto expands the "
+                         "default randomized multi-fault schedule, "
+                         "SEED:[{\"kind\":...,\"step\":...}] is explicit; "
+                         "incompatible with --jobs")
     ap.add_argument("--retune", action="append", metavar="STEP:JSON",
                     help="faas: force one live re-shard when the frontier "
                     "reaches STEP, e.g. '4:{\"n_brokers\":2}' (repeatable; "

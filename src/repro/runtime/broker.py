@@ -70,6 +70,7 @@ import socket
 import socketserver
 import struct
 import threading
+import zlib
 from typing import Optional
 
 from repro.runtime import protocol
@@ -85,14 +86,43 @@ from repro.runtime import protocol
 _MUTATING = ("hello", "report", "bye", "evict_apply",
              "migrate_in", "migrate_drop", "topo_commit")
 
-_WAL_HDR = struct.Struct("<II")  # header_len, payload_len (framing's shape)
+# header_len, payload_len, crc32(header bytes + payload bytes)
+_WAL_HDR = struct.Struct("<III")
+# a header JSON larger than this cannot have been written by append() —
+# a full-size length word this absurd is a corrupted record, not a torn
+# tail (tearing only truncates; it never rewrites committed bytes)
+_WAL_MAX_HLEN = 1 << 24
+_WAL_MAX_PLEN = 1 << 31
+
+
+class WALCorruption(Exception):
+    """A fully-present WAL record failed its CRC (or carries impossible
+    lengths): the log was *altered*, not torn.  ``valid_end`` is the byte
+    offset of the last record that verified."""
+
+    def __init__(self, path: str, valid_end: int):
+        super().__init__(
+            f"WAL {path}: corrupt record after byte {valid_end}")
+        self.path = path
+        self.valid_end = valid_end
 
 
 class WriteAheadLog:
-    """Append-only framed (header JSON, payload) log with torn-tail
-    tolerance: a record is ``uint32 hlen | uint32 plen | header | payload``
-    flushed per append, so a SIGKILL can truncate at most the final
-    record — which was never acked and will be retried by its sender."""
+    """Append-only framed (header JSON, payload) log with per-record CRC.
+
+    A record is ``uint32 hlen | uint32 plen | uint32 crc32 | header |
+    payload``, flushed per append.  Two distinct failure modes on
+    replay (DESIGN.md §17.3):
+
+    * **torn tail** — a short read mid-final-record.  A SIGKILL mid-
+      append can truncate at most that record, which was never acked and
+      will be retried by its sender: silently truncated.
+    * **corruption** — a fully-present record whose CRC mismatches (a
+      flipped byte anywhere in lengths/header/payload).  Replaying past
+      it could rebuild *wrong* state behind acked responses, so the
+      replay raises ``WALCorruption`` and the attach path quarantines
+      the unreadable suffix instead of serving from it.
+    """
 
     def __init__(self, path: str):
         self.path = path
@@ -102,8 +132,9 @@ class WriteAheadLog:
 
     def append(self, header: dict, payload: bytes) -> None:
         raw = json.dumps(header, separators=(",", ":")).encode("utf-8")
+        crc = zlib.crc32(payload, zlib.crc32(raw))
         with self._lock:
-            self._f.write(_WAL_HDR.pack(len(raw), len(payload)))
+            self._f.write(_WAL_HDR.pack(len(raw), len(payload), crc))
             self._f.write(raw)
             if payload:
                 self._f.write(payload)
@@ -116,18 +147,23 @@ class WriteAheadLog:
     @staticmethod
     def iter_records_with_end(path: str):
         """Yield (header, payload, end_offset) records, stopping at a torn
-        tail; ``end_offset`` is the byte offset just past the record."""
+        tail; ``end_offset`` is the byte offset just past the record.
+        Raises ``WALCorruption`` on a CRC-failed (altered) record."""
         with open(path, "rb") as f:
             off = 0
             while True:
                 head = f.read(_WAL_HDR.size)
                 if len(head) < _WAL_HDR.size:
                     return
-                hlen, plen = _WAL_HDR.unpack(head)
+                hlen, plen, crc = _WAL_HDR.unpack(head)
+                if hlen > _WAL_MAX_HLEN or plen > _WAL_MAX_PLEN:
+                    raise WALCorruption(path, off)
                 raw = f.read(hlen)
                 payload = f.read(plen)
                 if len(raw) < hlen or len(payload) < plen:
                     return  # torn tail: the op was never acked
+                if zlib.crc32(payload, zlib.crc32(raw)) != crc:
+                    raise WALCorruption(path, off)
                 off += _WAL_HDR.size + hlen + plen
                 yield json.loads(raw.decode("utf-8")), payload, off
 
@@ -136,6 +172,51 @@ class WriteAheadLog:
         """Yield (header, payload) records, stopping at a torn tail."""
         for header, payload, _ in WriteAheadLog.iter_records_with_end(path):
             yield header, payload
+
+
+def replay_wal(path: str, dispatch) -> tuple[int, int]:
+    """Replay a WAL's valid prefix through ``dispatch(header, payload)``.
+
+    Returns ``(records_replayed, quarantined_bytes)``.  A torn tail (an
+    unacked final record) is silently truncated, exactly as before; a
+    CRC-corrupt record quarantines everything from the corruption point
+    on into ``path + ".quarantine"`` and truncates the live log to its
+    valid prefix — the shard then serves the *prefix* state, never
+    garbage, and the supervisor rolls the affected workers back to the
+    surviving frontier (DESIGN.md §17.3).
+    """
+    replayed = 0
+    quarantined = 0
+    if not os.path.exists(path):
+        return 0, 0
+    valid_end = 0
+    corrupt = False
+    try:
+        for header, payload, end in WriteAheadLog.iter_records_with_end(path):
+            dispatch(header, payload)
+            replayed += 1
+            valid_end = end
+    except WALCorruption:
+        corrupt = True
+    size = os.path.getsize(path)
+    if valid_end < size:
+        if corrupt:
+            with open(path, "rb") as f:
+                f.seek(valid_end)
+                bad = f.read()
+            with open(path + ".quarantine", "ab") as q:
+                q.write(bad)
+                q.flush()
+            quarantined = len(bad)
+            print(f"WAL {path}: quarantined {quarantined} corrupt bytes "
+                  f"after record {replayed} (offset {valid_end})",
+                  flush=True)
+        # drop the bad/torn suffix BEFORE appending: a later record
+        # after garbage bytes would be unreachable to the next replay,
+        # silently voiding its 'acked => logged' guarantee
+        with open(path, "r+b") as f:
+            f.truncate(valid_end)
+    return replayed, quarantined
 
 
 class BrokerCore:
@@ -192,6 +273,7 @@ class BrokerCore:
         self.topo_gen = int(job.get("topo_gen", 0))
         self.migrations_applied: set[tuple[int, int]] = set()
         self._poll_cursor = 1  # next telemetry step the supervisor hasn't seen
+        self.wal_quarantined_bytes = 0  # corrupt WAL suffix dropped at attach
         self.stats: dict[str, dict[str, int]] = {}
         self.shutting_down = False
         self.shutdown_event = threading.Event()
@@ -215,23 +297,12 @@ class BrokerCore:
         """
         replayed = 0
         if replay and os.path.exists(path):
-            valid_end = 0
             self._replaying = True
             try:
-                for header, payload, end in (
-                    WriteAheadLog.iter_records_with_end(path)
-                ):
-                    self.handle(header, payload)
-                    replayed += 1
-                    valid_end = end
+                replayed, self.wal_quarantined_bytes = replay_wal(
+                    path, self.handle)
             finally:
                 self._replaying = False
-            if valid_end < os.path.getsize(path):
-                # drop a torn tail BEFORE appending: a later record after
-                # garbage bytes would be unreachable to the next replay,
-                # silently voiding its 'acked => logged' guarantee
-                with open(path, "r+b") as f:
-                    f.truncate(valid_end)
         self._wal = WriteAheadLog(path)
         return replayed
 
@@ -783,6 +854,10 @@ class BrokerCore:
                 "dup_mismatches": self.dup_mismatches,
                 **self._membership(),
             }
+            if self.wal_quarantined_bytes:
+                # key absent on the default path — response bytes stay
+                # baseline-identical with no corruption ever seen
+                resp["wal_quarantined"] = self.wal_quarantined_bytes
         return resp, b""
 
     def _op_dump(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
@@ -801,13 +876,16 @@ class BrokerCore:
 
     def _op_stats(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
         with self._lock:
-            return {
+            resp = {
                 "ok": True,
                 "shard_id": self.shard_id,
                 "stats": self.stats,
                 "update_bytes": self.update_bytes,
                 "dup_mismatches": self.dup_mismatches,
-            }, b""
+            }
+            if self.wal_quarantined_bytes:
+                resp["wal_quarantined"] = self.wal_quarantined_bytes
+            return resp, b""
 
     def _op_shutdown(self, h: dict, _p: bytes) -> tuple[dict, bytes]:
         with self._cond:
@@ -971,22 +1049,16 @@ class Broker:
         Identical to ``BrokerCore.attach_wal`` when there is one core."""
         replayed = 0
         if os.path.exists(path):
-            valid_end = 0
             for c in self.cores.values():
                 c._replaying = True
             try:
-                for header, payload, end in (
-                    WriteAheadLog.iter_records_with_end(path)
-                ):
-                    self.dispatch(header, payload)
-                    replayed += 1
-                    valid_end = end
+                replayed, quarantined = replay_wal(
+                    path, lambda h, p: self.dispatch(h, p))
             finally:
                 for c in self.cores.values():
                     c._replaying = False
-            if valid_end < os.path.getsize(path):
-                with open(path, "r+b") as f:
-                    f.truncate(valid_end)
+            for c in self.cores.values():
+                c.wal_quarantined_bytes = quarantined
         wal = WriteAheadLog(path)
         for c in self.cores.values():
             c._wal = wal
@@ -1056,13 +1128,16 @@ class Broker:
             target=self._server.serve_forever,
             kwargs={"poll_interval": 0.05},
             daemon=True,
+            name=f"broker-tcp-{self.core.shard_id}",
         )
         self._thread.start()
         return self.addr
 
-    def stop(self, timeout: float = 5.0) -> bool:
-        """Stop serving; returns False if the server thread failed to join
-        within ``timeout`` (a wedged handler the caller should surface)."""
+    def stop(self, timeout: float = 5.0) -> list[str]:
+        """Stop serving; returns the names of handler threads that failed
+        to join within ``timeout`` (empty list = clean stop).  A wedged
+        handler is also logged here — the one place the thread identity
+        is still known."""
         for core in self.cores.values():
             with core._cond:
                 core.shutting_down = True
@@ -1070,22 +1145,29 @@ class Broker:
             core.shutdown_event.set()
         self._server.shutdown()
         self._server.server_close()
-        joined = True
+        wedged: list[str] = []
         if self._thread is not None:
             self._thread.join(timeout=timeout)
-            joined = not self._thread.is_alive()
+            if self._thread.is_alive():
+                wedged.append(self._thread.name)
         with self._shm_lock:
             shm_threads = list(self._shm_threads.values())
         for t in shm_threads:  # they exit within one wait slice (~50 ms)
             t.join(timeout=timeout)
-            joined = joined and not t.is_alive()
+            if t.is_alive():
+                wedged.append(t.name)
         # cores share one WAL in fleet mode — close each distinct log once
         closed: set[int] = set()
         for core in self.cores.values():
             if core._wal is not None and id(core._wal) not in closed:
                 closed.add(id(core._wal))
                 core._wal.close()
-        return joined
+        if wedged:
+            print(
+                f"broker shard {self.core.shard_id}: handler threads "
+                f"failed to join within {timeout}s: {wedged}", flush=True,
+            )
+        return wedged
 
 
 def main() -> None:

@@ -191,6 +191,14 @@ class FleetScheduler:
                     f"job {jid}: scripted_retunes is not supported under "
                     "the fleet scheduler (use the solo supervisor)"
                 )
+            if c.chaos is not None:
+                # a chaos plan SIGKILLs shared slots/brokers — the blast
+                # radius crosses tenant boundaries; the legacy per-job
+                # kill_*_at_step knobs above remain the fleet's fault hooks
+                raise ValueError(
+                    f"job {jid}: chaos plans are not supported under the "
+                    "fleet scheduler (use the solo supervisor)"
+                )
         self.n_brokers = cfgs[0].n_brokers
         self.transport = cfgs[0].transport
         # admission: pin each job's run_dir inside the fleet's

@@ -40,6 +40,8 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import random
+import shutil
 import signal
 import subprocess
 import sys
@@ -57,6 +59,12 @@ from repro.core.autotuner import (
 from repro.core.billing import CommModel, FaaSBill, faas_cost
 from repro.runtime import protocol
 from repro.runtime import workload as workload_lib
+from repro.runtime.faults import (
+    SUPERVISOR_KINDS,
+    FaultEvent,
+    FaultPlan,
+    RetryPolicy,
+)
 from repro.wire import codec as wire_codec
 
 PyTree = Any
@@ -143,6 +151,14 @@ class FaaSJobConfig:
     # SIGKILL shard k right after its first migrate_read/migrate_in of a
     # handover — the replay-safety cell of the §16 failure matrix
     kill_broker_during_handover: Optional[int] = None
+    # deterministic chaos plane (runtime/faults.py, DESIGN.md §17): an
+    # expanded FaultPlan spec ({"seed": ..., "events": [...]}).  The
+    # legacy kill_*_at_step / straggler knobs above compile into the same
+    # plan, so every fault rides one mechanism
+    chaos: Optional[dict] = None
+    # unified RPC retry policy (faults.RetryPolicy.to_dict()) applied to
+    # the supervisor's and the workers' broker RPCs; None = defaults
+    rpc: Optional[dict] = None
     retain_updates: bool = False
     # housekeeping
     poll_interval_s: float = 0.05
@@ -152,8 +168,52 @@ class FaaSJobConfig:
     force_cpu: bool = True
     seed: int = 0
 
+    def compiled_chaos_plan(self) -> Optional[FaultPlan]:
+        """The job's effective fault plan: the explicit ``chaos`` spec
+        merged with the legacy one-off knobs — ``kill_worker_at_step`` /
+        ``kill_broker_at_step`` become supervisor kill events and
+        ``straggler`` a repeating ``compute_delay``, so every fault rides
+        the one seeded mechanism.  None when the job injects nothing."""
+        plan = FaultPlan.from_spec(self.chaos)
+        events = list(plan.events) if plan is not None else []
+        seed = plan.seed if plan is not None else 0
+        if self.kill_worker_at_step is not None:
+            w, at = self.kill_worker_at_step
+            events.append(FaultEvent("worker_kill", int(at), worker=int(w)))
+        if self.kill_broker_at_step is not None:
+            s, at = self.kill_broker_at_step
+            events.append(FaultEvent("broker_kill", int(at), shard=int(s)))
+        if self.straggler is not None:
+            st = self.straggler
+            events.append(FaultEvent(
+                "compute_delay", 0, worker=int(st["worker"]),
+                delay_s=float(st["delay_s"]), every=int(st.get("every", 1)),
+            ))
+        if not events:
+            return None
+        return FaultPlan(seed=seed, events=tuple(events)).validate()
+
+    def to_dict(self) -> dict:
+        """JSON round-trip for the out-of-process supervisor driver
+        (``faults.run_job_resilient``); inverse of ``from_dict``."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaaSJobConfig":
+        d = dict(d)
+        if d.get("tuner"):
+            d["tuner"] = AutoTunerConfig(**d["tuner"])
+        d["scripted_evict_steps"] = tuple(
+            d.get("scripted_evict_steps") or ())
+        d["scripted_retunes"] = tuple(
+            (int(s), dict(c)) for s, c in (d.get("scripted_retunes") or ()))
+        for k in ("kill_worker_at_step", "kill_broker_at_step"):
+            if d.get(k) is not None:
+                d[k] = tuple(d[k])
+        return cls(**d)
+
     def job_dict(self, n_batches: int) -> dict:
-        return {
+        d = {
             "workload": self.workload,
             "workload_cfg": dict(self.workload_cfg),
             "n_workers": self.n_workers,
@@ -180,6 +240,45 @@ class FaaSJobConfig:
             "pull_deadline_s": self.pull_deadline_s,
             "seed": self.seed,
         }
+        # keys absent on the default path: a chaos-free job's hello
+        # response stays byte-identical to the wire baseline (the
+        # 'straggler' key above is retained for the same reason — workers
+        # now read its semantics from the compiled plan)
+        plan = self.compiled_chaos_plan()
+        if plan is not None:
+            d["chaos"] = plan.to_spec()
+        if self.rpc is not None:
+            d["rpc"] = dict(self.rpc)
+        return d
+
+
+def _pid_alive(pid: Optional[int]) -> bool:
+    """Liveness via /proc — works for ADOPTED processes (not our children,
+    so waitpid is unavailable).  A zombie counts as dead: its exit status
+    belongs to init, and it will never publish again."""
+    if not pid:
+        return False
+    try:
+        with open(f"/proc/{pid}/stat") as f:
+            return f.read().rsplit(")", 1)[-1].split()[0] != "Z"
+    except OSError:
+        return False
+
+
+def _terminate_pid(pid: int, grace_s: float = 5.0) -> None:
+    """SIGTERM an adopted (non-child) process, escalating to SIGKILL."""
+    try:
+        os.kill(pid, signal.SIGTERM)
+    except OSError:
+        return
+    deadline = time.monotonic() + grace_s
+    while _pid_alive(pid) and time.monotonic() < deadline:
+        time.sleep(0.05)
+    if _pid_alive(pid):
+        try:
+            os.kill(pid, signal.SIGKILL)
+        except OSError:
+            pass
 
 
 @dataclasses.dataclass
@@ -188,6 +287,9 @@ class _Slot:
 
     worker: int
     proc: Optional[subprocess.Popen] = None
+    # pid re-adopted from a previous supervisor's journal (not our child:
+    # liveness comes from /proc, never waitpid)
+    adopted_pid: Optional[int] = None
     spawned_at: float = 0.0
     invocations: int = 0
     terminal: Optional[str] = None  # 'done' | 'evicted'
@@ -213,7 +315,13 @@ class _Slot:
 
     @property
     def alive(self) -> bool:
-        return self.proc is not None and self.proc.poll() is None
+        if self.proc is not None:
+            return self.proc.poll() is None
+        return _pid_alive(self.adopted_pid)
+
+    @property
+    def pid(self) -> Optional[int]:
+        return self.proc.pid if self.proc is not None else self.adopted_pid
 
 
 @dataclasses.dataclass
@@ -222,16 +330,36 @@ class _BrokerShard:
 
     shard: int
     proc: Optional[subprocess.Popen] = None
+    adopted_pid: Optional[int] = None  # re-adopted from a journal
     addr: Optional[tuple[str, int]] = None
     spawns: int = 0
 
     @property
     def alive(self) -> bool:
-        return self.proc is not None and self.proc.poll() is None
+        if self.proc is not None:
+            return self.proc.poll() is None
+        return _pid_alive(self.adopted_pid)
+
+    @property
+    def pid(self) -> Optional[int]:
+        return self.proc.pid if self.proc is not None else self.adopted_pid
+
+
+def _sigkill(obj) -> None:
+    """SIGKILL a slot's or shard's process, spawned or adopted."""
+    if obj.proc is not None:
+        if obj.proc.poll() is None:
+            obj.proc.send_signal(signal.SIGKILL)
+    elif obj.adopted_pid is not None:
+        try:
+            os.kill(obj.adopted_pid, signal.SIGKILL)
+        except OSError:
+            pass
 
 
 class Supervisor:
-    def __init__(self, cfg: FaaSJobConfig):
+    def __init__(self, cfg: FaaSJobConfig, *, allow_self_kill: bool = False,
+                 resume: bool = False):
         if cfg.transport not in ("tcp", "shm"):
             raise ValueError(
                 f"transport must be 'tcp' or 'shm', got {cfg.transport!r}"
@@ -274,6 +402,35 @@ class Supervisor:
                     "topology tuning is incompatible with prewarm: a "
                     "gated successor would span the epoch fence"
                 )
+        self.plan = cfg.compiled_chaos_plan()
+        if self.plan is not None:
+            for e in self.plan.events:
+                if e.worker is not None and not 0 <= e.worker < cfg.n_workers:
+                    raise ValueError(f"fault event targets worker "
+                                     f"{e.worker} of {cfg.n_workers}: {e}")
+                if e.shard is not None and not 0 <= e.shard < cfg.n_brokers:
+                    raise ValueError(f"fault event targets shard "
+                                     f"{e.shard} of {cfg.n_brokers}: {e}")
+            if any(e.kind == "supervisor_kill" for e in self.plan.events):
+                if not allow_self_kill:
+                    raise ValueError(
+                        "a supervisor_kill fault needs the out-of-process "
+                        "driver (faults.run_job_resilient) — an in-process "
+                        "supervisor cannot survive killing itself")
+                if cfg.topology_tune or cfg.scripted_retunes:
+                    raise ValueError(
+                        "supervisor_kill is incompatible with live "
+                        "re-sharding: handover state is not journaled")
+        self._allow_self_kill = allow_self_kill
+        self._resume = resume
+        # the journal only pays for itself when a successor could read it
+        self._journal_enabled = allow_self_kill or resume
+        self._resumed = 0
+        self._chaos_fired: set[int] = set()
+        self._chaos_pending: list[dict] = []
+        self.chaos_events: list[dict] = []
+        self.rpc_policy = RetryPolicy.from_dict(cfg.rpc)
+        self._t_job0 = time.monotonic()
         self.cfg = cfg
         self.wl = workload_lib.build(cfg.workload, cfg.workload_cfg)
         self.shards = [_BrokerShard(shard=s) for s in range(cfg.n_brokers)]
@@ -291,8 +448,6 @@ class Supervisor:
         self._frontier = 0
         self._poll_since = 1  # next telemetry step this supervisor hasn't seen
         self._scripted_fired = 0
-        self._killed_once = False
-        self._broker_killed_once = False
         self._stopping = False  # end-of-job: shard exits are intentional
         # shm transport: job-unique segment namespace + live segments
         # (the supervisor is the single owner of create/unlink)
@@ -409,6 +564,7 @@ class Supervisor:
             ),
             "wb",
         )
+        bs.adopted_pid = None
         bs.proc = subprocess.Popen(
             [
                 sys.executable,
@@ -462,11 +618,19 @@ class Supervisor:
             # with empty socket stats and a phantom respawn entry
             return
         for bs in self.shards:
-            if bs.proc is not None and bs.proc.poll() is not None:
+            exited = (
+                bs.proc.poll() is not None if bs.proc is not None
+                else bs.adopted_pid is not None
+                and not _pid_alive(bs.adopted_pid)
+            )
+            if exited:
                 self.broker_respawns.append(
                     {
                         "shard": bs.shard,
-                        "exit_code": bs.proc.returncode,
+                        "exit_code": (
+                            bs.proc.returncode if bs.proc is not None
+                            else None  # adopted: init reaped the status
+                        ),
                         "at_frontier": self._frontier,
                     }
                 )
@@ -575,6 +739,7 @@ class Supervisor:
                 "--transport", "shm",
                 "--shm-seg", self._setup_worker_shm(slot),
             ]
+        slot.adopted_pid = None
         slot.proc = subprocess.Popen(
             cmd,
             stdout=log,
@@ -763,11 +928,13 @@ class Supervisor:
 
     def _reap(self, slot: _Slot, statuses: dict) -> None:
         """Classify an exited process and respawn when the slot lives on."""
-        assert slot.proc is not None
-        code = slot.proc.returncode
+        assert slot.proc is not None or slot.adopted_pid is not None
+        # an adopted process was reaped by init: no exit code to read
+        code = slot.proc.returncode if slot.proc is not None else None
         self.lifetimes.append(time.monotonic() - slot.spawned_at)
         status = statuses.get(str(slot.worker), "")
         slot.proc = None
+        slot.adopted_pid = None
         if status == "bye:done":
             slot.terminal = "done"
             self._teardown_worker_shm(slot)
@@ -816,15 +983,22 @@ class Supervisor:
 
     def _rpc(
         self, header: dict, payload: bytes = b"", shard: int = 0,
-        tries: int = 8,
+        tries: Optional[int] = None,
     ) -> tuple[dict, bytes]:
         """Retrying RPC to one shard — must survive a shard respawn window
-        (the connection reconnects to the pinned port once it rebinds)."""
+        (the connection reconnects to the pinned port once it rebinds).
+        Attempt timeout, count, backoff and deadline all come from the
+        job's ``RetryPolicy`` (``cfg.rpc``; ``tries`` overrides the count
+        for callers with their own bound)."""
+        policy = (
+            self.rpc_policy if tries is None
+            else dataclasses.replace(self.rpc_policy, tries=tries)
+        )
         last: Optional[Exception] = None
-        for i in range(tries):
+        for _ in policy.attempts():
             if self._conns[shard] is None:
                 self._conns[shard] = protocol.Connection(
-                    self.shards[shard].addr, timeout=30.0
+                    self.shards[shard].addr, timeout=policy.timeout_s
                 )
             try:
                 return self._conns[shard].request(header, payload)
@@ -833,7 +1007,6 @@ class Supervisor:
                 self._conns[shard].close()
                 self._conns[shard] = None
                 self._reap_brokers()  # a dead shard blocks every retry
-                time.sleep(0.1 * (i + 1))
         assert last is not None
         raise last
 
@@ -1083,48 +1256,331 @@ class Supervisor:
                 slot.held = False
                 self._spawn(slot)
 
+    # -- chaos plane (runtime/faults.py, DESIGN.md §17) ------------------------
+
+    def _chaos_step(self) -> None:
+        """Fire due supervisor-side fault events, then settle in-flight
+        recoveries (a fault's ``recovery_s`` closes when the supervisor
+        observes the victim back: worker respawned, shard rebound)."""
+        if self.plan is not None:
+            for idx, e in enumerate(self.plan.events):
+                if (
+                    e.kind not in SUPERVISOR_KINDS
+                    or idx in self._chaos_fired
+                    or self._frontier < e.step
+                ):
+                    continue
+                self._chaos_fired.add(idx)
+                self._inject(idx, e)
+        self._settle_chaos()
+
+    def _inject(self, idx: int, e: FaultEvent) -> None:
+        rec = {"index": idx, "kind": e.kind, "step": e.step,
+               "at_frontier": self._frontier}
+        if e.kind == "worker_kill":
+            slot = self.slots[e.worker]
+            rec["worker"] = e.worker
+            if slot.terminal is not None or not slot.alive:
+                rec["skipped"] = "victim not running"
+                self.chaos_events.append(rec)
+                return
+            _sigkill(slot)
+            self._chaos_pending.append(
+                {"rec": rec, "t0": time.monotonic(), "kind": e.kind,
+                 "worker": e.worker, "invocations": slot.invocations})
+        elif e.kind in ("broker_kill", "wal_corrupt"):
+            bs = self.shards[e.shard]
+            rec["shard"] = e.shard
+            if not bs.alive:
+                rec["skipped"] = "shard not running"
+                self.chaos_events.append(rec)
+                return
+            _sigkill(bs)
+            if e.kind == "wal_corrupt":
+                rec["flipped_offset"] = self._flip_wal_byte(e.shard, idx)
+            self._chaos_pending.append(
+                {"rec": rec, "t0": time.monotonic(), "kind": e.kind,
+                 "shard": e.shard, "spawns": bs.spawns})
+        elif e.kind == "supervisor_kill":
+            # journal first (chaos_fired already holds this index, so the
+            # successor will not re-fire it), then die for real — no
+            # cleanup, no goodbye: the pool keeps running headless until
+            # the next supervisor re-adopts it from the journal
+            rec["killed_at_wall"] = time.time()
+            self.chaos_events.append(rec)
+            self._save_journal()
+            os.kill(os.getpid(), signal.SIGKILL)
+
+    def _flip_wal_byte(self, shard: int, idx: int) -> Optional[int]:
+        """Flip one seeded byte in the tail third of a (just-killed)
+        shard's WAL — the respawn's CRC check quarantines from there."""
+        assert self.plan is not None
+        path = os.path.join(self._broker_dir(), f"shard{shard:02d}.wal")
+        try:
+            size = os.path.getsize(path)
+        except OSError:
+            return None
+        if size == 0:
+            return None
+        rng = random.Random((self.plan.seed << 8) ^ (0x5A5A + idx))
+        pos = rng.randrange(size - max(size // 3, 1), size)
+        with open(path, "r+b") as f:
+            f.seek(pos)
+            b = f.read(1)
+            f.seek(pos)
+            f.write(bytes([b[0] ^ 0xFF]))
+            f.flush()
+            os.fsync(f.fileno())
+        return pos
+
+    def _settle_chaos(self) -> None:
+        still = []
+        for p in self._chaos_pending:
+            rec = p["rec"]
+            if p["kind"] == "worker_kill":
+                slot = self.slots[p["worker"]]
+                done = slot.terminal is not None or (
+                    slot.invocations > p["invocations"] and slot.alive)
+            else:  # broker_kill / wal_corrupt: settled once rebound
+                bs = self.shards[p["shard"]]
+                done = bs.spawns > p["spawns"] and bs.alive
+                if done and p["kind"] == "wal_corrupt":
+                    rec["rollback"] = self._quarantine_rollback(p["shard"])
+            if done:
+                rec["recovery_s"] = time.monotonic() - p["t0"]
+                self.chaos_events.append(rec)
+            else:
+                still.append(p)
+        self._chaos_pending = still
+
+    def _prune_checkpoints(self, worker: int, limit: int) -> list[int]:
+        from repro.checkpoint import store as ckpt
+
+        d = os.path.join(self.cfg.run_dir, "ckpt", f"w{worker:03d}")
+        pruned = []
+        for step in ckpt.all_steps(d):
+            if step > limit:
+                shutil.rmtree(os.path.join(d, f"step_{step:010d}"),
+                              ignore_errors=True)
+                pruned.append(step)
+        return pruned
+
+    def _quarantine_rollback(self, shard: int) -> list[dict]:
+        """Reconcile the pool with a shard that lost a WAL suffix.
+
+        The respawned shard's per-worker publish ``clocks`` are its
+        durable frontier — anything a worker published past its clock on
+        this shard is gone (quarantined, or silently torn off when the
+        flip hit a length field of the final record, which is why this
+        runs unconditionally after every wal_corrupt injection).  Roll
+        every non-terminal worker back to that frontier: SIGKILL it and
+        prune its checkpoints past the clock, so the normal crash-respawn
+        path replays forward and re-publishes the lost records
+        bit-identically (the other shards dup-check the duplicates)."""
+        bs = self.shards[shard]
+        try:
+            resp, _ = protocol.request(
+                bs.addr, {"t": "poll", "since": self.cfg.total_steps + 1},
+                timeout=10.0,
+            )
+        except (ConnectionError, OSError, TimeoutError):
+            return []  # shard died again; the next reap cycle recovers
+        clocks = {int(k): v for k, v in (resp.get("clocks") or {}).items()}
+        rolled = []
+        for slot in self.slots:
+            if slot.terminal is not None:
+                continue
+            limit = clocks.get(slot.worker, 0)
+            pruned = self._prune_checkpoints(slot.worker, limit)
+            if slot.alive:
+                _sigkill(slot)
+            rolled.append({"worker": slot.worker, "replay_from": limit,
+                           "pruned_ckpts": pruned})
+        return rolled
+
+    # -- crash journal + re-adoption (DESIGN.md §17.4) -------------------------
+
+    def _journal_path(self) -> str:
+        return os.path.join(self.cfg.run_dir, "supervisor.journal.json")
+
+    def _save_journal(self) -> None:
+        """Atomically persist everything a successor supervisor needs to
+        re-adopt the live pool: pids, ports, invocation counters and the
+        billing/telemetry accumulators.  Monotonic timestamps are stored
+        as wall-clock so the successor can rebase them onto its own
+        monotonic domain."""
+        if not self._journal_enabled:
+            return
+        now_m, now_w = time.monotonic(), time.time()
+        state = {
+            "version": 1,
+            "t_job0_wall": now_w - (now_m - self._t_job0),
+            "shm_token": self._shm_token,
+            "topology": self.topology,
+            "topo_gen": self.topo_gen,
+            "max_brokers": self._max_brokers,
+            "shards": [
+                {"shard": bs.shard,
+                 "addr": list(bs.addr) if bs.addr else None,
+                 "pid": bs.pid, "spawns": bs.spawns}
+                for bs in self.shards
+            ],
+            "slots": [
+                {"worker": s.worker, "pid": s.pid,
+                 "invocations": s.invocations, "terminal": s.terminal,
+                 "inv_start": s.inv_start,
+                 "spawned_wall": (
+                     now_w - (now_m - s.spawned_at) if s.spawned_at else None
+                 ),
+                 "shm_segs": list(s.shm_segs),
+                 "pre_pid": (
+                     s.pre_proc.pid if s.pre_proc is not None else None
+                 ),
+                 "pre_shm_segs": list(s.pre_shm_segs),
+                 "held": s.held}
+                for s in self.slots
+            ],
+            "lifetimes": self.lifetimes,
+            "evictions": self.evictions,
+            "scale_events": self.scale_events,
+            "respawns": self.respawns,
+            "broker_respawns": self.broker_respawns,
+            "cold_start_overlaps": self.cold_start_overlaps,
+            "retired_shard_stats": self.retired_shard_stats,
+            "topology_events": self.topology_events,
+            "scripted_fired": self._scripted_fired,
+            "chaos_fired": sorted(self._chaos_fired),
+            "chaos_events": self.chaos_events,
+            "resumed": self._resumed,
+        }
+        tmp = self._journal_path() + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(state, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._journal_path())
+
+    def _resume_from_journal(self) -> bool:
+        """Re-adopt a previous supervisor's pool from its journal.
+
+        Live brokers/workers are adopted by pid (they kept running
+        headless and never noticed the change of management); dead ones
+        respawn through the normal WAL-replay / checkpoint-replay paths.
+        Telemetry is re-polled from step 1 — the coordinator retains the
+        full history, so the resumed history is identical."""
+        path = self._journal_path()
+        if not self._resume or not os.path.exists(path):
+            return False
+        with open(path) as f:
+            st = json.load(f)
+        now_m, now_w = time.monotonic(), time.time()
+        self._t_job0 = now_m - (now_w - st["t_job0_wall"])
+        self._shm_token = st["shm_token"]
+        self.topology = st["topology"]
+        self.topo_gen = st["topo_gen"]
+        self._max_brokers = st["max_brokers"]
+        self.lifetimes = st["lifetimes"]
+        self.evictions = {int(k): v for k, v in st["evictions"].items()}
+        self.scale_events = st["scale_events"]
+        self.respawns = st["respawns"]
+        self.broker_respawns = st["broker_respawns"]
+        self.cold_start_overlaps = st["cold_start_overlaps"]
+        self.retired_shard_stats = st["retired_shard_stats"]
+        self.topology_events = st["topology_events"]
+        self._scripted_fired = st["scripted_fired"]
+        self._chaos_fired = set(st["chaos_fired"])
+        self.chaos_events = st["chaos_events"]
+        self._resumed = st.get("resumed", 0) + 1
+        adopted_b = adopted_w = 0
+        self.shards = []
+        self._conns = []
+        for js in st["shards"]:
+            bs = _BrokerShard(shard=js["shard"], spawns=js["spawns"])
+            bs.addr = tuple(js["addr"]) if js["addr"] else None
+            if _pid_alive(js["pid"]):
+                bs.adopted_pid = js["pid"]
+                adopted_b += 1
+            self.shards.append(bs)
+            self._conns.append(None)
+        for bs in self.shards:
+            if not bs.alive:  # spawns > 0: the WAL replays before binding
+                self._spawn_broker(bs)
+        self.slots = []
+        for js in st["slots"]:
+            s = _Slot(worker=js["worker"], invocations=js["invocations"],
+                      terminal=js["terminal"], inv_start=js["inv_start"],
+                      held=js["held"])
+            s.shm_segs = list(js["shm_segs"])
+            if js["spawned_wall"]:
+                s.spawned_at = now_m - (now_w - js["spawned_wall"])
+            if js["terminal"] is None and _pid_alive(js["pid"]):
+                s.adopted_pid = js["pid"]
+                adopted_w += 1
+            # a pre-warmed successor gated by the dead supervisor: its
+            # gate can never open from here — kill it and bill the
+            # (real, live-function) seconds it ran
+            if js["pre_pid"] and _pid_alive(js["pre_pid"]):
+                try:
+                    os.kill(js["pre_pid"], signal.SIGKILL)
+                except OSError:
+                    pass
+            self.slots.append(s)
+        # non-terminal slots that died alongside the supervisor respawn
+        # through the normal crash path (restore newest ckpt + replay)
+        for s in self.slots:
+            if s.terminal is None and not s.alive and not s.held:
+                self.respawns.append(
+                    {"worker": s.worker, "exit_code": None,
+                     "restored_step": self._restored_step(s),
+                     "at_frontier": self._frontier,
+                     "resume_orphan": True}
+                )
+                self._spawn(s)
+        # stamp recovery on the kill event that took the predecessor down
+        for rec in self.chaos_events:
+            if rec.get("kind") == "supervisor_kill" \
+                    and "recovery_s" not in rec:
+                rec["recovery_s"] = now_w - rec["killed_at_wall"]
+                rec["readopted"] = {"workers": adopted_w,
+                                    "brokers": adopted_b}
+        # the coordinator retains full telemetry: re-poll from step 1
+        self._poll_since = 1
+        self._frontier = 0
+        return True
+
     # -- main loop ------------------------------------------------------------
 
     def run(self) -> dict:
         cfg = self.cfg
         os.makedirs(cfg.run_dir, exist_ok=True)
-        t_job0 = time.monotonic()
+        self._t_job0 = time.monotonic()
         dump = None
         try:
-            self._start_brokers()
-            for slot in self.slots:
-                self._spawn(slot)
-            deadline = t_job0 + cfg.deadline_s
+            if not self._resume_from_journal():
+                self._start_brokers()
+                for slot in self.slots:
+                    self._spawn(slot)
+            self._save_journal()
+            deadline = self._t_job0 + cfg.deadline_s
             while True:
                 time.sleep(cfg.poll_interval_s)
                 self._reap_brokers()
                 resp = self._poll()
                 statuses = resp["statuses"]
 
-                # fault injection hooks (tests): real SIGKILL mid-epoch,
-                # on a worker or on a broker shard
-                if (
-                    cfg.kill_worker_at_step is not None
-                    and not self._killed_once
-                ):
-                    w, at = cfg.kill_worker_at_step
-                    slot = self.slots[w]
-                    if self._frontier >= at and slot.alive:
-                        slot.proc.send_signal(signal.SIGKILL)
-                        self._killed_once = True
-                if (
-                    cfg.kill_broker_at_step is not None
-                    and not self._broker_killed_once
-                ):
-                    s, at = cfg.kill_broker_at_step
-                    bs = self.shards[s]
-                    if self._frontier >= at and bs.alive:
-                        bs.proc.send_signal(signal.SIGKILL)
-                        self._broker_killed_once = True
+                # seeded fault injection (runtime/faults.py): SIGKILLs,
+                # WAL corruption, supervisor suicide — the chaos plane
+                # compiled from cfg.chaos + the legacy kill_* knobs
+                self._chaos_step()
 
                 for slot in self.slots:
-                    if slot.terminal is None and slot.proc is not None \
-                            and slot.proc.poll() is not None:
+                    exited = (
+                        slot.proc.poll() is not None
+                        if slot.proc is not None
+                        else slot.adopted_pid is not None
+                        and not _pid_alive(slot.adopted_pid)
+                    )
+                    if slot.terminal is None and exited:
                         # refresh statuses so a just-sent bye is not
                         # misread as a crash
                         statuses = self._poll()["statuses"]
@@ -1178,6 +1634,8 @@ class Supervisor:
                             if not self._initiate_retune(cell):
                                 self.topo_tuner.abandon()
 
+                self._save_journal()
+
                 if all(s.terminal is not None for s in self.slots):
                     self._poll()
                     break
@@ -1188,6 +1646,11 @@ class Supervisor:
                         f"logs in {os.path.join(cfg.run_dir, 'logs')}"
                     )
 
+            # a fault whose recovery the job's end beat to the punch
+            for p in self._chaos_pending:
+                p["rec"]["recovery_s"] = None
+                self.chaos_events.append(p["rec"])
+            self._chaos_pending = []
             if cfg.retain_updates:
                 dump = self._dump_updates()
             self._stopping = True
@@ -1198,10 +1661,16 @@ class Supervisor:
             # shards retired by a mid-job shrink already reported at
             # retirement; their socket stats belong in the same rollup
             shard_stats.extend(self.retired_shard_stats)
+            # clean completion: the journal has nothing left to recover
+            if self._journal_enabled:
+                try:
+                    os.unlink(self._journal_path())
+                except OSError:
+                    pass
         finally:
             for slot in self.slots:
                 if slot.alive:
-                    slot.proc.kill()
+                    _sigkill(slot)
                 if slot.pre_proc is not None and slot.pre_proc.poll() is None:
                     slot.pre_proc.kill()
             for conn in self._conns:
@@ -1215,13 +1684,15 @@ class Supervisor:
                         bs.proc.wait(timeout=5.0)
                     except subprocess.TimeoutExpired:
                         bs.proc.kill()
+                elif bs.adopted_pid is not None and _pid_alive(bs.adopted_pid):
+                    _terminate_pid(bs.adopted_pid)
             # the supervisor owns every shm segment: none may outlive the
             # job (they are named host-global resources, not fds)
             for seg in self._shm_segments.values():
                 seg.unlink()
             self._shm_segments.clear()
 
-        wall = time.monotonic() - t_job0
+        wall = time.monotonic() - self._t_job0
         # the topology bills what it runs: one Redis-analogue VM per shard
         # — the PEAK shard count under live re-sharding (a shard that ran
         # for part of the job still occupied a VM slot; honest upper bound)
@@ -1323,6 +1794,9 @@ class Supervisor:
         dup_mismatches = sum(
             int(r.get("dup_mismatches", 0)) for r in shard_stats
         )
+        wal_quarantined = sum(
+            int(r.get("wal_quarantined", 0)) for r in shard_stats
+        )
         result = {
             "workload": self.wl.name,
             "n_workers": self.cfg.n_workers,
@@ -1365,6 +1839,12 @@ class Supervisor:
             "n_invocations": len(self.lifetimes),
             "lifetimes_s": list(self.lifetimes),
             "dup_mismatches": dup_mismatches,
+            # chaos plane (runtime/faults.py): what fired, how long each
+            # recovery took, and what the WAL CRC check had to drop
+            "chaos": None if self.plan is None else self.plan.to_spec(),
+            "chaos_events": self.chaos_events,
+            "wal_quarantined_bytes": wal_quarantined,
+            "supervisor_resumed": self._resumed,
             "wall_s": wall,
             "bill": {
                 "worker_seconds": bill.worker_seconds,
@@ -1496,21 +1976,36 @@ def main() -> None:
     ap.add_argument("--prewarm", action="store_true")
     ap.add_argument("--run-dir", default="/tmp/repro_faas")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--config", default=None,
+                    help="JSON FaaSJobConfig (from_dict); overrides the "
+                         "per-field job flags")
+    ap.add_argument("--resume", action="store_true",
+                    help="re-adopt a previous supervisor's pool from its "
+                         "journal when one exists in run_dir")
+    ap.add_argument("--allow-self-kill", action="store_true",
+                    help="permit a supervisor_kill fault event (only safe "
+                         "under an external driver that re-executes us)")
     args = ap.parse_args()
-    cfg = FaaSJobConfig(
-        run_dir=args.run_dir,
-        workload=args.workload,
-        n_workers=args.workers,
-        total_steps=args.steps,
-        invocation_steps=args.invocation_steps,
-        n_brokers=args.n_brokers,
-        transport=args.transport,
-        consistency=args.consistency,
-        slack=args.slack,
-        autotune=args.autotune,
-        prewarm=args.prewarm,
-    )
-    res = run_job(cfg)
+    if args.config:
+        with open(args.config) as f:
+            cfg = FaaSJobConfig.from_dict(json.load(f))
+    else:
+        cfg = FaaSJobConfig(
+            run_dir=args.run_dir,
+            workload=args.workload,
+            n_workers=args.workers,
+            total_steps=args.steps,
+            invocation_steps=args.invocation_steps,
+            n_brokers=args.n_brokers,
+            transport=args.transport,
+            consistency=args.consistency,
+            slack=args.slack,
+            autotune=args.autotune,
+            prewarm=args.prewarm,
+        )
+    res = Supervisor(
+        cfg, allow_self_kill=args.allow_self_kill, resume=args.resume
+    ).run()
     slim = {k: v for k, v in res.items() if k not in ("history", "updates")}
     print(json.dumps(slim, indent=1, default=str))
     if args.out:

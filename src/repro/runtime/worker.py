@@ -64,31 +64,39 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import errno
 import os
 import threading
 import time
 from typing import Any, Optional
 
+from repro.runtime.faults import FaultPlan, RetryPolicy, WorkerFaults
+
 PyTree = Any
 
-# the broker-unreachable retry window: must comfortably cover a supervisor
-# shard respawn (detect + python start + WAL replay + bind), which a worker
-# rides out instead of dying into a full checkpoint-replay cold start
-_RPC_TRIES = 8
-_RPC_BACKOFF_S = 0.25
 
+def _make_rpc(conn, policy_fn):
+    """Retrying RPC over one persistent broker-shard connection.
 
-def _make_rpc(conn):
-    """Retrying RPC over one persistent broker-shard connection."""
+    The retry window (``RetryPolicy``, DESIGN.md §17.4) must comfortably
+    cover a supervisor shard respawn (detect + python start + WAL replay
+    + bind), which a worker rides out instead of dying into a full
+    checkpoint-replay cold start.  ``policy_fn`` is late-bound: the
+    job-configured policy only arrives with the hello response.
+    """
 
-    def _rpc(header, payload=b"", timeout=30.0, tries=_RPC_TRIES):
+    def _rpc(header, payload=b"", timeout=None):
+        policy: RetryPolicy = policy_fn()
         last: Optional[Exception] = None
-        for i in range(tries):
+        for _ in policy.attempts():
             try:
-                return conn.request(header, payload, timeout=timeout)
+                return conn.request(
+                    header, payload,
+                    timeout=timeout if timeout is not None
+                    else policy.timeout_s,
+                )
             except (ConnectionError, OSError, TimeoutError) as e:
                 last = e
-                time.sleep(_RPC_BACKOFF_S * (i + 1))
         raise SystemExit(4) from last
 
     return _rpc
@@ -172,38 +180,48 @@ def run_worker(
     # the coalesced data path (DESIGN.md §10.3) instead of a TCP connect
     # per message.  conns[0] is the coordinator.  The transport factory
     # (wire.framing.make_transport) is the ONLY transport-aware line.
+    # the bootstrap policy covers the hello round trip; the job-configured
+    # one (FaaSJobConfig.rpc) replaces it as soon as the hello response
+    # carries the job dict — per-worker reseed decorrelates the jitter
+    # streams of concurrent retry loops without losing determinism
+    rpc_policy = RetryPolicy().reseed(worker_id)
+
+    def _policy() -> RetryPolicy:
+        return rpc_policy
+
     n_shards = len(addrs)
     conns = [
         protocol.make_transport(
             transport,
             addr=a,
             shm_name=f"{shm_seg}s{s}" if shm_seg else None,
-            timeout=30.0,
+            timeout=rpc_policy.timeout_s,
         )
         for s, a in enumerate(addrs)
     ]
     # single-shard round trips (hello/batch/report/bye) go to the
     # coordinator; everything per-shard goes through the pipelined fanout
-    rpc0 = _make_rpc(conns[0])
+    rpc0 = _make_rpc(conns[0], _policy)
 
-    def fanout(shard_ids, headers, payloads=None, timeout=30.0):
+    def fanout(shard_ids, headers, payloads=None, timeout=None):
         """Pipelined RPC to several shards (send all, then collect all) —
         per-shard latencies overlap instead of summing, which is what
         makes the sharded store cheaper, not dearer, per barrier.  Retries
         whole rounds through a broker-shard respawn window; every op is
         idempotent so a replayed round is safe."""
+        policy = _policy()
         payloads = payloads or [b""] * len(shard_ids)
         last: Optional[Exception] = None
-        for i in range(_RPC_TRIES):
+        for _ in policy.attempts():
             try:
                 return protocol.pipelined(
                     [conns[s] for s in shard_ids],
                     list(zip(headers, payloads)),
-                    timeout=timeout,
+                    timeout=timeout if timeout is not None
+                    else policy.timeout_s,
                 )
             except (ConnectionError, OSError, TimeoutError) as e:
                 last = e
-                time.sleep(_RPC_BACKOFF_S * (i + 1))
         raise SystemExit(4) from last
 
     # fleet mode: tag every RPC with the job id (broker-side core routing)
@@ -221,6 +239,16 @@ def run_worker(
     job = hello["job"]
     members = _Membership(int(job["n_workers"]))
     members.update(hello)
+    if job.get("rpc"):
+        rpc_policy = RetryPolicy.from_dict(job["rpc"]).reseed(worker_id)
+    # chaos plane (runtime/faults.py, DESIGN.md §17): this worker's slice
+    # of the job's seeded fault plan — wire delays / stalls / resets,
+    # checkpoint write failures, straggler compute delays.  With no plan
+    # (the default) nothing installs and every hook stays dormant.
+    _plan = FaultPlan.from_spec(job.get("chaos"))
+    wfaults = WorkerFaults(_plan, worker_id) if _plan is not None else None
+    if wfaults is not None:
+        wfaults.install()
 
     # persistent jit cache under the run dir: later invocations (respawns,
     # invocation boundaries, every worker after the first) load compiled
@@ -254,10 +282,6 @@ def run_worker(
     # of barriering every step; 'isp' (default) is unchanged
     consistency = str(job.get("consistency", "isp"))
     slack = int(job.get("slack", 3))
-    # test/benchmark hook: {"worker": k, "delay_s": d, "every": n} makes
-    # worker k sleep d seconds on every n-th step, inside the measured
-    # compute phase — the injected straggler fig9 --live scores against
-    straggler = job.get("straggler") or None
     ckpt_dir = os.path.join(job["run_dir"], "ckpt", f"w{worker_id:03d}")
 
     params = wl.params0
@@ -287,17 +311,17 @@ def run_worker(
     last_saved = 0
 
     def restore_latest() -> None:
-        """Resume from the newest checkpoint (deferred past the prewarm
-        gate: a pre-warmed process must not read checkpoints the previous
-        invocation is still writing)."""
+        """Resume from the newest checkpoint whose content digest
+        verifies, falling back generation by generation past corrupt
+        ones (DESIGN.md §17.3) — deferred past the prewarm gate: a
+        pre-warmed process must not read checkpoints the previous
+        invocation is still writing."""
         nonlocal params, opt_state, residual, start_step, last_saved
-        latest = ckpt.latest_step(ckpt_dir)
+        latest, tree = ckpt.restore_latest_valid(
+            ckpt_dir,
+            {"params": params, "opt": opt_state, "residual": residual},
+        )
         if latest is not None:
-            tree = ckpt.restore(
-                ckpt_dir,
-                latest,
-                {"params": params, "opt": opt_state, "residual": residual},
-            )
             params, opt_state, residual = (
                 tree["params"], tree["opt"], tree["residual"],
             )
@@ -340,15 +364,36 @@ def run_worker(
         nonlocal last_saved
         if step_done <= 0 or step_done == last_saved:
             return
-        ckpt.save(
-            ckpt_dir,
-            step_done,
-            {"params": params, "opt": opt_state, "residual": residual},
-            extra={"worker": worker_id, "next_step": step_done + 1},
-        )
+        if wfaults is not None and wfaults.ckpt_should_fail(step_done):
+            # simulated ENOSPC at the worst moment: after the staged npz
+            # is written, before the atomic install — the store's staging
+            # contract keeps the partial snapshot invisible
+            def _enospc(tmp: str) -> None:
+                raise OSError(errno.ENOSPC, "chaos: injected ENOSPC", tmp)
+
+            ckpt.install_write_fault_hook(_enospc)
+        try:
+            ckpt.save(
+                ckpt_dir,
+                step_done,
+                {"params": params, "opt": opt_state, "residual": residual},
+                extra={"worker": worker_id, "next_step": step_done + 1},
+            )
+        except OSError as e:
+            # a failed checkpoint write is survivable: the previous
+            # generation stays restorable and replay covers the gap —
+            # warn and train on rather than crash the invocation
+            print(f"worker {worker_id}: checkpoint save at step "
+                  f"{step_done} failed ({e}); continuing on the previous "
+                  f"generation", flush=True)
+            return
+        finally:
+            ckpt.clear_write_fault_hook()
         last_saved = step_done
 
     def bye(reason: str) -> None:
+        if wfaults is not None:
+            wfaults.uninstall()  # the farewell RPCs run fault-free
         rpc0({"t": "bye", "worker": worker_id, "reason": reason, **jtag})
         for c in conns:
             c.close()
@@ -367,11 +412,13 @@ def run_worker(
         while pending:
             if stop_event is not None and stop_event.is_set():
                 return 7, None
+            # the 2 s timeout_s is protocol, not retry policy: the server
+            # parks the long poll for one slice and answers not-ready, so
+            # the client-side attempt bound is the policy's timeout_s
             resps = fanout(
                 pending,
                 [{"t": "pull", "worker": worker_id, "step": step,
                   "timeout_s": 2.0, **jtag} for _ in pending],
-                timeout=10.0,
             )
             nxt = []
             for s, (resp, blob) in zip(pending, resps):
@@ -490,6 +537,8 @@ def run_worker(
     steps_this_invocation = 0
     key_next: Optional[int] = None  # piggybacked by the previous pull
     while True:
+        if wfaults is not None:
+            wfaults.at_step(t)  # arm this step's wire/checkpoint events
         ev = members.my_evict_step(worker_id)
         # an eviction effective past the job's end is a no-op (the broker
         # refuses to grant those, but guard anyway): finish as 'done'
@@ -602,15 +651,15 @@ def run_worker(
                     )
                 )
             )
-        if (
-            straggler is not None
-            and worker_id == int(straggler["worker"])
-            and t % max(int(straggler.get("every", 1)), 1) == 0
-        ):
-            # injected stall, counted into this worker's measured compute
-            # phase — the peers' barrier exposure to it is what the two
-            # consistency models price differently
-            time.sleep(float(straggler["delay_s"]))
+        if wfaults is not None:
+            # injected straggler stall (compute_delay events — what the
+            # old ad-hoc ``straggler`` knob compiled into), counted into
+            # this worker's measured compute phase: the peers' barrier
+            # exposure to it is what the consistency models price
+            # differently
+            delay = wfaults.compute_delay_s(t)
+            if delay > 0.0:
+                time.sleep(delay)
         t_compute = tp()
         # -- encode: shared wire codec, sliced per shard; quantization
         #    error (if any) is error-feedback — it joins the residual,

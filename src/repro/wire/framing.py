@@ -31,6 +31,35 @@ MAX_MSG_BYTES = 1 << 31  # sanity bound on a single message
 
 Payload = Union[bytes, bytearray, memoryview, list]
 
+# -- fault-injection seam (runtime/faults.py, DESIGN.md §17) ------------------
+#
+# A process-global hook called at the client-side transport boundary:
+# ``hook(side, header)`` with side in {"send", "recv"} immediately before
+# the corresponding half of a round trip.  The hook may sleep (frame
+# delay / stall) or raise ConnectionError (connection reset) — raising
+# lands inside the transports' existing reconnect-and-replay path, so an
+# injected reset exercises the REAL recovery machinery.  ``None`` (the
+# default) costs one attribute load per call and nothing else: the
+# default path stays byte-identical with the hook dormant.
+
+_chaos_hook = None
+
+
+def install_chaos_hook(fn) -> None:
+    global _chaos_hook
+    _chaos_hook = fn
+
+
+def clear_chaos_hook() -> None:
+    global _chaos_hook
+    _chaos_hook = None
+
+
+def chaos(side: str, header: dict) -> None:
+    hook = _chaos_hook
+    if hook is not None:
+        hook(side, header)
+
 
 def _as_views(payload: Payload) -> list[memoryview]:
     parts = payload if isinstance(payload, list) else [payload]
@@ -206,7 +235,9 @@ class Connection:
                     sock = self._connect()
                 sock.settimeout(timeout if timeout is not None
                                 else self.timeout)
+                chaos("send", header)
                 send_msg(sock, header, payload)
+                chaos("recv", header)
                 return recv_msg(sock)
             except (ConnectionError, OSError, TimeoutError) as e:
                 last = e
@@ -235,6 +266,7 @@ class Connection:
                     sock = self._connect()
                 sock.settimeout(timeout if timeout is not None
                                 else self.timeout)
+                chaos("send", header)
                 send_msg(sock, header, payload)
                 return
             except (ConnectionError, OSError, TimeoutError):
@@ -251,6 +283,7 @@ class Connection:
         self._sock.settimeout(timeout if timeout is not None
                               else self.timeout)
         try:
+            chaos("recv", {})
             return recv_msg(self._sock)
         except (ConnectionError, OSError, TimeoutError):
             self.close()  # never leave a half-read stream behind

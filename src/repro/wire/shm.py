@@ -54,6 +54,7 @@ import time
 from multiprocessing import shared_memory
 from typing import Callable, Optional
 
+from repro.wire import framing
 from repro.wire.framing import Payload, _as_views
 
 # -- futex(2) wakeup (Linux) with portable polling fallback -------------------
@@ -880,6 +881,7 @@ class ShmConnection:
         t = timeout if timeout is not None else self.timeout
         for attempt in range(2):
             try:
+                framing.chaos("send", header)
                 self._ensure()
                 seg = self._seg
                 assert seg is not None
@@ -913,6 +915,7 @@ class ShmConnection:
         t = timeout if timeout is not None else self.timeout
         deadline = time.monotonic() + t
         try:
+            framing.chaos("recv", {})
             while True:
                 rid, hdr, payload = recv_frame(self._rsp, deadline)  # type: ignore[arg-type]
                 if rid == self._rid:

@@ -171,14 +171,15 @@ class BrokerCluster:
         )
 
     def close(self, timeout: float = 5.0) -> None:
-        wedged = [
-            b.core.shard_id for b in self.brokers
-            if not b.stop(timeout=timeout)
-        ]
+        wedged = {
+            b.core.shard_id: threads
+            for b in self.brokers
+            if (threads := b.stop(timeout=timeout))
+        }
         if wedged:
             raise RuntimeError(
-                f"broker shard(s) {wedged} did not shut down within "
-                f"{timeout}s (wedged handler thread)"
+                f"broker shard(s) did not shut down within {timeout}s "
+                f"(wedged handler threads by shard: {wedged})"
             )
 
     def __enter__(self) -> "BrokerCluster":

@@ -1,0 +1,502 @@
+"""Chaos-plane tests (repro.runtime.faults, DESIGN.md §17).
+
+Three tiers, cheapest first:
+
+* pure-function tests of the seeded ``FaultPlan`` expansion, event
+  validation, ``--chaos`` parsing, the ``RetryPolicy`` backoff math and
+  the worker-side event arming (no processes, no filesystem);
+* integrity tests of the hardened stores: the WAL single-byte-flip
+  property (ANY flipped byte yields a bit-identical valid prefix plus a
+  clean quarantine/truncate — never wrong state) and the checkpoint
+  content-digest fallback (a corrupt newest generation is skipped, an
+  injected ENOSPC never installs a partial snapshot);
+* end-to-end runs on the real multi-process runtime: a multi-fault plan
+  (worker SIGKILL + every transport fault + straggler + ckpt ENOSPC)
+  must finish bit-identical to the fault-free ``core.isp`` reference,
+  and a ``supervisor_kill`` driven through ``run_job_resilient`` must
+  journal-resume, re-adopt the pool and land on the same bits.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import store as ckpt
+from repro.runtime.broker import Broker, WriteAheadLog, replay_wal
+from repro.runtime.faults import (
+    FaultEvent,
+    FaultPlan,
+    RetryPolicy,
+    WorkerFaults,
+    parse_chaos_arg,
+    run_job_resilient,
+)
+
+from runtime_harness import (
+    SMALL_P as P,
+    final_params,
+    reference_updates,
+    small_pmf_cfg,
+)
+
+
+# -- seeded plan expansion ----------------------------------------------------
+
+
+def test_randomized_plan_is_pure_function_of_seed():
+    a = FaultPlan.randomized(1013, n_workers=3, n_shards=2, total_steps=24)
+    b = FaultPlan.randomized(1013, n_workers=3, n_shards=2, total_steps=24)
+    assert a == b  # same seed -> identical schedule, always
+    assert a != FaultPlan.randomized(
+        1014, n_workers=3, n_shards=2, total_steps=24
+    )
+    # one event of every default kind, victims in range, steps leaving
+    # room to recover on both sides
+    counts = a.counts()
+    for kind in ("worker_kill", "broker_kill", "wal_corrupt",
+                 "transport_stall", "supervisor_kill"):
+        assert counts.get(kind, 0) >= 1
+    for e in a.events:
+        assert 3 <= e.step <= 24 - 6
+        if e.worker is not None:
+            assert 0 <= e.worker < 3
+        if e.shard is not None:
+            assert 0 <= e.shard < 2
+
+
+def test_randomized_plan_requires_room_to_recover():
+    with pytest.raises(ValueError, match="total_steps"):
+        FaultPlan.randomized(1, n_workers=2, n_shards=1, total_steps=11)
+
+
+def test_event_validation_rejects_malformed_events():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent("meteor_strike", 3).validate()
+    with pytest.raises(ValueError, match="step"):
+        FaultEvent("worker_kill", -1, worker=0).validate()
+    with pytest.raises(ValueError, match="worker="):
+        FaultEvent("worker_kill", 3).validate()
+    with pytest.raises(ValueError, match="shard="):
+        FaultEvent("broker_kill", 3).validate()
+    with pytest.raises(ValueError, match="delay_s"):
+        FaultEvent("transport_stall", 3, worker=0).validate()
+
+
+def test_plan_spec_roundtrip():
+    plan = FaultPlan.randomized(7, n_workers=3, n_shards=2, total_steps=20)
+    assert FaultPlan.from_spec(plan.to_spec()) == plan
+    assert FaultPlan.from_spec(None) is None
+
+
+def test_parse_chaos_arg():
+    auto = parse_chaos_arg("7:auto", n_workers=3, n_shards=2,
+                           total_steps=24)
+    assert auto == FaultPlan.randomized(7, 3, 2, 24)
+    explicit = parse_chaos_arg(
+        '5:[{"kind": "worker_kill", "step": 4, "worker": 1}]',
+        n_workers=3, n_shards=1, total_steps=8,
+    )
+    assert explicit.seed == 5
+    assert explicit.events == (FaultEvent("worker_kill", 4, worker=1),)
+    for bad in ("x:auto", "7:", '7:[{"kind": "nope", "step": 1}]'):
+        with pytest.raises(SystemExit, match="--chaos"):
+            parse_chaos_arg(bad, n_workers=3, n_shards=1, total_steps=24)
+
+
+def test_legacy_knobs_compile_into_the_plan(tmp_path):
+    cfg = small_pmf_cfg(
+        tmp_path / "job",
+        kill_worker_at_step=(1, 3),
+        straggler={"worker": 0, "delay_s": 0.1, "every": 2},
+    )
+    plan = cfg.compiled_chaos_plan()
+    assert plan.counts() == {"worker_kill": 1, "compute_delay": 1}
+    kill = next(e for e in plan.events if e.kind == "worker_kill")
+    assert (kill.worker, kill.step) == (1, 3)
+    # the compiled plan ships to workers through job_dict
+    assert cfg.job_dict(n_batches=5)["chaos"] == plan.to_spec()
+
+
+def test_no_knobs_means_no_plan_and_no_wire_key(tmp_path):
+    cfg = small_pmf_cfg(tmp_path / "job")
+    assert cfg.compiled_chaos_plan() is None
+    # dormancy at the wire level: the hello bytes carry no chaos/rpc keys
+    # unless set, so default runs stay byte-identical to pre-chaos builds
+    d = cfg.job_dict(n_batches=5)
+    assert "chaos" not in d and "rpc" not in d
+
+
+def test_config_roundtrips_through_json(tmp_path):
+    import json
+
+    cfg = small_pmf_cfg(
+        tmp_path / "job",
+        chaos={"seed": 3, "events": [
+            {"kind": "worker_kill", "step": 4, "worker": 0}]},
+        rpc={"timeout_s": 5.0, "tries": 3},
+    )
+    from repro.runtime.supervisor import FaaSJobConfig
+
+    back = FaaSJobConfig.from_dict(json.loads(json.dumps(cfg.to_dict())))
+    assert back == cfg
+
+
+# -- retry policy -------------------------------------------------------------
+
+
+def test_retry_policy_backoff_is_deterministic_and_bounded():
+    p = RetryPolicy(backoff_s=0.25, backoff_cap_s=2.0, seed=7)
+    again = RetryPolicy(backoff_s=0.25, backoff_cap_s=2.0, seed=7)
+    for i in range(8):
+        b = p.backoff(i)
+        assert b == again.backoff(i)  # same seed -> same jitter
+        base = min(2.0, 0.25 * 2.0 ** i)
+        assert 0.5 * base <= b <= base  # full jitter in [0.5, 1.0] * base
+
+
+def test_retry_policy_attempts_bounded_by_tries():
+    p = RetryPolicy(tries=3, backoff_s=0.001, backoff_cap_s=0.002,
+                    deadline_s=10.0)
+    assert list(p.attempts()) == [0, 1, 2]
+
+
+def test_retry_policy_deadline_stops_the_loop():
+    # first pause (>= 0.1s) would already blow the 50 ms deadline
+    p = RetryPolicy(tries=50, backoff_s=0.2, backoff_cap_s=0.2,
+                    deadline_s=0.05)
+    assert list(p.attempts()) == [0]
+
+
+def test_retry_policy_reseed_decorrelates_callers():
+    p = RetryPolicy(seed=1)
+    assert len({p.seed, p.reseed(3).seed, p.reseed(4).seed}) == 3
+
+
+def test_rpc_policy_flows_from_job_config(tmp_path):
+    from repro.runtime.supervisor import Supervisor
+
+    cfg = small_pmf_cfg(tmp_path / "job",
+                        rpc={"timeout_s": 5.0, "tries": 3})
+    sup = Supervisor(cfg)
+    assert sup.rpc_policy.timeout_s == 5.0
+    assert sup.rpc_policy.tries == 3
+    assert sup.rpc_policy.deadline_s == 120.0  # unset fields keep defaults
+
+
+# -- worker-side event arming -------------------------------------------------
+
+
+def test_worker_faults_compute_delay_schedule():
+    plan = FaultPlan(events=(
+        FaultEvent("compute_delay", 4, worker=0, delay_s=0.5, every=3),
+        FaultEvent("compute_delay", 2, worker=0, delay_s=0.25),
+    ))
+    wf = WorkerFaults(plan, worker_id=0)
+    assert wf.compute_delay_s(1) == 0.0
+    assert wf.compute_delay_s(2) == 0.25  # one-shot fires exactly once
+    assert wf.compute_delay_s(3) == 0.0
+    assert wf.compute_delay_s(4) == 0.5  # every=3: steps 4, 7, 10, ...
+    assert wf.compute_delay_s(5) == 0.0
+    assert wf.compute_delay_s(7) == 0.5
+    # another worker's view of the same plan is empty
+    assert WorkerFaults(plan, worker_id=1).compute_delay_s(4) == 0.0
+
+
+def test_worker_faults_ckpt_enospc_fires_once():
+    plan = FaultPlan(events=(FaultEvent("ckpt_enospc", 6, worker=2),))
+    wf = WorkerFaults(plan, worker_id=2)
+    assert not wf.ckpt_should_fail(4)  # not armed yet
+    assert wf.ckpt_should_fail(8)  # first checkpoint at/after the step
+    assert not wf.ckpt_should_fail(8)  # one-shot
+
+
+# -- WAL integrity: the single-byte-flip property -----------------------------
+
+
+def _write_wal(path: str) -> list:
+    wal = WriteAheadLog(path)
+    records = []
+    for i in range(6):
+        header = {"t": "publish", "worker": i % 3, "step": i}
+        payload = bytes((i * 37 + j) % 256 for j in range(48 + 16 * i))
+        wal.append(header, payload)
+        records.append((header, payload))
+    wal.close()
+    return records
+
+
+def test_wal_any_single_byte_flip_yields_prefix_or_quarantine(tmp_path):
+    """Flip EVERY byte of a WAL, one at a time: replay must always yield a
+    bit-identical strict prefix of the original records — via CRC
+    quarantine or torn-tail truncation — and never a wrong record."""
+    src = tmp_path / "src.wal"
+    records = _write_wal(str(src))
+    blob = src.read_bytes()
+    path = str(tmp_path / "flip.wal")
+    qpath = path + ".quarantine"
+    for off in range(len(blob)):
+        corrupted = bytearray(blob)
+        corrupted[off] ^= 0xFF
+        with open(path, "wb") as f:
+            f.write(bytes(corrupted))
+        if os.path.exists(qpath):
+            os.unlink(qpath)
+        out = []
+        replayed, quarantined = replay_wal(
+            path, lambda h, p: out.append((h, p)))
+        assert replayed == len(out) < len(records), f"offset {off}"
+        assert out == records[:len(out)], f"offset {off}: wrong state"
+        if quarantined:
+            assert os.path.getsize(qpath) == quarantined
+        # the live log was truncated to its valid prefix: a second replay
+        # is clean and identical (what a respawned shard actually sees)
+        out2 = []
+        assert replay_wal(path, lambda h, p: out2.append((h, p))) == (
+            replayed, 0)
+        assert out2 == out
+
+
+def test_wal_clean_log_replays_fully(tmp_path):
+    path = str(tmp_path / "ok.wal")
+    records = _write_wal(path)
+    out = []
+    assert replay_wal(path, lambda h, p: out.append((h, p))) == (
+        len(records), 0)
+    assert out == records
+    assert not os.path.exists(path + ".quarantine")
+
+
+# -- checkpoint integrity -----------------------------------------------------
+
+
+def _corrupt_newest_arrays(directory: str, step: int) -> None:
+    """Flip one stored value inside the npz WITHOUT touching the embedded
+    manifest — the digest-mismatch case (a torn/garbled npz would fail
+    the load itself; this is the nastier silent-bit-rot shape)."""
+    path = os.path.join(directory, f"step_{step:010d}", "arrays.npz")
+    data = dict(np.load(path))
+    key = next(k for k in sorted(data) if k != "__manifest__")
+    arr = data[key].copy()
+    flat = arr.reshape(-1).view(np.uint8)
+    flat[0] ^= 0xFF
+    data[key] = arr
+    np.savez(path, **data)
+
+
+def test_ckpt_digest_mismatch_falls_back_to_previous_generation(tmp_path):
+    d = str(tmp_path / "ck")
+    t2 = {"a": np.arange(32, dtype=np.float32),
+          "b": np.ones((4, 4), np.float32)}
+    t4 = {"a": t2["a"] * 2.0, "b": t2["b"] * 3.0}
+    ckpt.save(d, 2, t2)
+    ckpt.save(d, 4, t4)
+    _corrupt_newest_arrays(d, 4)
+    with pytest.raises(ckpt.CheckpointCorruption):
+        ckpt.restore(d, 4, t4)
+    step, got = ckpt.restore_latest_valid(d, t2)
+    assert step == 2  # the corrupt generation was skipped, not served
+    for k in t2:
+        np.testing.assert_array_equal(got[k], t2[k])
+
+
+def test_ckpt_restore_latest_valid_cold_start(tmp_path):
+    assert ckpt.restore_latest_valid(str(tmp_path / "none"), {}) == (
+        None, None)
+
+
+def test_ckpt_enospc_never_installs_a_partial_snapshot(tmp_path):
+    d = str(tmp_path / "ck")
+    t = {"a": np.arange(16, dtype=np.float32)}
+    ckpt.save(d, 1, t)
+
+    def boom(tmp_dir):
+        raise OSError(28, "No space left on device")
+
+    ckpt.install_write_fault_hook(boom)
+    try:
+        with pytest.raises(OSError):
+            ckpt.save(d, 2, t)
+    finally:
+        ckpt.clear_write_fault_hook()
+    # the failed write is invisible: no new generation, no staging litter
+    assert ckpt.latest_step(d) == 1
+    assert not [e for e in os.listdir(d) if ".tmp-" in e]
+    # and the store still works once space is back
+    ckpt.save(d, 2, t)
+    assert ckpt.latest_step(d) == 2
+
+
+# -- broker shutdown ----------------------------------------------------------
+
+
+def test_broker_stop_reports_no_wedged_threads_on_clean_shutdown():
+    b = Broker({
+        "workload": "pmf",
+        "workload_cfg": {},
+        "n_workers": 2,
+        "total_steps": 10,
+        "n_batches": 5,
+    })
+    b.start()
+    assert b.stop(timeout=5.0) == []
+
+
+# -- guardrails ---------------------------------------------------------------
+
+
+def test_supervisor_kill_refused_in_process(tmp_path):
+    from repro.runtime import run_job
+
+    cfg = small_pmf_cfg(
+        tmp_path / "job",
+        chaos={"seed": 1, "events": [{"kind": "supervisor_kill",
+                                      "step": 3}]},
+    )
+    with pytest.raises(ValueError, match="supervisor_kill"):
+        run_job(cfg)
+
+
+def test_fleet_scheduler_rejects_chaos_plans(tmp_path):
+    from repro.runtime.scheduler import FleetConfig, FleetScheduler
+
+    cfg = small_pmf_cfg(
+        tmp_path / "jobs" / "a",
+        chaos={"seed": 1, "events": [{"kind": "worker_kill", "step": 3,
+                                      "worker": 0}]},
+    )
+    with pytest.raises(ValueError, match="chaos"):
+        FleetScheduler(FleetConfig(run_dir=str(tmp_path),
+                                   jobs={"a": cfg}))
+
+
+# -- end-to-end: multi-fault plan on the live runtime -------------------------
+
+CHAOS_STEPS = 12
+CHAOS_CKPT_EVERY = 4
+# one event on every worker-side seam plus a real SIGKILL, all recoverable
+CHAOS_EVENTS = [
+    {"kind": "compute_delay", "step": 2, "worker": 1, "delay_s": 0.05,
+     "every": 3},
+    {"kind": "transport_stall", "step": 3, "worker": 0, "delay_s": 0.3},
+    {"kind": "transport_delay", "step": 4, "worker": 2, "delay_s": 0.2},
+    {"kind": "worker_kill", "step": 5, "worker": 1},
+    {"kind": "transport_reset", "step": 6, "worker": 2},
+    {"kind": "ckpt_enospc", "step": 6, "worker": 0},
+]
+
+
+@pytest.fixture(scope="module")
+def chaos_run(tmp_path_factory):
+    """One shared multi-fault run (real processes are expensive)."""
+    from repro.runtime import run_job
+
+    tmp = tmp_path_factory.mktemp("chaos_e2e")
+    cfg = small_pmf_cfg(
+        tmp / "job",
+        total_steps=CHAOS_STEPS,
+        checkpoint_every=CHAOS_CKPT_EVERY,
+        deadline_s=240.0,
+        chaos={"seed": 11, "events": CHAOS_EVENTS},
+    )
+    return cfg, run_job(cfg)
+
+
+def test_chaos_run_completes_every_step(chaos_run):
+    _, res = chaos_run
+    assert res["steps"] == CHAOS_STEPS
+    assert res["final_pool"] == P
+    assert res["dup_mismatches"] == 0
+    assert res["invariant_max_err"] == 0.0
+
+
+def test_chaos_worker_kill_fired_and_recovered(chaos_run):
+    _, res = chaos_run
+    kills = [e for e in res["chaos_events"] if e["kind"] == "worker_kill"]
+    assert len(kills) == 1 and kills[0]["worker"] == 1
+    assert kills[0]["recovery_s"] is not None  # settled before job end
+    assert res["n_respawns"] >= 1
+    ev = res["respawns"][0]
+    assert ev["worker"] == 1 and ev["exit_code"] == -9
+    assert ev["restored_step"] % CHAOS_CKPT_EVERY == 0
+
+
+def test_chaos_final_params_bit_identical_to_reference(chaos_run):
+    """The whole point of the plane: a run under every injected fault
+    lands on the SAME bits as the fault-free core.isp reference."""
+    import jax
+
+    cfg, _ = chaos_run
+    _, ref = reference_updates(steps=CHAOS_STEPS)
+    for w in range(P):
+        _, params = final_params(cfg, w)
+        got = jax.tree_util.tree_leaves(params)
+        want = jax.tree_util.tree_leaves(ref[w])
+        assert len(got) == len(want)
+        for g, x in zip(got, want):
+            assert np.array_equal(np.asarray(g), np.asarray(x)), (
+                f"worker {w} diverged from the reference replay")
+
+
+def test_ckpt_fallback_on_real_run_artifacts(chaos_run):
+    """Corrupt the newest checkpoint generation a real worker wrote
+    (copied aside) and require the restore walk to serve the previous
+    generation — the path a respawned worker takes after silent rot."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import optim
+    from repro.runtime import build_workload
+
+    cfg, _ = chaos_run
+    src = os.path.join(cfg.run_dir, "ckpt", "w002")
+    steps = ckpt.all_steps(src)
+    assert len(steps) >= 2  # periodic + final generations are retained
+    d = os.path.join(src + ".copy")
+    shutil.copytree(src, d)
+    _corrupt_newest_arrays(d, steps[-1])
+
+    wl = build_workload(cfg.workload, cfg.workload_cfg)
+    opt = optim.make(cfg.optimizer, cfg.lr)
+    like = {
+        "params": wl.params0,
+        "opt": opt.init(wl.params0),
+        "residual": jax.tree.map(jnp.zeros_like, wl.params0),
+    }
+    step, tree = ckpt.restore_latest_valid(d, like)
+    assert step == steps[-2] and tree is not None
+
+
+# -- end-to-end: supervisor self-kill + journal resume ------------------------
+
+
+def test_supervisor_kill_resumes_and_stays_bit_identical(tmp_path):
+    import jax
+
+    cfg = small_pmf_cfg(
+        tmp_path / "job",
+        checkpoint_every=2,
+        deadline_s=240.0,
+        chaos={"seed": 5, "events": [{"kind": "supervisor_kill",
+                                      "step": 3}]},
+    )
+    res = run_job_resilient(cfg)
+    assert res["supervisor_restarts"] >= 1
+    assert res["supervisor_resumed"] >= 1
+    assert res["steps"] == cfg.total_steps
+    assert res["dup_mismatches"] == 0
+    kills = [e for e in res["chaos_events"]
+             if e["kind"] == "supervisor_kill"]
+    assert len(kills) == 1
+    assert kills[0]["recovery_s"] is not None
+    assert "readopted" in kills[0]
+    # the journal-resumed run still lands on the reference bits
+    _, ref = reference_updates(steps=cfg.total_steps)
+    for w in range(P):
+        _, params = final_params(cfg, w)
+        for g, x in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(ref[w])):
+            assert np.array_equal(np.asarray(g), np.asarray(x))
